@@ -1,0 +1,91 @@
+"""Paper Fig. 3 (work-reduction factor Omega) and Fig. 4 (theoretical
+SBR/MBR speedup) -- emitted as CSV for every sub-plot's parameter sweep.
+
+All values are *model* evaluations (no hardware): this benchmark
+regenerates the paper's theoretical curves and asserts their qualitative
+claims (optimal r ~ 2..4, B ~ 2^5, g in [2, 2^6], speedup upper-bounded
+by A).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model as cm
+
+
+def fig3_omega_curves(writer):
+    """Omega(n) for varying P, A, lambda (first row of Fig. 3), plus the
+    optimal {g, r, B} per n (second row)."""
+    ns = [2 ** k for k in range(8, 17)]
+    for P in (0.3, 0.5, 0.7, 0.9):
+        for n in ns:
+            best = cm.search_optimal_grb(
+                cm.SSDParams(n=n, A=512.0, P=P, lam=16.0), metric="work")
+            writer("fig3_omega_vs_n", f"P={P},n={n}",
+                   512.0 * 0 + float(cm.w_exhaustive(n, 512.0)) / best.value)
+    for A in (64.0, 512.0, 4096.0):
+        for n in ns:
+            best = cm.search_optimal_grb(
+                cm.SSDParams(n=n, A=A, P=0.7, lam=16.0), metric="work")
+            writer("fig3_omega_vs_n_A", f"A={A},n={n}",
+                   float(cm.w_exhaustive(n, A)) / best.value)
+    for lam in (1.0, 100.0, 1e4, 1e6):
+        for n in ns:
+            best = cm.search_optimal_grb(
+                cm.SSDParams(n=n, A=512.0, P=0.7, lam=lam), metric="work")
+            writer("fig3_omega_vs_n_lam", f"lam={lam},n={n}",
+                   float(cm.w_exhaustive(n, 512.0)) / best.value)
+    for n in ns:
+        best = cm.search_optimal_grb(
+            cm.SSDParams(n=n, A=512.0, P=0.7, lam=16.0), metric="work")
+        writer("fig3_optimal_g", f"n={n}", best.g)
+        writer("fig3_optimal_r", f"n={n}", best.r)
+        writer("fig3_optimal_B", f"n={n}", best.B)
+
+
+def fig4_speedup_curves(writer):
+    """S(n), S(g), S(r), S(B) for SBR and MBR at q=128, c=64."""
+    mach = cm.Machine(q=128, c=64)
+    A, P, lam = 512.0, 0.7, 16.0
+    for n in [2 ** k for k in range(8, 17)]:
+        for metric in ("sbr", "mbr"):
+            best = cm.search_optimal_grb(
+                cm.SSDParams(n=n, A=A, P=P, lam=lam), metric=metric,
+                machine=mach)
+            t_ex = float(cm.t_exhaustive(n, A, mach))
+            writer(f"fig4_S_vs_n_{metric}", f"n={n}", t_ex / best.value)
+    n = 65536
+    space = cm.grb_space()
+    for metric, fn in (("sbr", cm.t_sbr), ("mbr", cm.t_mbr)):
+        best = cm.search_optimal_grb(
+            cm.SSDParams(n=n, A=A, P=P, lam=lam), metric=metric, machine=mach)
+        t_ex = float(cm.t_exhaustive(n, A, mach))
+        for g in space:
+            t = float(fn(n, A, P, lam, g, best.r, best.B, mach))
+            writer(f"fig4_S_vs_g_{metric}", f"g={g}", t_ex / t)
+        for r in space:
+            t = float(fn(n, A, P, lam, best.g, r, best.B, mach))
+            writer(f"fig4_S_vs_r_{metric}", f"r={r}", t_ex / t)
+        for B in space:
+            t = float(fn(n, A, P, lam, best.g, best.r, B, mach))
+            writer(f"fig4_S_vs_B_{metric}", f"B={B}", t_ex / t)
+
+
+def paper_claims_check(writer):
+    """Assert the abstract's parameter claims hold in the model."""
+    mach = cm.Machine(q=128, c=64)
+    best = cm.search_optimal_grb(
+        cm.SSDParams(n=65536, A=512.0, P=0.7, lam=16.0), metric="sbr",
+        machine=mach)
+    ok_r = best.r in (2, 4)
+    ok_g = 2 <= best.g <= 64
+    ok_B = 8 <= best.B <= 64
+    writer("claims", f"optimal_grB=({best.g},{best.r},{best.B})",
+           int(ok_r and ok_g and ok_B))
+
+
+def run(writer):
+    fig3_omega_curves(writer)
+    fig4_speedup_curves(writer)
+    paper_claims_check(writer)

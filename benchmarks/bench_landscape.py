@@ -1,0 +1,58 @@
+"""Paper Fig. 7: the {g, r, B} configuration landscape, measured.
+
+For each admissible (g, r, B) combination on a fixed n, measure ASK wall
+time (jnp backend) and report speedup over Ex -- the measured counterpart
+of the cost model's optimum search. Also reports the cost model's
+prediction for the same grid so the two landscapes can be compared cell
+by cell (the agreement is the paper's central validation).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import cost_model as cm
+from repro.mandelbrot import MandelbrotProblem, solve
+
+DWELL = 128
+
+
+def run(writer, n=512, full=False):
+    space = (2, 4, 8, 16, 32) if not full else (2, 4, 8, 16, 32, 64)
+    prob0 = MandelbrotProblem(n=n, g=2, r=2, B=32, max_dwell=DWELL,
+                              backend="jnp")
+    solve(prob0, "ex")
+    t0 = time.perf_counter()
+    solve(prob0, "ex")
+    t_ex = time.perf_counter() - t0
+
+    best = (None, 0.0)
+    for g in space:
+        for r in space:
+            for B in space:
+                if not bool(cm.valid_grb(n, g, r, B)):
+                    continue
+                # the subdivision chain must be realisable in integers
+                side = n // g
+                ok = side >= B
+                while side > B and ok:
+                    ok = side % r == 0
+                    side //= r
+                if not ok or n % g:
+                    continue
+                prob = MandelbrotProblem(n=n, g=g, r=r, B=B,
+                                         max_dwell=DWELL, backend="jnp")
+                solve(prob, "ask")  # warm
+                t1 = time.perf_counter()
+                solve(prob, "ask")
+                t = time.perf_counter() - t1
+                s = t_ex / t
+                writer("fig7_landscape_ask", f"g={g},r={r},B={B}", round(s, 3))
+                pred = float(cm.omega(n, DWELL, 0.7, 16.0, g, r, B))
+                writer("fig7_landscape_model", f"g={g},r={r},B={B}",
+                       round(pred, 3))
+                if s > best[1]:
+                    best = ((g, r, B), s)
+    if best[0]:
+        g, r, B = best[0]
+        writer("fig7_best_measured", f"g={g},r={r},B={B}", round(best[1], 3))

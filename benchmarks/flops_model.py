@@ -1,0 +1,181 @@
+"""Analytic FLOP/byte models per (arch x shape) -- the scan-corrected side
+of the roofline (DESIGN.md Sec. 7).
+
+XLA's ``cost_analysis()`` counts a ``while`` body once, so for scanned
+models its FLOPs/bytes understate per-step work by ~num_groups x. These
+closed forms count every matmul in this implementation exactly (same dims,
+same remat recompute multipliers) and are cross-checked against
+cost_analysis on a single-layer config in tests/test_roofline.py.
+
+Conventions: matmul (m, k) @ (k, n) = 2*m*k*n FLOPs; causal attention
+scores/values use the S/2 average live length; training multiplier
+accounts for the nested-remat schedule (fwd + outer recompute + inner
+recompute + 2x bwd).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.configs.shapes import ShapeCase
+
+
+def _mixer_flops_per_token(cfg: ArchConfig, spec: LayerSpec, S_ctx: float,
+                           kv_tokens: float = None) -> float:
+    """Forward FLOPs per *query token* for one mixer, with S_ctx the
+    average attended length (S/2 causal train, cache length for decode)."""
+    D, hd = cfg.d_model, cfg.head_dim_
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    f = 0.0
+    if spec.mixer in ("attn", "enc", "cross", "attn_cross"):
+        n_attn = 2 if spec.mixer == "attn_cross" else 1
+        kv_len = kv_tokens if kv_tokens is not None else S_ctx
+        for _ in range(n_attn):
+            f += 2 * D * H * hd  # q
+            f += 2 * 2 * D * Hkv * hd  # k, v
+            f += 2 * H * hd * D  # o
+            f += 2 * kv_len * H * hd * 2  # scores + values
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        f += 2 * D * H * (m.d_nope + m.d_rope)  # q
+        f += 2 * D * m.kv_lora + 2 * D * m.d_rope  # dkv, kr
+        f += 2 * m.kv_lora * H * (m.d_nope + m.d_v)  # uk, uv
+        f += 2 * (kv_tokens or S_ctx) * H * (m.d_nope + m.d_rope + m.d_v)
+        f += 2 * H * m.d_v * D  # o
+    elif spec.mixer == "mamba":
+        mb = cfg.mamba
+        di = mb.expand * D
+        dtr = max(1, D // 16)
+        f += 2 * D * 2 * di + 2 * di * mb.d_conv
+        f += 2 * di * (dtr + 2 * mb.d_state) + 2 * dtr * di
+        f += 6 * di * mb.d_state  # recurrence update + readout per step
+        f += 2 * di * D
+    elif spec.mixer == "mlstm":
+        di = cfg.lstm_expand * D
+        dh = di // cfg.num_heads
+        f += 2 * D * 2 * di + 3 * 2 * di * di + 2 * 2 * di * cfg.num_heads
+        if kv_tokens is None:  # parallel (train) form: attention-like
+            f += 2 * S_ctx * di * 2
+        else:  # recurrent decode: C update + readout
+            f += 6 * di * dh
+        f += 2 * di * di + 2 * di * D  # o-gate + down
+    elif spec.mixer == "slstm":
+        f += 4 * 2 * D * D + 2 * D * 2 * D * 2
+    return f
+
+
+def _ffn_flops_per_token(cfg: ArchConfig, spec: LayerSpec) -> float:
+    D = cfg.d_model
+    if spec.ffn == "mlp":
+        mats = 3 if cfg.act == "swiglu" else 2
+        return mats * 2 * D * cfg.d_ff
+    if spec.ffn == "moe":
+        mo = cfg.moe
+        mats = 3 if cfg.act == "swiglu" else 2
+        # routed experts run on E*C = Sg*K*cf buffer slots per group:
+        # capacity padding is real compute (cf multiplies the expert term)
+        f = mo.top_k * mo.capacity_factor * mats * 2 * D * mo.d_ff
+        f += mats * 2 * D * mo.d_ff * mo.num_shared  # shared
+        f += 2 * D * mo.num_experts  # router
+        # grouped dispatch + combine einsums: 2 x 2*E*C*D per token with
+        # C = cf * Sg * K / E  =>  4 * Sg * K * cf * D
+        f += 4 * mo.group_size * mo.top_k * mo.capacity_factor * D
+        return f
+    return 0.0
+
+
+def forward_flops(cfg: ArchConfig, case: ShapeCase) -> float:
+    """Forward-pass FLOPs for one step (global, all tokens)."""
+    B, S = case.global_batch, case.seq_len
+    if case.kind == "decode":
+        T = B  # one token per sequence
+        S_ctx = S  # attends the full cache
+        kv = S
+    else:
+        T = B * S
+        S_ctx = S / 2
+        kv = None
+    per_tok = 0.0
+    for spec in cfg.pattern:
+        kv_tok = kv if case.kind == "decode" else (
+            cfg.num_media_tokens if spec.mixer == "cross" else None)
+        per_tok += _mixer_flops_per_token(cfg, spec, S_ctx, kv_tok)
+        per_tok += _ffn_flops_per_token(cfg, spec)
+    total = per_tok * T * cfg.num_groups
+    if cfg.encoder_layers:
+        enc_T = B * S if case.kind != "decode" else 0
+        enc_per = (_mixer_flops_per_token(cfg, LayerSpec("enc", "mlp"), S / 2)
+                   + _ffn_flops_per_token(cfg, LayerSpec("enc", "mlp")))
+        total += enc_per * enc_T * cfg.encoder_layers
+    total += 2 * cfg.d_model * cfg.padded_vocab * T  # lm head
+    return total
+
+
+def hlo_flops(cfg: ArchConfig, case: ShapeCase) -> float:
+    """What the compiled step actually executes, including the nested
+    remat recompute (fwd x3 for multi-slot patterns, x2 otherwise) and the
+    2x backward."""
+    fwd = forward_flops(cfg, case)
+    if case.kind != "train":
+        return fwd
+    # "full": every block's forward runs again for its backward (x2 for
+    # single-level remat, x3 nested); "dots" saves matmul outputs so the
+    # recompute pass only re-runs the cheap elementwise ops (~0.25 fwd).
+    if cfg.remat_policy == "dots":
+        recompute = 1.25
+    else:
+        recompute = 3.0 if len(cfg.pattern) > 1 else 2.0
+    return fwd * (recompute + 2.0)
+
+
+def model_flops(cfg: ArchConfig, case: ShapeCase) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train;
+    2 N_active per token otherwise (the useful-compute yardstick)."""
+    n_active = cfg.active_param_count()
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n_active * tokens
+    if case.kind == "prefill":
+        return 2.0 * n_active * case.global_batch * case.seq_len
+    return 2.0 * n_active * case.global_batch
+
+
+def hbm_bytes(cfg: ArchConfig, case: ShapeCase, *, microbatch: int = 1,
+              dtype_bytes: int = 2) -> float:
+    """Per-step global HBM traffic estimate.
+
+    train: weights re-read per microbatch for fwd + remat + bwd (3-5
+    passes), gradient + Adam state read/write (f32), activation
+    save/restore for the remat carries.
+    decode: weights once + KV cache read + write-back of the new slot.
+    """
+    N = cfg.param_count()
+    B, S = case.global_batch, case.seq_len
+    if case.kind == "train":
+        passes = (3.0 if len(cfg.pattern) > 1 else 2.0) + 2.0
+        w = N * dtype_bytes * passes * microbatch
+        opt = N * 4 * 2 * 3 + N * 4  # m/v/master rw + grads
+        groups = cfg.num_groups + (cfg.encoder_layers or 0)
+        acts = B * S * cfg.d_model * dtype_bytes * groups * 2  # save+load
+        return w + opt + acts
+    if case.kind == "prefill":
+        return N * dtype_bytes + B * S * cfg.d_model * dtype_bytes * (
+            cfg.num_groups * 2)
+    # decode: weights + cache traffic
+    cache = 0.0
+    kv_b = 1 if cfg.kv_cache_dtype == "int8" else dtype_bytes
+    for spec in cfg.pattern:
+        if spec.mixer in ("attn", "attn_cross"):
+            cache += 2 * B * S * cfg.num_kv_heads * (
+                cfg.head_dim_ * kv_b + (4 if kv_b == 1 else 0))
+        elif spec.mixer == "mla":
+            cache += B * S * (cfg.mla.kv_lora + cfg.mla.d_rope) * dtype_bytes
+        elif spec.mixer == "mamba":
+            di = cfg.mamba.expand * cfg.d_model
+            cache += B * di * cfg.mamba.d_state * 4
+        elif spec.mixer == "mlstm":
+            di = cfg.lstm_expand * cfg.d_model
+            cache += B * (di // cfg.num_heads) * di * 4
+        elif spec.mixer == "slstm":
+            cache += B * cfg.d_model * 4 * 3
+    cache *= cfg.num_groups
+    return N * dtype_bytes + cache

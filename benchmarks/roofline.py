@@ -1,0 +1,144 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run
+artifacts (deliverable g).
+
+  compute    = FLOPs / (chips * 197e12)        [bf16 peak, TPU v5e]
+  memory     = bytes / (chips * 819e9)         [HBM bw]
+  collective = coll_bytes / (chips * 4 * 50e9) [4 ICI links/chip]
+
+FLOPs/bytes come from the scan-corrected analytic model
+(benchmarks/flops_model.py; raw cost_analysis numbers are reported
+alongside -- they undercount while-loop bodies, DESIGN.md Sec. 7).
+Collective bytes come from the loop-weighted HLO parse stored in each
+dry-run JSON. The dominant term is the bottleneck; the fraction
+MODEL_FLOPS/HLO_FLOPS is the useful-compute ratio; roofline fraction =
+compute_term / max(all terms) (1.0 == compute-bound at peak).
+
+Usage: python -m benchmarks.roofline [--dir experiments/dryrun]
+                                     [--tag baseline] [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9 * 4  # B/s / chip, 4 links
+
+
+def load_records(directory: str, tag: str = None):
+    recs = []
+    for p in sorted(Path(directory).glob("*.json")):
+        r = json.loads(p.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyse(rec: dict) -> dict:
+    import dataclasses as dc
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from benchmarks.flops_model import hbm_bytes, hlo_flops, model_flops
+
+    cfg = get_config(rec["arch"])
+    ov = rec.get("config_overrides", {})
+    reps = {k: ov[k] for k in ("q_chunk", "remat", "remat_policy",
+                               "kv_cache_dtype") if k in ov}
+    if cfg.moe and ("moe_group" in ov or "moe_cf" in ov):
+        reps["moe"] = dc.replace(
+            cfg.moe,
+            group_size=ov.get("moe_group", cfg.moe.group_size),
+            capacity_factor=ov.get("moe_cf", cfg.moe.capacity_factor))
+    if reps:
+        cfg = dc.replace(cfg, **reps)
+    case = SHAPES[rec["shape"]]
+    chips = 1
+    for s in rec["mesh"]["shape"]:
+        chips *= s
+    mb = rec.get("config_overrides", {}).get("microbatch", 1)
+
+    flops = hlo_flops(cfg, case)
+    mflops = model_flops(cfg, case)
+    bytes_ = hbm_bytes(cfg, case, microbatch=mb)
+    coll = rec["collectives"]["total_bytes"]  # already loop-weighted
+
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = bytes_ / (chips * HBM_BW)
+    t_x = coll / (chips * ICI_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # MFU-style score: time the USEFUL flops would take at peak, over the
+    # bounding resource's time. 1.0 = useful-compute-bound at peak.
+    t_useful = mflops / (chips * PEAK_FLOPS)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(s) for s in rec["mesh"]["shape"]),
+        "status": rec["status"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "roofline_fraction": (t_useful / bound) if bound > 0 else 0.0,
+        "model_flops": mflops, "hlo_flops": flops,
+        "useful_ratio": mflops / flops if flops else 0.0,
+        "raw_cost_flops": rec.get("cost", {}).get("flops", 0.0),
+        "peak_gib_per_dev": rec.get("memory", {}).get(
+            "peak_per_device_bytes", 0) / 2 ** 30,
+        "coll_bytes": coll,
+        "unresolved_loops": rec["collectives"].get("unresolved_loops", 0),
+        "microbatch": mb,
+    }
+
+
+def what_would_move_it(row: dict) -> str:
+    if row["dominant"] == "compute":
+        if row["useful_ratio"] < 0.55:
+            return "reduce remat recompute (save-dots policy / fewer levels)"
+        return "compute-bound at high useful ratio: near roofline"
+    if row["dominant"] == "memory":
+        return ("cut weight re-reads: larger microbatch / fused opt update; "
+                "decode: quantise KV or batch more requests")
+    return ("overlap/shrink collectives: async all-gather with compute, "
+            "int8 grads on pod axis, or shard differently")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--csv", default="experiments/roofline.csv")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for rec in load_records(args.dir, args.tag):
+        if rec["status"] == "ok":
+            rows.append(analyse(rec))
+        elif rec["status"] == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": "x".join(str(s) for s in rec["mesh"]["shape"]),
+                         "status": "skipped"})
+    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+           "roofline_fraction,useful_ratio,peak_gib_per_dev,microbatch,note")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,skipped,,,,,")
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r['compute_s']:.4e},{r['memory_s']:.4e},{r['collective_s']:.4e},"
+            f"{r['dominant']},{r['roofline_fraction']:.3f},"
+            f"{r['useful_ratio']:.3f},{r['peak_gib_per_dev']:.2f},"
+            f"{r['microbatch']},\"{what_would_move_it(r)}\"")
+    out = "\n".join(lines)
+    Path(args.csv).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.csv).write_text(out + "\n")
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

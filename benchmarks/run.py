@@ -1,0 +1,67 @@
+"""Benchmark harness: one suite per paper table/figure.
+
+Prints ``name,case,value`` CSV rows plus a ``suite_<x>,us_per_call,<t>``
+summary per suite. Suites:
+
+  cost_model  -> Fig. 3 (Omega) + Fig. 4 (theoretical SBR/MBR speedup)
+  mandelbrot  -> Fig. 8 (measured Ex/DP/ASK speedups) + Table 2 analogue
+  landscape   -> Fig. 7 ({g,r,B} landscape, measured vs model)
+  moe         -> beyond-paper: OLT-dispatch MoE
+  roofline    -> deliverable (g): printed from experiments/dryrun if present
+
+``python -m benchmarks.run [--suite X] [--full]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=("all", "cost_model", "mandelbrot", "landscape",
+                             "moe", "roofline"))
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    def writer(name, case, value):
+        print(f"{name},{case},{value}", flush=True)
+
+    print("name,case,value")
+    suites = []
+    if args.suite in ("all", "cost_model"):
+        from benchmarks import bench_cost_model
+        suites.append(("cost_model", lambda: bench_cost_model.run(writer)))
+    if args.suite in ("all", "mandelbrot"):
+        from benchmarks import bench_mandelbrot
+        suites.append(("mandelbrot",
+                       lambda: bench_mandelbrot.run(writer, full=args.full)))
+    if args.suite in ("all", "landscape"):
+        from benchmarks import bench_landscape
+        suites.append(("landscape",
+                       lambda: bench_landscape.run(writer, full=args.full)))
+    if args.suite in ("all", "moe"):
+        from benchmarks import bench_moe_dispatch
+        suites.append(("moe", lambda: bench_moe_dispatch.run(writer)))
+
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        fn()
+        print(f"suite_{name},us_per_call,"
+              f"{(time.perf_counter() - t0) * 1e6:.0f}", flush=True)
+
+    if args.suite in ("all", "roofline"):
+        from pathlib import Path
+        if Path("experiments/dryrun").exists() and \
+                any(Path("experiments/dryrun").glob("*.json")):
+            from benchmarks import roofline
+            roofline.main(["--csv", "experiments/roofline.csv"])
+        else:
+            print("roofline,skipped,no dry-run artifacts "
+                  "(run python -m repro.launch.dryrun --all first)")
+
+
+if __name__ == "__main__":
+    main()

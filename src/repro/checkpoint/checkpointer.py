@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, manifest-verified, elastic.
+
+Failure model at 1000+ nodes: any step can die mid-write, so a checkpoint
+becomes visible only via atomic rename of a completed temp directory, and
+a JSON manifest (leaf paths, shapes, dtypes, per-file checksums) guards
+against torn/corrupt restores -- ``latest_step`` only reports checkpoints
+whose manifest verifies. Restores therefore always land on the newest
+*consistent* state, which together with the pure (seed, step) data
+pipeline gives exact restart semantics.
+
+Elastic restarts: arrays are stored UNSHARDED (gathered leaves, npz per
+leaf group), so a checkpoint written on a 2x16x16 mesh restores onto
+16x16 -- or onto next year's mesh -- by re-sharding at load
+(``restore(..., shardings=...)`` places each leaf with
+jax.device_put against the new mesh). At real scale you'd swap the
+serialisation layer for per-shard OCDBT writes; the interface
+(save/restore/latest_step/gc) is what the trainer depends on.
+
+Retention: ``keep`` newest checkpoints are retained, older ones GC'd.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> Path:
+        tmp = self.dir / f".tmp-{step}-{os.getpid()}-{time.time_ns()}"
+        tmp.mkdir(parents=True)
+        flat = _flatten(tree)
+        manifest = {"step": int(step), "extra": extra or {}, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = hashlib.sha1(key.encode()).hexdigest()[:16] + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha1": _file_sha1(tmp / fname),
+            }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = self.dir / f"step_{step:010d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic visibility
+        self._gc()
+        return final
+
+    # -- read ----------------------------------------------------------------
+
+    def _verify(self, path: Path) -> Optional[dict]:
+        mf = path / "manifest.json"
+        if not mf.exists():
+            return None
+        try:
+            manifest = json.loads(mf.read_text())
+            for key, meta in manifest["leaves"].items():
+                f = path / meta["file"]
+                if not f.exists() or _file_sha1(f) != meta["sha1"]:
+                    return None
+            return manifest
+        except (json.JSONDecodeError, KeyError, OSError):
+            return None
+
+    def steps(self) -> list:
+        out = []
+        for p in sorted(self.dir.glob("step_*")):
+            if self._verify(p) is not None:
+                out.append(int(p.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like`` (arrays or SDS). With
+        ``shardings`` (same pytree structure), each leaf is placed onto the
+        *current* mesh -- this is the elastic-restart path: the stored
+        arrays are unsharded, the new mesh may differ from the writer's."""
+        path = self.dir / f"step_{step:010d}"
+        manifest = self._verify(path)
+        if manifest is None:
+            raise FileNotFoundError(f"no verifiable checkpoint at {path}")
+        flat_like = _flatten(like)
+        flat_sh = _flatten(shardings) if shardings is not None else {}
+        leaves = {}
+        for key, spec in flat_like.items():
+            meta = manifest["leaves"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(path / meta["file"])
+            if tuple(arr.shape) != tuple(spec.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != {spec.shape}")
+            arr = arr.astype(spec.dtype)
+            if key in flat_sh:
+                leaves[key] = jax.device_put(arr, flat_sh[key])
+            else:
+                leaves[key] = jax.numpy.asarray(arr)
+        # rebuild the tree in `like`'s structure (flatten orders agree)
+        treedef = jax.tree_util.tree_flatten(like)[1]
+        keys = list(_flatten(like).keys())
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaves[k] for k in keys])
+
+    def manifest_extra(self, step: int) -> dict:
+        path = self.dir / f"step_{step:010d}"
+        manifest = self._verify(path)
+        if manifest is None:
+            raise FileNotFoundError(path)
+        return manifest.get("extra", {})
+
+    # -- retention -----------------------------------------------------------
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+
+def _file_sha1(path: Path) -> str:
+    h = hashlib.sha1()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()

@@ -1,0 +1,5 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from repro.configs.base import ArchConfig, LayerSpec, MLASpec, MoESpec, registry, get_config
+
+__all__ = ["ArchConfig", "LayerSpec", "MLASpec", "MoESpec", "registry", "get_config"]

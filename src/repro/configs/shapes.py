@@ -1,0 +1,94 @@
+"""Assigned input-shape suite and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shapes per architecture (40 cells). ``decode_*``/``long_*`` lower
+``serve_step`` (one token against a seq_len KV cache); ``long_500k`` only
+applies to sub-quadratic archs (jamba, xlstm) -- skips are recorded, not
+silently dropped (``applicable`` returns the reason).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, case: ShapeCase) -> Optional[str]:
+    """None if the cell runs; otherwise the (recorded) skip reason."""
+    if case.name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 500k-context requires "
+                "sub-quadratic attention (DESIGN.md Sec. 6)")
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, case: ShapeCase, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the *data* operands of the step function.
+
+    train   -> {"tokens","labels"} (+ "media"/frames for vlm/audio)
+    prefill -> {"tokens"} (+ media)
+    decode  -> {"tokens" [B,1], "pos" scalar} (+ media/memory); the cache
+               specs come from ``cache_specs``.
+    """
+    B, S = case.global_batch, case.seq_len
+    out = {}
+    if case.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+        if cfg.frontend == "vision":
+            out["media"] = _sds((B, cfg.num_media_tokens, cfg.d_model), dtype)
+        elif cfg.frontend == "audio":
+            out["media"] = _sds((B, S, cfg.d_model), dtype)
+    elif case.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.frontend == "vision":
+            out["media"] = _sds((B, cfg.num_media_tokens, cfg.d_model), dtype)
+        elif cfg.frontend == "audio":
+            out["media"] = _sds((B, S, cfg.d_model), dtype)
+    else:  # decode
+        out["tokens"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+        if cfg.frontend == "vision":
+            out["media"] = _sds((B, cfg.num_media_tokens, cfg.d_model), dtype)
+        elif cfg.frontend == "audio":
+            # cross-attention memory == encoder output over seq_len frames
+            out["memory"] = _sds((B, S, cfg.d_model), dtype)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, case: ShapeCase):
+    """Decode-cache ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models.transformer import init_cache
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, case.global_batch, case.seq_len))
+
+
+def param_specs(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models.transformer import init_params
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_params, cfg), key)

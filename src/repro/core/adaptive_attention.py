@@ -1,0 +1,163 @@
+"""ASK-refined block-sparse decode attention (DESIGN.md Sec. 4, item 2).
+
+The (query x keys) score landscape of a long-context decode step is an
+SSD-style heterogeneous workload: almost all softmax mass lives in a few
+key regions. The paper's subdivision machinery maps directly:
+
+  g  -- initial partition of the KV sequence into coarse blocks
+  r  -- refinement factor per level
+  B  -- leaf block size (keys per finest block)
+
+Per level, each *active* block's children get a score **upper bound** from
+per-block elementwise key envelopes (kmin/kmax -- the "perimeter query"
+analogue: sum_d max(q_d*kmin_d, q_d*kmax_d) >= q.k for every key in the
+block); children whose bound falls more than ``margin`` below the best
+bound are terminated (their softmax contribution is < e^-margin of the
+max term), the rest subdivide -- exactly the ASK level loop, fused-static
+because tau = log_r(S/(gB)) is known at trace time.
+
+At the leaf level the surviving blocks enter a fixed-capacity top-C
+selection (the ASK bucket/OLT-capacity analogue) and exact attention runs
+on the gathered C*B keys only: compute drops from O(S) to O(C*B) per
+query with an error bounded by the discarded bound mass.
+
+Shapes: q [Bt, H, dh]; k/v [Bt, S, H, dh]. Pure JAX; the envelope pyramid
+is built once per cache (prefill) and is ~2/B of the cache in size.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["build_envelope_pyramid", "adaptive_decode_attention",
+           "exact_decode_attention"]
+
+
+def _num_levels(S: int, g: int, r: int, B: int) -> int:
+    lv = 0
+    blk = S // g
+    while blk > B:
+        lv += 1
+        blk //= r
+    return lv
+
+
+def build_envelope_pyramid(k: jax.Array, *, g: int, r: int, B: int
+                           ) -> List[Tuple[jax.Array, jax.Array]]:
+    """Per-level (kmin, kmax) envelopes, coarse -> leaf.
+
+    k: [Bt, S, H, dh]. Level i has g * r**i blocks:
+    kmin/kmax [Bt, nblocks, H, dh]. Built leaf-up so the whole pyramid is
+    one pass over the cache.
+    """
+    Bt, S, H, dh = k.shape
+    levels = _num_levels(S, g, r, B)
+    n_leaf = g * r ** levels
+    leaf = k.reshape(Bt, n_leaf, S // n_leaf, H, dh)
+    kmin = jnp.min(leaf, axis=2)
+    kmax = jnp.max(leaf, axis=2)
+    pyr = [(kmin, kmax)]
+    for _ in range(levels):
+        n = kmin.shape[1] // r
+        kmin = jnp.min(kmin.reshape(Bt, n, r, H, dh), axis=2)
+        kmax = jnp.max(kmax.reshape(Bt, n, r, H, dh), axis=2)
+        pyr.append((kmin, kmax))
+    return pyr[::-1]  # coarse -> leaf
+
+
+def _bounds(q, kmin, kmax, live_len_mask):
+    """Upper bound on q.k over each block: [Bt, H, nblocks]."""
+    qe = q[:, None]  # [Bt, 1, H, dh]
+    ub = jnp.sum(jnp.maximum(qe * kmin, qe * kmax), axis=-1)  # [Bt,nb,H]
+    ub = jnp.where(live_len_mask[None, :, None], ub, -jnp.inf)
+    return ub.transpose(0, 2, 1)  # [Bt, H, nb]
+
+
+def adaptive_decode_attention(q, k, v, *, g: int = 16, r: int = 2,
+                              B: int = 64, margin: float = 10.0,
+                              capacity: int | None = None,
+                              live_len: int | None = None):
+    """Approximate single-token attention over [Bt, S, H, dh] KV.
+
+    Returns (out [Bt, H, dh], stats {"kept_blocks", "leaf_blocks",
+    "kept_fraction"}). ``capacity`` = max leaf blocks attended (top-C by
+    bound; default half). ``live_len`` masks a partially-filled cache.
+    """
+    Bt, S, H, dh = k.shape
+    levels = _num_levels(S, g, r, B)
+    n_leaf = g * r ** levels
+    blk = S // n_leaf
+    capacity = capacity or max(1, n_leaf // 2)
+    capacity = min(capacity, n_leaf)
+    live = S if live_len is None else live_len
+
+    pyr = build_envelope_pyramid(k, g=g, r=r, B=B)
+    scale = 1.0 / math.sqrt(dh)
+
+    # --- ASK level loop (fused-static): prune by bound margin -------------
+    nb = g
+    block_len = S // g
+    starts = jnp.arange(nb)
+    mask_len = (starts * block_len) < live
+    ub = _bounds(q, *pyr[0], mask_len)  # [Bt, H, g]
+    active = jnp.ones_like(ub, dtype=bool)
+    kept_trace = []
+    for lv in range(levels):
+        best = jnp.max(jnp.where(active, ub, -jnp.inf), axis=-1,
+                       keepdims=True)
+        active = jnp.logical_and(active, ub >= best - margin)
+        kept_trace.append(jnp.sum(active.astype(jnp.int32)))
+        # subdivide: children inherit the parent's active flag
+        nb = nb * r
+        block_len //= r
+        active = jnp.repeat(active, r, axis=-1)
+        starts = jnp.arange(nb)
+        mask_len = (starts * block_len) < live
+        ub = _bounds(q, *pyr[lv + 1], mask_len)
+        ub = jnp.where(active, ub, -jnp.inf)
+    best = jnp.max(ub, axis=-1, keepdims=True)
+    active = jnp.logical_and(active, ub >= best - margin)
+
+    # --- leaf: OLT-style fixed-capacity selection (top-C by bound) --------
+    sel_ub = jnp.where(active, ub, -jnp.inf)
+    _, idx = jax.lax.top_k(sel_ub, capacity)  # [Bt, H, C]
+
+    # gather the selected key/value blocks: [Bt, H, C*blk, dh]
+    kb = k.reshape(Bt, n_leaf, blk, H, dh).transpose(0, 3, 1, 2, 4)
+    vb = v.reshape(Bt, n_leaf, blk, H, dh).transpose(0, 3, 1, 2, 4)
+    gk = jnp.take_along_axis(kb, idx[..., None, None], axis=2)
+    gv = jnp.take_along_axis(vb, idx[..., None, None], axis=2)
+    gk = gk.reshape(Bt, H, capacity * blk, dh)
+    gv = gv.reshape(Bt, H, capacity * blk, dh)
+
+    # positions of gathered keys, for the live-length mask
+    pos = (idx[..., None] * blk + jnp.arange(blk)[None, None, None]
+           ).reshape(Bt, H, capacity * blk)
+    ok = pos < live
+
+    s = jnp.einsum("bhd,bhkd->bhk", q, gk) * scale
+    s = jnp.where(ok, s, -jnp.inf)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhk,bhkd->bhd", w, gv)
+    stats = {
+        "leaf_blocks": n_leaf,
+        "kept_blocks": jnp.minimum(
+            jnp.sum(active.astype(jnp.int32), axis=-1), capacity),
+        "kept_fraction": jnp.minimum(
+            jnp.sum(active.astype(jnp.int32), axis=-1), capacity) / n_leaf,
+    }
+    return out, stats
+
+
+def exact_decode_attention(q, k, v, *, live_len: int | None = None):
+    """Oracle: full attention. q [Bt,H,dh]; k/v [Bt,S,H,dh]."""
+    Bt, S, H, dh = k.shape
+    live = S if live_len is None else live_len
+    s = jnp.einsum("bhd,bshd->bhs", q, k) / math.sqrt(dh)
+    s = jnp.where(jnp.arange(S)[None, None] < live, s, -jnp.inf)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bshd->bhd", w, v)

@@ -1,0 +1,189 @@
+"""Adaptive Serial Kernels (ASK) -- paper Sec. 5, adapted to TPU/XLA.
+
+ASK replaces Dynamic Parallelism's recursive kernel tree with a *serial*
+sequence of flat kernels, one per subdivision level, the active-region set
+carried between launches in a compact OLT (see ``core/olt.py``).
+
+Two execution modes (DESIGN.md Sec. 2):
+
+``run_ask``        -- the paper-faithful mode: one host-driven kernel launch
+                      per level. XLA needs static shapes, so the live region
+                      count is padded to the next power of two ("bucketing");
+                      at most O(log n) distinct shapes are ever compiled and
+                      the jit cache amortises them across levels and frames.
+
+``run_ask_fused``  -- beyond-paper: because ASK is *iterative*, the entire
+                      level pipeline can be unrolled into ONE jitted XLA
+                      program (static per-level capacities, masked tails),
+                      removing even the per-level launch+sync overhead.
+                      DP's data-dependent recursion tree cannot be compiled
+                      this way -- this is the structural advantage the
+                      paper's cost model prices as a smaller lambda.
+
+A problem plugs in via the ``ASKProblem`` protocol; the Mandelbrot /
+Mariani-Silver instantiation lives in ``repro/mandelbrot``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import olt as olt_lib
+
+__all__ = ["ASKProblem", "ASKStats", "run_ask", "run_ask_fused"]
+
+
+class ASKProblem(Protocol):
+    """Adapter for an SSD workload driven by subdivision.
+
+    Regions at level ``l`` live on a ``(g * r**l)``-per-side grid and are
+    identified by int32 coords (cy, cx) -- see ``core/olt.py``.
+    """
+
+    n: int
+    g: int
+    r: int
+    B: int
+
+    def init_state(self) -> Any:
+        """Initial output state (e.g. the n x n canvas)."""
+
+    def root_coords(self) -> jax.Array:
+        """[g*g, 2] level-0 region coordinates."""
+
+    def level_step(self, state: Any, coords: jax.Array, valid: jax.Array,
+                   level: int) -> Tuple[Any, jax.Array]:
+        """Exploration kernel for one level: performs the query Q on each
+        valid region, applies terminal work T to homogeneous ones, and
+        returns (new_state, subdivide_flags[bool])."""
+
+    def leaf_step(self, state: Any, coords: jax.Array, valid: jax.Array,
+                  level: int) -> Any:
+        """Last-level application work A on each remaining region."""
+
+    def region_side(self, level: int) -> int:
+        """Pixel side of a level-``level`` region: n // (g * r**level)."""
+
+
+@dataclasses.dataclass
+class ASKStats:
+    """Per-run accounting (feeds the cost-model validation benchmarks)."""
+
+    levels: int = 0
+    kernel_launches: int = 0  # host->device dispatches (ASK: one per level)
+    region_counts: tuple = ()  # live regions entering each level
+    leaf_count: int = 0
+    wall_s: float = 0.0
+    overflow_dropped: int = 0  # fused mode only
+
+
+def _num_levels(n: int, g: int, r: int, B: int) -> int:
+    """Number of exploration levels: subdivide while region side > B."""
+    lv = 0
+    side = n // g
+    while side > B:
+        lv += 1
+        side //= r
+    return lv
+
+
+def run_ask(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any, ASKStats]:
+    """Paper-faithful ASK: serial kernels, bucketed dynamic grids."""
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    t0 = time.perf_counter()
+    state = problem.init_state()
+    coords = problem.root_coords()
+    count = g * g
+    stats = ASKStats()
+    counts = []
+
+    levels = _num_levels(n, g, r, B)
+    level_fn = jax.jit(problem.level_step, static_argnames=("level",))
+    leaf_fn = jax.jit(problem.leaf_step, static_argnames=("level",))
+
+    for level in range(levels):
+        if count == 0:
+            break
+        cap = olt_lib.next_pow2(count)
+        coords_p, valid = olt_lib.pad_olt(coords, count, cap)
+        counts.append(count)
+        state, flags = level_fn(state, coords_p, valid, level=level)
+        stats.kernel_launches += 1
+        # write-OLT: every flagged region inserts r*r children (Sec. 5.3.2)
+        child_cap = olt_lib.next_pow2(cap * r * r)
+        coords, child_count = olt_lib.subdivide_olt(
+            coords_p, jnp.logical_and(flags, valid), r=r, capacity=child_cap)
+        count = int(child_count)  # host sync == the serial-kernel boundary
+        stats.levels += 1
+
+    if count > 0:
+        cap = olt_lib.next_pow2(count)
+        coords_p, valid = olt_lib.pad_olt(coords, count, cap)
+        state = leaf_fn(state, coords_p, valid, level=stats.levels)
+        stats.kernel_launches += 1
+        stats.leaf_count = count
+
+    if block_until_ready:
+        state = jax.block_until_ready(state)
+    stats.region_counts = tuple(counts)
+    stats.wall_s = time.perf_counter() - t0
+    return state, stats
+
+
+def run_ask_fused(
+    problem: ASKProblem,
+    *,
+    capacity_factor: float = 1.0,
+    block_until_ready: bool = True,
+) -> Tuple[Any, ASKStats]:
+    """Beyond-paper fused ASK: one XLA program for the whole pipeline.
+
+    Per-level OLT capacities are static worst cases scaled by
+    ``capacity_factor`` (<= 1.0 keeps the exhaustive bound; the worst case
+    at level l is the full region grid (g*r**l)^2). Regions beyond capacity
+    are dropped and counted -- with the default factor nothing can drop.
+    """
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    levels = _num_levels(n, g, r, B)
+    caps = []
+    for lv in range(levels + 1):
+        worst = (g * r ** lv) ** 2
+        caps.append(max(1, olt_lib.next_pow2(int(worst * capacity_factor))))
+
+    def pipeline(state):
+        coords = problem.root_coords()
+        count = jnp.int32(g * g)
+        dropped = jnp.int32(0)
+        for level in range(levels):
+            cap = caps[level]
+            coords_p, _ = olt_lib.pad_olt(coords, 0, cap)  # shape only
+            coords_p = coords_p.at[: min(coords.shape[0], cap)].set(coords[:cap])
+            valid = jnp.arange(cap) < count
+            state, flags = problem.level_step(state, coords_p, valid, level=level)
+            flags = jnp.logical_and(flags, valid)
+            child_cap = caps[level + 1]
+            coords, child_count = olt_lib.subdivide_olt(
+                coords_p, flags, r=r, capacity=child_cap)
+            dropped = dropped + jnp.maximum(child_count - child_cap, 0)
+            count = jnp.minimum(child_count, child_cap)
+        valid = jnp.arange(caps[levels]) < count
+        state = problem.leaf_step(state, coords, valid, level=levels)
+        return state, count, dropped
+
+    t0 = time.perf_counter()
+    state, leaf_count, dropped = jax.jit(pipeline)(problem.init_state())
+    if block_until_ready:
+        state = jax.block_until_ready(state)
+    stats = ASKStats(
+        levels=levels,
+        kernel_launches=1,  # the whole pipeline is one dispatch
+        leaf_count=int(leaf_count),
+        overflow_dropped=int(dropped),
+        wall_s=time.perf_counter() - t0,
+    )
+    return state, stats

@@ -1,0 +1,69 @@
+"""Dynamic-Parallelism-style recursive baseline (paper Sec. 3).
+
+TPUs/XLA have no device-side kernel launch, so CUDA DP cannot exist here
+(DESIGN.md Sec. 2). What the cost model needs from "DP" is its *cost
+structure*: one kernel dispatch per node of the subdivision tree, recursion
+driven from outside the kernels, and a per-launch overhead lambda.
+
+This module reproduces exactly that: a host-driven depth-first recursion
+where every tree node performs its own jitted dispatch (query+terminal in
+one launch; children recursed). Launch counts are recorded so benchmarks
+can compare against ASK's one-launch-per-level and validate the paper's
+claim that ASK's smaller lambda wins.
+
+The same ``ASKProblem`` adapter is reused: ``level_step`` on a 1-region OLT
+is precisely a DP child kernel.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ask import ASKProblem, ASKStats, _num_levels
+
+__all__ = ["run_dp"]
+
+
+def run_dp(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any, ASKStats]:
+    """Recursive subdivision with one dispatch per tree node."""
+    g, r = problem.g, problem.r
+    levels = _num_levels(problem.n, g, r, problem.B)
+    stats = ASKStats(levels=levels)
+
+    level_fn = jax.jit(problem.level_step, static_argnames=("level",))
+    leaf_fn = jax.jit(problem.leaf_step, static_argnames=("level",))
+    one_valid = jnp.ones((1,), dtype=bool)
+
+    t0 = time.perf_counter()
+    state = problem.init_state()
+
+    def recurse(state, cy: int, cx: int, level: int):
+        coords = jnp.array([[cy, cx]], dtype=jnp.int32)
+        if level == levels:
+            # last level: application work A over the region (leaf kernel)
+            stats.kernel_launches += 1
+            stats.leaf_count += 1
+            return leaf_fn(state, coords, one_valid, level=level)
+        # exploration child-kernel: query + terminal work for this region
+        stats.kernel_launches += 1
+        state, flags = level_fn(state, coords, one_valid, level=level)
+        if bool(flags[0]):  # device->host sync per node, as in CUDA DP's
+            for dy in range(r):  # parent observing its children
+                for dx in range(r):
+                    state = recurse(state, cy * r + dy, cx * r + dx, level + 1)
+        return state
+
+    counts = [0] * levels
+    for cy in range(g):
+        for cx in range(g):
+            state = recurse(state, cy, cx, 0)
+    stats.region_counts = tuple(counts)
+
+    if block_until_ready:
+        state = jax.block_until_ready(state)
+    stats.wall_s = time.perf_counter() - t0
+    return state, stats

@@ -1,0 +1,126 @@
+"""Synthetic k-dimensional SSD fields + the k-D ASK solver (paper Sec. 7).
+
+``generate_field`` draws a field from *exactly* the stochastic process the
+cost model assumes (Sec. 4.2): starting from a g^k grid, every region
+independently subdivides with probability P into r^k children or freezes
+to a constant; heterogeneous leaves at size B get per-cell values. This
+gives (i) a ground-truth SSD workload in any dimension, and (ii) the only
+setting where Eq. (11)'s region-count prediction E|G_i| = G (R P)^i can be
+checked *quantitatively* (the Mandelbrot set has no known closed-form P).
+
+``solve_ask_3d`` reconstructs the field with the paper's Sec. 7 machinery:
+serial per-level kernels whose OLT holds **scalar Morton codes**
+(core.olt.subdivide_olt_scalar; one u32 per region instead of a k-vector)
+and face-based homogeneity queries (the 3-D Mariani-Silver analogue: a
+frozen region is constant, so uniform faces + uniform sample == uniform
+region by construction of the generator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import olt as olt_lib
+
+
+@dataclasses.dataclass
+class SSDField:
+    field: np.ndarray  # [n]^k int32
+    level_counts: List[int]  # active regions entering each level
+    n: int
+    g: int
+    r: int
+    B: int
+    P: float
+    k: int
+
+
+def generate_field(seed: int, *, n: int, g: int = 2, r: int = 2, B: int = 4,
+                   P: float = 0.6, k: int = 3) -> SSDField:
+    rng = np.random.default_rng(seed)
+    field = np.zeros((n,) * k, dtype=np.int32)
+    # regions as (origin tuple, side); values distinct per frozen region
+    regions = [(tuple(int(x) * (n // g) for x in idx), n // g)
+               for idx in np.ndindex(*(g,) * k)]
+    counts = []
+    next_val = 1
+    level = 0
+    while regions:
+        counts.append(len(regions))
+        side = regions[0][1]
+        nxt = []
+        for origin, s in regions:
+            if s > B and rng.random() < P:
+                c = s // r
+                for off in np.ndindex(*(r,) * k):
+                    nxt.append((tuple(o + int(d) * c
+                                      for o, d in zip(origin, off)), c))
+            else:
+                sl = tuple(slice(o, o + s) for o in origin)
+                if s > B:
+                    field[sl] = next_val  # frozen constant region
+                    next_val += 1
+                else:
+                    # heterogeneous leaf: per-cell values
+                    field[sl] = rng.integers(
+                        1 << 16, 1 << 20, size=(s,) * k)
+        regions = nxt
+        level += 1
+    return SSDField(field, counts, n, g, r, B, P, k)
+
+
+def _morton_roots(g: int) -> np.ndarray:
+    """Morton codes of the g^k level-0 regions (g power of two, k=3)."""
+    import jax.numpy as jnp
+    coords = np.array(list(np.ndindex(g, g, g)), dtype=np.int32)
+    from repro.core.olt import morton_encode3d
+    return np.asarray(morton_encode3d(jnp.asarray(coords)))
+
+
+def solve_ask_3d(fld: SSDField) -> Tuple[np.ndarray, List[int]]:
+    """Reconstruct ``fld.field`` via level-serial ASK with a scalar-Morton
+    OLT. Returns (canvas, per-level live-region counts)."""
+    import jax.numpy as jnp
+    from repro.core.olt import morton_decode3d
+
+    assert fld.k == 3, "demo solver is 3-D (the OLT machinery is k-D)"
+    n, g, r, B = fld.n, fld.g, fld.r, fld.B
+    canvas = np.full_like(fld.field, -1)
+    codes = _morton_roots(g)
+    count = codes.shape[0]
+    side = n // g
+    counts = []
+    while count > 0:
+        counts.append(count)
+        coords = np.asarray(morton_decode3d(jnp.asarray(codes[:count])))
+        flags = np.zeros((count,), dtype=bool)
+        for i in range(count):
+            o = tuple(int(c) * side for c in coords[i])
+            sl = tuple(slice(x, x + side) for x in o)
+            reg = fld.field[sl]
+            # face query: the 6 faces + one interior sample (Sec. 7 Q)
+            faces = [reg[0], reg[-1], reg[:, 0], reg[:, -1],
+                     reg[:, :, 0], reg[:, :, -1]]
+            v0 = int(reg[0, 0, 0])
+            uniform = all((f == v0).all() for f in faces)
+            if uniform and side <= B:
+                canvas[sl] = v0  # tiny uniform leaf: terminal fill
+            elif uniform:
+                canvas[sl] = v0  # terminal work T
+            elif side <= B:
+                canvas[sl] = reg  # leaf application work A
+            else:
+                flags[i] = True  # subdivide
+        if side <= B:
+            break
+        cap = olt_lib.next_pow2(max(int(flags.sum()), 1) * r ** 3)
+        codes_j, cnt = olt_lib.subdivide_olt_scalar(
+            jnp.asarray(codes[:count], jnp.uint32), jnp.asarray(flags),
+            k=3, capacity=cap)
+        codes = np.asarray(codes_j)
+        count = int(cnt)
+        side //= r
+    return canvas, counts

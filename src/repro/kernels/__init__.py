@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel module pairs with the pure-jnp oracle in ref.py and the jitted
+public wrappers in ops.py; tests/test_kernels.py sweeps shapes and asserts
+interpret-mode equality with the oracles.
+
+  mandelbrot_dwell   flat exhaustive dwell (the Ex baseline)
+  perimeter_query    Mariani-Silver border query Q (OLT scalar prefetch)
+  region_fill        terminal work T (OLT-driven BlockSpec index_map)
+  region_dwell       last-level application work A (SBR/MBR grids)
+  olt_compact        prefix-sum compaction (the atomicAdd replacement)
+  moe_dispatch       batched per-expert OLT ranks (MoE position_in_expert)
+"""

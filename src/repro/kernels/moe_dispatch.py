@@ -1,0 +1,50 @@
+"""Batched OLT-rank kernel: the MoE position_in_expert compaction.
+
+The MoE router needs, for every (token, expert) flag matrix [N, E], each
+flagged entry's exclusive rank *within its expert column* plus per-expert
+totals -- E independent OLT compactions (paper Sec. 5.3.1) in one pass.
+This is ``core.olt.batched_compact_ranks`` as a single-VMEM-block Pallas
+kernel: one [N, E] int32 tile, a column-wise cumulative sum on the VPU,
+no HBM round-trips between the scan and the subtraction.
+
+TPU notes: N*E int32 must fit one VMEM block (ops.py falls back to the
+XLA cumsum above 64k rows); E is lane-aligned when a multiple of 128 --
+for the assigned archs (E = 16/64) the block is padded, which is fine at
+this size. Oracle: ref.batched_ranks semantics == jnp.cumsum(axis 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(flags_ref, ranks_ref, counts_ref):
+    f = flags_ref[...].astype(jnp.int32)  # [N, E]
+    inc = jnp.cumsum(f, axis=0)
+    ranks_ref[...] = (inc - f).astype(jnp.int32)
+    counts_ref[...] = inc[-1:, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_ranks_kernel(flags: jax.Array, *, interpret: bool = True):
+    """flags: [N, E] int32/bool. Returns (ranks [N, E], counts [1, E])."""
+    N, E = flags.shape
+    ranks, counts = pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((N, E), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((N, E), lambda i: (0, 0)),
+            pl.BlockSpec((1, E), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, E), jnp.int32),
+            jax.ShapeDtypeStruct((1, E), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flags.astype(jnp.int32))
+    return ranks, counts

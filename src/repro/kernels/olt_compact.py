@@ -1,0 +1,49 @@
+"""OLT compaction kernel: the TPU replacement for the paper's atomicAdd.
+
+Paper Sec. 5.3.1 compacts concurrent write-OLT insertions with an atomic
+counter; Sec. 5.3.1 itself names the prefix-sum alternative, which is the
+only (and better: deterministic) option on TPU. This kernel fuses
+flag -> exclusive-scan -> total in one VMEM pass.
+
+Single-block kernel: flags up to ``capacity`` live in one VMEM block
+(int32[64k] = 256 KiB -- far under VMEM). For larger OLTs ``ops.py`` falls
+back to the XLA cumsum (which XLA itself tiles); the subdivision workloads
+this repo targets keep OLTs well under this bound (paper Sec. 7.2 sizes the
+OLT as |G_i| * r^k << n^k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(flags_ref, ranks_ref, count_ref):
+    f = flags_ref[...].astype(jnp.int32)
+    inc = jnp.cumsum(f)
+    ranks_ref[...] = (inc - f).astype(jnp.int32)
+    count_ref[0] = inc[-1].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def compact_ranks_kernel(flags: jax.Array, *, interpret: bool = True):
+    """flags: [N] bool/int32. Returns (ranks [N] int32, count [1] int32)."""
+    N = flags.shape[0]
+    ranks, count = pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((N,), lambda i: (0,))],
+        out_specs=[
+            pl.BlockSpec((N,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flags.astype(jnp.int32))
+    return ranks, count

@@ -1,0 +1,115 @@
+"""Public jitted wrappers over the Pallas kernels with jnp fallback.
+
+``backend`` selection:
+  "pallas" -- pl.pallas_call; compiled on TPU, interpret=True elsewhere
+              (interpret executes the kernel body on CPU for validation).
+  "jnp"    -- the pure-jnp oracles from ref.py (also the CPU fast path:
+              interpret mode is an interpreter, so production CPU tests and
+              benchmarks default to jnp while every kernel is still
+              validated against its oracle in tests/test_kernels.py).
+
+All entry points take/return plain arrays so both ASK and the DP baseline
+drive the exact same compute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.mandelbrot_dwell import mandelbrot_dwell as _mandelbrot_pallas
+from repro.kernels.olt_compact import compact_ranks_kernel
+from repro.kernels.perimeter_query import perimeter_query as _perimeter_pallas
+from repro.kernels.region_dwell import region_dwell as _region_dwell_pallas
+from repro.kernels.region_fill import region_fill as _region_fill_pallas
+
+_OLT_KERNEL_CAP = 1 << 16  # single-VMEM-block bound (see olt_compact.py)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def mandelbrot(n, *, bounds=ref.DEFAULT_BOUNDS, max_dwell=512,
+               block=(256, 256), backend="pallas"):
+    """Exhaustive n x n dwell image (the paper's Ex baseline)."""
+    if backend == "jnp":
+        return ref.mandelbrot_ref(n, bounds, max_dwell)
+    blk = (min(block[0], n), min(block[1], n))
+    return _mandelbrot_pallas(n, bounds, max_dwell, blk, _interpret())
+
+
+def perimeter_query(coords, *, side, n, bounds=ref.DEFAULT_BOUNDS,
+                    max_dwell=512, backend="pallas"):
+    """Border query Q: (homog [N] bool, common [N] int32)."""
+    if backend == "jnp":
+        return ref.perimeter_query_ref(
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+    return _perimeter_pallas(
+        coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
+        interpret=_interpret())
+
+
+def region_fill(canvas, coords, values, nonempty, *, side, n,
+                scheme="sbr", tile=256, backend="pallas"):
+    """Terminal work T: constant-fill the (duplicate-padded) fill-OLT."""
+    if backend == "jnp":
+        N = coords.shape[0]
+        iy = jnp.arange(side)
+        ys = coords[:, 0:1, None] * side + iy[None, :, None]
+        xs = coords[:, 1:2, None] * side + iy[None, None, :]
+        ys = jnp.broadcast_to(ys, (N, side, side))
+        xs = jnp.broadcast_to(xs, (N, side, side))
+        # empty OLT => push indices out of range; scatter drops them
+        ys = jnp.where(nonempty.reshape(()) > 0, ys, n)
+        vals = jnp.broadcast_to(values[:, None, None], (N, side, side))
+        return canvas.at[ys.ravel(), xs.ravel()].set(vals.ravel(), mode="drop")
+    return _region_fill_pallas(
+        canvas, coords, values, nonempty, side=side, n=n, scheme=scheme,
+        tile=tile, interpret=_interpret())
+
+
+def region_dwell(canvas, coords, nonempty, *, side, n,
+                 bounds=ref.DEFAULT_BOUNDS, max_dwell=512, scheme="sbr",
+                 tile=256, backend="pallas"):
+    """Last-level work A: interior dwell of the (duplicate-padded) leaf-OLT."""
+    if backend == "jnp":
+        N = coords.shape[0]
+        tiles = ref.region_interior_ref(
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+        iy = jnp.arange(side)
+        ys = coords[:, 0:1, None] * side + iy[None, :, None]
+        xs = coords[:, 1:2, None] * side + iy[None, None, :]
+        ys = jnp.broadcast_to(ys, (N, side, side))
+        xs = jnp.broadcast_to(xs, (N, side, side))
+        ys = jnp.where(nonempty.reshape(()) > 0, ys, n)
+        return canvas.at[ys.ravel(), xs.ravel()].set(tiles.ravel(), mode="drop")
+    return _region_dwell_pallas(
+        canvas, coords, nonempty, side=side, n=n, bounds=bounds,
+        max_dwell=max_dwell, scheme=scheme, tile=tile, interpret=_interpret())
+
+
+def compact_ranks(flags, *, backend="pallas"):
+    """Exclusive-scan OLT compaction (atomicAdd replacement).
+    Returns (ranks [N] int32, count scalar int32)."""
+    if backend == "jnp" or flags.shape[0] > _OLT_KERNEL_CAP:
+        ranks, count = ref.compact_ranks_ref(flags)
+        return ranks, count
+    ranks, count = compact_ranks_kernel(flags, interpret=_interpret())
+    return ranks, count[0]
+
+
+def batched_ranks(flags, *, backend="pallas"):
+    """Per-column OLT ranks [N, E] (MoE position_in_expert).
+    Returns (ranks [N, E] int32, counts [E] int32)."""
+    from repro.core.olt import batched_compact_ranks
+    if backend == "jnp" or flags.size > _OLT_KERNEL_CAP:
+        return batched_compact_ranks(flags)
+    from repro.kernels.moe_dispatch import batched_ranks_kernel
+    ranks, counts = batched_ranks_kernel(flags, interpret=_interpret())
+    return ranks, counts[0]

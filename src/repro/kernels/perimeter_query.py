@@ -1,0 +1,82 @@
+"""Mariani-Silver perimeter query Q as an OLT-driven Pallas kernel.
+
+Paper Sec. 4.2.1: Q_i computes the dwell on the 4-sided perimeter of a
+region and asks whether it is homogeneous. This is the *exploration* work
+of every ASK/DP level.
+
+TPU adaptation (DESIGN.md Sec. 2): the read-OLT is a **scalar-prefetch**
+operand (``pltpu.PrefetchScalarGridSpec``) -- region coordinates must be
+known at block-fetch time, which scalar prefetch provides. The grid is
+(N_regions,): one grid step per region == the SBR mapping the paper uses
+for Q even inside its MBR scheme (border work has little parallelism).
+
+Each step computes a (4, side) dwell strip entirely in VMEM/VREGs and
+reduces it to two scalars: homog flag + common dwell. No canvas traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
+
+
+def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
+            bounds, max_dwell: int):
+    i = pl.program_id(0)
+    py = (cy_ref[i] * side).astype(jnp.float32)
+    px = (cx_ref[i] * side).astype(jnp.float32)
+    j = jax.lax.broadcasted_iota(jnp.float32, (4, side), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (4, side), 0)
+    last = float(side - 1)
+    ys = jnp.where(row == 0, py,
+         jnp.where(row == 1, py + last, py + j))
+    xs = jnp.where(row == 0, px + j,
+         jnp.where(row == 1, px + j,
+         jnp.where(row == 2, px, px + last)))
+    cr, ci = map_coords(xs, ys, n, bounds)
+    dw = dwell_compute(cr, ci, max_dwell)
+    first = dw[0, 0]
+    homog_ref[0] = jnp.all(dw == first).astype(jnp.int32)
+    common_ref[0] = first
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "n", "bounds", "max_dwell", "interpret"))
+def perimeter_query(
+    coords: jax.Array,
+    *,
+    side: int,
+    n: int,
+    bounds=DEFAULT_BOUNDS,
+    max_dwell: int = 512,
+    interpret: bool = True,
+):
+    """coords: [N, 2] int32 (cy, cx). Returns (homog [N] bool, common [N])."""
+    N = coords.shape[0]
+    kernel = functools.partial(
+        _kernel, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, cy, cx: (i,)),
+            pl.BlockSpec((1,), lambda i, cy, cx: (i,)),
+        ],
+    )
+    homog, common = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(coords[:, 0].astype(jnp.int32), coords[:, 1].astype(jnp.int32))
+    return homog.astype(bool), common

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The dwell iteration (``dwell_compute``) is THE single definition shared by
+oracles and kernels: Pallas kernel bodies import and call it on values read
+from refs, so CPU-interpret results are bit-identical to the oracle
+(identical op order in f32).
+
+Semantics follow Adinetz's reference CUDA implementation (the paper's DP
+baseline): z0 = c; while dwell < max_dwell and |z|^2 < 4: z = z^2 + c.
+Interior points therefore carry dwell == max_dwell.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Complex-plane window used by the paper's benchmark: bottom-left (-1.5, -1),
+# top-right (0.5, 1).
+DEFAULT_BOUNDS: Tuple[float, float, float, float] = (-1.5, -1.0, 0.5, 1.0)
+
+
+def map_coords(xs: jax.Array, ys: jax.Array, n: int,
+               bounds: Tuple[float, float, float, float] = DEFAULT_BOUNDS):
+    """Pixel (x, y) -> complex-plane (re, im). xs/ys are f32 pixel indices."""
+    re0, im0, re1, im1 = bounds
+    cr = re0 + xs * ((re1 - re0) / n)
+    ci = im0 + ys * ((im1 - im0) / n)
+    return cr, ci
+
+
+def dwell_compute(cr: jax.Array, ci: jax.Array, max_dwell: int) -> jax.Array:
+    """Escape-time iteration, vectorised, fixed trip count with masked
+    updates (uniform control flow -- the TPU/VPU-idiomatic form)."""
+    zr, zi = cr, ci
+    dw = jnp.zeros(cr.shape, dtype=jnp.int32)
+
+    def body(_, carry):
+        zr, zi, dw = carry
+        active = (zr * zr + zi * zi) < 4.0
+        nzr = zr * zr - zi * zi + cr
+        nzi = 2.0 * zr * zi + ci
+        zr = jnp.where(active, nzr, zr)
+        zi = jnp.where(active, nzi, zi)
+        dw = jnp.where(active, dw + 1, dw)
+        return zr, zi, dw
+
+    zr, zi, dw = jax.lax.fori_loop(0, max_dwell, body, (zr, zi, dw))
+    return dw
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bounds", "max_dwell"))
+def mandelbrot_ref(n: int, bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
+    """Oracle for the exhaustive flat kernel: full n x n dwell image."""
+    ys = jax.lax.broadcasted_iota(jnp.float32, (n, n), 0)
+    xs = jax.lax.broadcasted_iota(jnp.float32, (n, n), 1)
+    cr, ci = map_coords(xs, ys, n, bounds)
+    return dwell_compute(cr, ci, max_dwell)
+
+
+def perimeter_coords(coords: jax.Array, side: int):
+    """Pixel (y, x) positions of the 4 x side perimeter of each region.
+
+    coords: [N, 2] int32 region coords at some level; region pixel origin is
+    coords * side. Returns (ys, xs): [N, 4, side] f32. Rows: top, bottom,
+    left, right (corners appear twice -- harmless for the homogeneity test).
+    """
+    py = (coords[:, 0] * side).astype(jnp.float32)[:, None, None]
+    px = (coords[:, 1] * side).astype(jnp.float32)[:, None, None]
+    j = jnp.arange(side, dtype=jnp.float32)[None, None, :]
+    row = jnp.arange(4)[None, :, None]
+    last = float(side - 1)
+    ys = jnp.where(row == 0, py,
+         jnp.where(row == 1, py + last,
+         py + j))
+    xs = jnp.where(row == 0, px + j,
+         jnp.where(row == 1, px + j,
+         jnp.where(row == 2, px, px + last)))
+    ys = jnp.broadcast_to(ys, (coords.shape[0], 4, side))
+    xs = jnp.broadcast_to(xs, (coords.shape[0], 4, side))
+    return ys, xs
+
+
+@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
+def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512):
+    """Oracle for the Mariani-Silver border query Q (paper Sec. 4.2.1).
+
+    Returns (homog [N] bool, common [N] int32): whether all 4*side border
+    dwells agree, and the shared value (row (0,0) -- junk if not homog).
+    """
+    ys, xs = perimeter_coords(coords, side)
+    cr, ci = map_coords(xs, ys, n, bounds)
+    dw = dwell_compute(cr, ci, max_dwell)  # [N, 4, side]
+    first = dw[:, 0, 0]
+    homog = jnp.all(dw == first[:, None, None], axis=(1, 2))
+    return homog, first
+
+
+@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
+def region_interior_ref(coords: jax.Array, *, side: int, n: int,
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
+    """Oracle for the last-level application work A: [N, side, side] dwell
+    tiles for each region."""
+    py = (coords[:, 0] * side).astype(jnp.float32)
+    px = (coords[:, 1] * side).astype(jnp.float32)
+    iy = jnp.arange(side, dtype=jnp.float32)
+    ys = py[:, None, None] + iy[None, :, None]
+    xs = px[:, None, None] + iy[None, None, :]
+    ys = jnp.broadcast_to(ys, (coords.shape[0], side, side))
+    xs = jnp.broadcast_to(xs, (coords.shape[0], side, side))
+    cr, ci = map_coords(xs, ys, n, bounds)
+    return dwell_compute(cr, ci, max_dwell)
+
+
+def compact_ranks_ref(flags):
+    """Oracle for kernels/olt_compact.py: exclusive scan + total."""
+    f = jnp.asarray(flags).astype(jnp.int32)
+    inc = jnp.cumsum(f)
+    return (inc - f).astype(jnp.int32), inc[-1].astype(jnp.int32)

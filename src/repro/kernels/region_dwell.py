@@ -1,0 +1,101 @@
+"""Last-level application-work kernel A: per-region interior dwell.
+
+Paper Sec. 4.2: when a region reaches the stop size B without being
+homogeneous, the original per-element work A is applied to its interior.
+The leaf-OLT drives the BlockSpec through scalar prefetch exactly as in
+``region_fill``; the dwell tile is computed in VMEM/VREGs from the region's
+absolute pixel origin and written straight into the aliased canvas.
+
+Same padding contract as region_fill: padded rows duplicate a live row
+(idempotent recompute + rewrite); ``nonempty`` masks the empty-OLT case.
+
+SBR: grid (N,), block (side, side). MBR: grid (N, side/t, side/t).
+On TPU the MXU is idle here -- this kernel is pure VPU work; block sizes
+are chosen for lane alignment (multiples of (8, 128)) when side allows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
+
+
+def _kernel(cy_ref, cx_ref, nonempty_ref, canvas_ref, out_ref, *,
+            by: int, bx: int, tiles: int, side: int, n: int, bounds,
+            max_dwell: int):
+    i = pl.program_id(0)
+    if tiles == 1:
+        ty = tx = 0
+    else:
+        ty = pl.program_id(1)
+        tx = pl.program_id(2)
+    y0 = (cy_ref[i] * side + ty * by).astype(jnp.float32)
+    x0 = (cx_ref[i] * side + tx * bx).astype(jnp.float32)
+    ys = y0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 0)
+    xs = x0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 1)
+    cr, ci = map_coords(xs, ys, n, bounds)
+    dw = dwell_compute(cr, ci, max_dwell)
+    out_ref[...] = jnp.where(nonempty_ref[0] > 0, dw, canvas_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "side", "n", "bounds", "max_dwell", "scheme", "tile", "interpret"))
+def region_dwell(
+    canvas: jax.Array,
+    coords: jax.Array,
+    nonempty: jax.Array,
+    *,
+    side: int,
+    n: int,
+    bounds=DEFAULT_BOUNDS,
+    max_dwell: int = 512,
+    scheme: str = "sbr",
+    tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """coords: [N,2] leaf-OLT (duplicate-padded); returns updated canvas."""
+    N = coords.shape[0]
+    cy = coords[:, 0].astype(jnp.int32)
+    cx = coords[:, 1].astype(jnp.int32)
+    nonempty = nonempty.astype(jnp.int32).reshape((1,))
+
+    if scheme == "sbr" or side <= tile:
+        t = 1
+        by = bx = side
+        grid = (N,)
+        spec = pl.BlockSpec(
+            (side, side), lambda i, cy, cx, ne: (cy[i], cx[i]))
+    elif scheme == "mbr":
+        if side % tile:
+            raise ValueError(f"side={side} not divisible by tile={tile}")
+        t = side // tile
+        by = bx = tile
+        grid = (N, t, t)
+        spec = pl.BlockSpec(
+            (tile, tile),
+            lambda i, ty, tx, cy, cx, ne: (cy[i] * t + ty, cx[i] * t + tx))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    kernel = functools.partial(
+        _kernel, by=by, bx=bx, tiles=t, side=side, n=n, bounds=bounds,
+        max_dwell=max_dwell)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        input_output_aliases={3: 0},  # canvas (after the 3 scalar operands)
+        interpret=interpret,
+    )(cy, cx, nonempty, canvas)

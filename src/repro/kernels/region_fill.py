@@ -1,0 +1,86 @@
+"""Terminal-work kernel T: fill homogeneous regions with their common dwell.
+
+Paper Sec. 4.2.1: T_i writes a constant on every element of a region whose
+perimeter was homogeneous. The fill-OLT (compacted upstream, see
+``mandelbrot/mariani_silver.py``) drives the BlockSpec index_map through
+scalar prefetch; the canvas is an aliased input/output so blocks not
+covered by any region keep their contents.
+
+Padding contract (important): rows beyond the live count MUST duplicate a
+live row (idempotent rewrite). Pallas re-fetches a revisited output block
+from HBM, so a masked "write back the current value" would resurrect stale
+data if a padded row aliased a block another row already wrote. Duplicates
+side-step this entirely. When the fill-OLT is empty, ``nonempty = 0``
+suppresses all writes (every row then safely rewrites block (0,0)'s
+original content).
+
+SBR: grid (N,), block = (side, side) -- one block per region.
+MBR: grid (N, side/t, side/t), block = (t, t) -- multiple blocks per region.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cy_ref, cx_ref, val_ref, nonempty_ref, canvas_ref, out_ref):
+    i = pl.program_id(0)
+    cur = canvas_ref[...]
+    fill = jnp.full_like(cur, val_ref[i])
+    out_ref[...] = jnp.where(nonempty_ref[0] > 0, fill, cur)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "n", "scheme", "tile", "interpret"))
+def region_fill(
+    canvas: jax.Array,
+    coords: jax.Array,
+    values: jax.Array,
+    nonempty: jax.Array,
+    *,
+    side: int,
+    n: int,
+    scheme: str = "sbr",
+    tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """coords: [N,2] compacted fill-OLT (duplicate-padded); values: [N] int32;
+    nonempty: [1] int32 (0 => no live rows). Returns the updated canvas."""
+    N = coords.shape[0]
+    cy = coords[:, 0].astype(jnp.int32)
+    cx = coords[:, 1].astype(jnp.int32)
+    nonempty = nonempty.astype(jnp.int32).reshape((1,))
+
+    if scheme == "sbr" or side <= tile:
+        grid = (N,)
+        spec = pl.BlockSpec(
+            (side, side), lambda i, cy, cx, v, ne: (cy[i], cx[i]))
+    elif scheme == "mbr":
+        if side % tile:
+            raise ValueError(f"side={side} not divisible by tile={tile}")
+        t = side // tile
+        grid = (N, t, t)
+        spec = pl.BlockSpec(
+            (tile, tile),
+            lambda i, ty, tx, cy, cx, v, ne: (cy[i] * t + ty, cx[i] * t + tx))
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        input_output_aliases={4: 0},  # canvas (after the 4 scalar operands)
+        interpret=interpret,
+    )(cy, cx, values.astype(jnp.int32), nonempty, canvas)

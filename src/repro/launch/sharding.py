@@ -1,0 +1,269 @@
+"""Sharding rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Design (DESIGN.md Sec. 5):
+  * TP ("model" axis): attention heads, FFN hidden, vocab, MoE experts.
+  * DP (all non-model axes, incl. "pod"): batch; with ``fsdp=True`` also
+    the contraction dim of every large weight (ZeRO-3: XLA all-gathers at
+    use, reduce-scatters grads; optimizer state inherits the spec so the
+    whole Adam state is sharded).
+  * EP: MoE expert dim -> "model" (the einsum dispatch lowers to
+    all-to-all).
+  * SP (decode): KV caches shard the *sequence* dim on "model" whenever
+    the head dim cannot (MQA/GQA with Hkv < |model|) -- flash-decoding's
+    split-KV, done by the SPMD partitioner (softmax reductions become tiny
+    all-reduces).
+
+Every rule is divisibility-guarded: an axis is applied to a dim only if
+the dim divides evenly; otherwise that axis is dropped (e.g. whisper's 20
+heads on a 16-way model axis -> attention falls back to data-parallel and
+TP comes from d_ff/vocab). This keeps all 40 cells compiling with one rule
+set while recording per-arch fallbacks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import MODEL_AXIS, data_axes
+
+FSDP_THRESHOLD = 2_000_000_000  # params; >= 2B get ZeRO-3 sharding
+# (v5e has 16 GiB HBM; replicating a >2B-param Adam state across the data
+#  axis would alone eat >28 GiB/chip at f32 master+m+v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool
+    data: Tuple[str, ...]  # batch axes of the mesh
+    # single "model" axis, or a tuple ("model_a", "model_b") for the 2-D
+    # TP split mesh (make_production_mesh(model_split=...))
+    model: object = MODEL_AXIS
+
+    @classmethod
+    def for_arch(cls, cfg: ArchConfig, mesh: Mesh,
+                 fsdp: Optional[bool] = None) -> "ShardingPolicy":
+        if fsdp is None:
+            fsdp = cfg.param_count() >= FSDP_THRESHOLD
+        from repro.launch.mesh import model_axes
+        m = model_axes(mesh)
+        model = m if len(m) > 1 else (m[0] if m else MODEL_AXIS)
+        return cls(fsdp=fsdp, data=data_axes(mesh), model=model)
+
+    def heads_split(self, mesh: Mesh, heads: int):
+        """(head_axes, rest_axes) -- the model sub-axes usable on a head
+        dim of size ``heads`` and the leftover axes (2-D TP: the leftovers
+        shard the weight's contraction dim). None when nothing fits."""
+        msize = _axis_size(mesh, self.model)
+        if heads % msize == 0:
+            return self.model, None
+        if isinstance(self.model, tuple):
+            for cut in range(len(self.model) - 1, 0, -1):
+                sub = self.model[:cut]
+                if heads % _axis_size(mesh, sub) == 0:
+                    return sub, self.model[cut:]
+        return None, (self.model if isinstance(self.model, tuple)
+                      else (self.model,))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, shape, spec_entries) -> P:
+    """Drop axes that don't divide their dim."""
+    out = []
+    for dim, ax in zip(shape, spec_entries):
+        if ax is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+               path: Tuple[str, ...], leaf) -> P:
+    """PartitionSpec for one parameter leaf. ``path`` are dict keys; leaves
+    under "groups"/"encoder" carry a leading stacked-group dim."""
+    keys = _path_keys(path)
+    shape = leaf.shape
+    model, dsp = pol.model, (tuple(pol.data) if pol.fsdp else None)
+    stacked = ("groups" in keys) or ("encoder" in keys and "groups" in keys)
+    lead: Tuple = (None,) if stacked else ()
+
+    def spec(*entries):
+        return _guard(mesh, shape, lead + tuple(entries))
+
+    name = keys[-2] if keys[-1] in ("w", "b") else keys[-1]
+    is_bias = keys[-1] == "b"
+
+    # --- embeddings / head --------------------------------------------------
+    if "embed" in keys:
+        return _guard(mesh, shape, (model, dsp))
+    if "lm_head" in keys:
+        return _guard(mesh, shape, (dsp, model))
+
+    # --- norms / small vectors ----------------------------------------------
+    if "norm" in name or name in ("final_norm", "kv_norm", "q_norm", "k_norm",
+                                  "norm1", "norm2", "norm_cross"):
+        return spec(*([None] * (len(shape) - len(lead))))
+
+    # --- MoE ----------------------------------------------------------------
+    if "experts" in keys:
+        # [G, E, D, F] / [G, E, F, D]: experts on model (EP); FSDP on D
+        if name == "down":
+            return spec(model, None, dsp)
+        return spec(model, dsp, None)
+    if "router" in keys:
+        return spec(None, None)
+
+    # --- attention projections ----------------------------------------------
+    if name in ("wq", "wk", "wv", "wo", "wo_gate"):
+        heads = cfg.num_kv_heads if name in ("wk", "wv") else cfg.num_heads
+        m, rest = pol.heads_split(mesh, heads)
+        if is_bias:
+            return spec(m) if name != "wo" else spec(None)
+        other = dsp if rest is None else rest  # 2-D TP: leftovers on D
+        if name == "wo":
+            return spec(m, other)
+        return spec(other, m)
+
+    # --- MLA ----------------------------------------------------------------
+    if name == "wdkv":
+        return spec(dsp, None)
+    if name in ("wuk", "wuv"):
+        return spec(None, model)
+    if name == "wkr":
+        return spec(dsp, None)
+
+    # --- Mamba --------------------------------------------------------------
+    if name == "in_proj":
+        return spec(dsp, model)
+    if name in ("conv_w",):
+        return spec(None, model)
+    if name in ("conv_b", "D"):
+        return spec(model)
+    if name == "x_proj":
+        return spec(model, None)
+    if name == "dt_proj":
+        return spec(None, model) if not is_bias else spec(model)
+    if name == "A_log":
+        return spec(model, None)
+    if name == "out_proj":
+        return spec(model, dsp)
+
+    # --- xLSTM --------------------------------------------------------------
+    if name in ("up",):
+        if is_bias:
+            return spec(model)
+        return spec(dsp, model)
+    if name == "down":
+        return spec(model, dsp) if not is_bias else spec(None)
+    if name in ("wz", "wi", "wf"):  # small gate projections: replicate
+        return spec(*([None] * (len(shape) - len(lead))))
+
+    # --- MLP ----------------------------------------------------------------
+    if name in ("gate",):
+        return spec(dsp, model) if not is_bias else spec(model)
+
+    # default: replicate
+    return spec(*([None] * (len(shape) - len(lead))))
+
+
+def params_shardings(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+                     param_tree) -> Any:
+    """NamedSharding pytree matching ``param_tree`` (arrays or SDS)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_tree)
+    specs = [NamedSharding(mesh, param_spec(cfg, mesh, pol, path, leaf))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+                        opt_tree) -> Any:
+    """Optimizer state inherits each param's spec (ZeRO); ``step`` scalar
+    is replicated."""
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if keys and keys[0] == "step":
+            return NamedSharding(mesh, P())
+        # strip the leading master/m/v key and reuse the param rule
+        return NamedSharding(mesh, param_spec(cfg, mesh, pol, path[1:], leaf))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def cache_spec(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+               path: Tuple[str, ...], leaf) -> P:
+    """Decode-cache rules: batch on data; heads on model when divisible,
+    else sequence-sharded KV (SP / flash-decoding split)."""
+    keys = _path_keys(path)
+    shape = leaf.shape  # leading G (stacked groups), then batch
+    d = tuple(pol.data)
+    msize = _axis_size(mesh, pol.model)
+    name = keys[-1]
+    if name in ("k", "v", "k_q", "v_q"):  # [G, B, S, Hkv, hd]
+        if cfg.num_kv_heads % msize == 0:
+            return _guard(mesh, shape, (None, d, None, pol.model, None))
+        return _guard(mesh, shape, (None, d, pol.model, None, None))
+    if name in ("k_s", "v_s"):  # int8 scales [G, B, S, Hkv]
+        if cfg.num_kv_heads % msize == 0:
+            return _guard(mesh, shape, (None, d, None, pol.model))
+        return _guard(mesh, shape, (None, d, pol.model, None))
+    if name in ("c_kv", "k_rope"):  # [G, B, S, lora/dr] -> SP on S
+        return _guard(mesh, shape, (None, d, pol.model, None))
+    if name == "conv":  # [G, B, dc-1, di]
+        return _guard(mesh, shape, (None, d, None, pol.model))
+    if name == "ssm":  # [G, B, di, ds]
+        return _guard(mesh, shape, (None, d, pol.model, None))
+    if name == "C":  # [G, B, H, dh, dh]
+        return _guard(mesh, shape, (None, d, None, pol.model, None))
+    if name in ("n",):  # [G, B, H, dh]
+        return _guard(mesh, shape, (None, d, None, pol.model))
+    if name == "m":  # [G, B, H]
+        return _guard(mesh, shape, (None, d, None))
+    if name in ("c",):  # slstm [G, B, D]
+        return _guard(mesh, shape, (None, d, pol.model))
+    return _guard(mesh, shape, (None, d) + (None,) * (len(shape) - 2))
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+                    cache_tree) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [NamedSharding(mesh, cache_spec(cfg, mesh, pol, p, l))
+         for p, l in flat])
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, pol: ShardingPolicy,
+                    batch_tree) -> Any:
+    """Data operands: batch dim on the data axes, rest replicated."""
+    d = tuple(pol.data)
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _guard(
+            mesh, leaf.shape, (d,) + (None,) * (leaf.ndim - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

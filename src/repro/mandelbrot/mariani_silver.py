@@ -1,0 +1,126 @@
+"""Mariani-Silver subdivision for the Mandelbrot set (paper Sec. 6).
+
+``MandelbrotProblem`` implements the ``ASKProblem`` adapter, so the same
+object runs under all three drivers the paper compares:
+
+  Ex   -- ``repro.mandelbrot.exhaustive``        (one flat kernel)
+  DP   -- ``repro.core.dp_emul.run_dp``          (one dispatch per tree node)
+  ASK  -- ``repro.core.ask.run_ask`` / ``run_ask_fused``  (one per level)
+
+Per level, ``level_step`` performs:
+  Q (perimeter query)            kernels/perimeter_query.py
+  T (fill homogeneous regions)   kernels/region_fill.py
+  subdivide flags                for the driver's OLT step
+and ``leaf_step`` performs the last-level application work A
+(kernels/region_dwell.py).
+
+The fill-OLT compaction inside level_step uses jnp.nonzero(size=...) --
+shape-static, so the whole step stays jittable; padding rows duplicate the
+first live row (see region_fill.py for why duplicates, not masks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+__all__ = ["MandelbrotProblem", "solve"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MandelbrotProblem:
+    """ASKProblem adapter for Mariani-Silver Mandelbrot."""
+
+    n: int
+    g: int = 2
+    r: int = 2
+    B: int = 32
+    max_dwell: int = 512
+    bounds: Tuple[float, float, float, float] = ref.DEFAULT_BOUNDS
+    scheme: str = "sbr"  # "sbr" | "mbr"  (paper Sec. 4.3)
+    tile: int = 256  # MBR tile side
+    backend: str = "pallas"  # "pallas" | "jnp"
+
+    def __post_init__(self):
+        if self.n % self.g:
+            raise ValueError("n must be divisible by g")
+        side = self.n // self.g
+        while side > self.B:
+            if side % self.r:
+                raise ValueError(
+                    f"subdivision chain broken: side {side} not divisible by r={self.r}")
+            side //= self.r
+
+    # -- ASKProblem protocol ------------------------------------------------
+
+    def init_state(self) -> jax.Array:
+        return jnp.zeros((self.n, self.n), dtype=jnp.int32)
+
+    def root_coords(self) -> jax.Array:
+        g = self.g
+        cy, cx = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
+        return jnp.stack([cy.ravel(), cx.ravel()], axis=-1).astype(jnp.int32)
+
+    def region_side(self, level: int) -> int:
+        return self.n // (self.g * self.r ** level)
+
+    def level_step(self, state: jax.Array, coords: jax.Array,
+                   valid: jax.Array, *, level: int) -> Tuple[jax.Array, jax.Array]:
+        side = self.region_side(level)
+        homog, common = ops.perimeter_query(
+            coords, side=side, n=self.n, bounds=self.bounds,
+            max_dwell=self.max_dwell, backend=self.backend)
+        homog = jnp.logical_and(homog, valid)
+
+        # compact fill-OLT; pad with duplicates of the first live row
+        cap = coords.shape[0]
+        (idx,) = jnp.nonzero(homog, size=cap, fill_value=0)
+        count = jnp.sum(homog.astype(jnp.int32))
+        live = jnp.arange(cap) < count
+        idx = jnp.where(live, idx, idx[0])
+        fill_coords = coords[idx]
+        fill_vals = common[idx]
+        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
+        state = ops.region_fill(
+            state, fill_coords, fill_vals, nonempty, side=side, n=self.n,
+            scheme=self.scheme, tile=self.tile, backend=self.backend)
+
+        subdivide = jnp.logical_and(valid, jnp.logical_not(homog))
+        return state, subdivide
+
+    def leaf_step(self, state: jax.Array, coords: jax.Array,
+                  valid: jax.Array, *, level: int) -> jax.Array:
+        side = self.region_side(level)
+        # duplicate-pad the invalid tail (idempotent recompute)
+        cap = coords.shape[0]
+        count = jnp.sum(valid.astype(jnp.int32))
+        idx = jnp.where(jnp.arange(cap) < count, jnp.arange(cap), 0)
+        coords = coords[idx]
+        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
+        return ops.region_dwell(
+            state, coords, nonempty, side=side, n=self.n, bounds=self.bounds,
+            max_dwell=self.max_dwell, scheme=self.scheme, tile=self.tile,
+            backend=self.backend)
+
+
+def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
+    """Convenience dispatcher: method in {ex, ask, ask_fused, dp}."""
+    if method == "ex":
+        from repro.mandelbrot.exhaustive import exhaustive
+        return exhaustive(problem.n, max_dwell=problem.max_dwell,
+                          bounds=problem.bounds, backend=problem.backend)
+    if method == "ask":
+        from repro.core.ask import run_ask
+        return run_ask(problem, **kw)
+    if method == "ask_fused":
+        from repro.core.ask import run_ask_fused
+        return run_ask_fused(problem, **kw)
+    if method == "dp":
+        from repro.core.dp_emul import run_dp
+        return run_dp(problem, **kw)
+    raise ValueError(f"unknown method {method!r}")

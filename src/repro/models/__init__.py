@@ -1,0 +1,1 @@
+"""LM substrate: composable blocks covering the 10 assigned architectures."""

@@ -1,0 +1,211 @@
+"""Multi-head attention: GQA/MQA, qk-norm, RoPE, cross-attention, KV cache.
+
+Three entry points per module:
+  ``attn_train``   -- full-sequence causal (or bidirectional) attention,
+                      optionally q-chunked (lax.scan over query blocks with
+                      flash-style masking) so 32k prefill never materialises
+                      the full [S, S] score matrix.
+  ``attn_prefill`` -- train-style pass that also returns the KV cache.
+  ``attn_decode``  -- single-token step against a fixed-capacity cache
+                      (dynamic_update_slice write at ``pos``; mask k > pos).
+
+Sharding-friendly shapes: q/k/v are kept [B, S, H, dh] so the head axis is
+a clean TP target; softmax is computed in f32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, linear, linear_init, rmsnorm, rope_angles
+
+
+def attn_init(key, *, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, bias: bool = False, qk_norm: bool = False,
+              out_dim: int | None = None, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    out_dim = out_dim or d_model
+    p = {
+        "wq": linear_init(ks[0], d_model, num_heads * head_dim, bias=bias, dtype=dtype),
+        "wk": linear_init(ks[1], d_model, num_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wv": linear_init(ks[2], d_model, num_kv_heads * head_dim, bias=bias, dtype=dtype),
+        "wo": linear_init(ks[3], num_heads * head_dim, out_dim, bias=bias, dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"w": jnp.ones((head_dim,), dtype)}
+        p["k_norm"] = {"w": jnp.ones((head_dim,), dtype)}
+    return p
+
+
+def _project_qkv(p, x, kv_x, *, num_heads, num_kv_heads, head_dim, qk_norm):
+    B, S = x.shape[0], x.shape[1]
+    Sk = kv_x.shape[1]
+    q = linear(p["wq"], x).reshape(B, S, num_heads, head_dim)
+    k = linear(p["wk"], kv_x).reshape(B, Sk, num_kv_heads, head_dim)
+    v = linear(p["wv"], kv_x).reshape(B, Sk, num_kv_heads, head_dim)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, bias=None, q_pos=None, k_pos=None, causal=True):
+    """q [B,Sq,H,dh]; k/v [B,Sk,Hkv,dh] (GQA: H % Hkv == 0). f32 softmax."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if causal:
+        ok = k_pos[None, :] <= q_pos[:, None]  # [Sq, Sk]
+        scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    if bias is not None:
+        scores = scores + bias
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def attn_train(p, x, *, num_heads, num_kv_heads, head_dim,
+               qk_norm=False, rope="1d", rope_theta=10000.0,
+               causal=True, q_chunk=None, kv_x=None, positions=None):
+    """Full-sequence attention. ``kv_x`` != None => cross-attention (no
+    rope on kv, no causal). Returns [B, S, d_out]."""
+    cross = kv_x is not None
+    kv_src = kv_x if cross else x
+    B, S = x.shape[0], x.shape[1]
+    Sk = kv_src.shape[1]
+    q, k, v = _project_qkv(p, x, kv_src, num_heads=num_heads,
+                           num_kv_heads=num_kv_heads, head_dim=head_dim,
+                           qk_norm=qk_norm)
+    q_pos = positions if positions is not None else jnp.arange(S)
+    k_pos = jnp.arange(Sk)
+    if rope != "none" and not cross:
+        frac = 0.5 if rope == "2d" else 1.0
+        rot = int(head_dim * frac) - (int(head_dim * frac) % 2)
+        cos_q, sin_q = rope_angles(q_pos, rot, rope_theta)
+        cos_k, sin_k = rope_angles(k_pos, rot, rope_theta)
+        q = apply_rope(q, cos_q, sin_q, frac)
+        k = apply_rope(k, cos_k, sin_k, frac)
+    causal = causal and not cross
+
+    if q_chunk is None or q_chunk >= S:
+        out = _sdpa(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal)
+    else:
+        if S % q_chunk:
+            raise ValueError(f"S={S} not divisible by q_chunk={q_chunk}")
+        nc = S // q_chunk
+        qs = q.reshape(B, nc, q_chunk, num_heads, head_dim).transpose(1, 0, 2, 3, 4)
+        qp = q_pos.reshape(nc, q_chunk)
+
+        def step(_, qc):
+            qi, qpi = qc
+            o = _sdpa(qi, k, v, q_pos=qpi, k_pos=k_pos, causal=causal)
+            return None, o
+
+        _, outs = jax.lax.scan(step, None, (qs, qp))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, num_heads, head_dim)
+    return linear(p["wo"], out.reshape(B, S, num_heads * head_dim))
+
+
+def _quant_kv(x):
+    """[B, S, H, dh] -> (int8 values, f32 per-(token, head) scale).
+
+    Weight of the serving-memory hillclimb (EXPERIMENTS.md Sec. Perf):
+    at 32k context the KV cache dominates decode HBM traffic; int8 halves
+    both footprint and bytes/step at <0.5% max quantisation error."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _dequant_kv(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def attn_prefill(p, x, *, num_heads, num_kv_heads, head_dim, cache_len,
+                 qk_norm=False, rope="1d", rope_theta=10000.0, q_chunk=None,
+                 kv_quant=False):
+    """Causal self-attention that also materialises the KV cache (post-rope
+    keys, padded to ``cache_len``). Returns (out, {"k","v"}) or the int8
+    form {"k_q","k_s","v_q","v_s"} when ``kv_quant``."""
+    B, S = x.shape[0], x.shape[1]
+    q, k, v = _project_qkv(p, x, x, num_heads=num_heads,
+                           num_kv_heads=num_kv_heads, head_dim=head_dim,
+                           qk_norm=qk_norm)
+    pos = jnp.arange(S)
+    if rope != "none":
+        frac = 0.5 if rope == "2d" else 1.0
+        rot = int(head_dim * frac) - (int(head_dim * frac) % 2)
+        cos, sin = rope_angles(pos, rot, rope_theta)
+        q = apply_rope(q, cos, sin, frac)
+        k = apply_rope(k, cos, sin, frac)
+    if q_chunk is None or q_chunk >= S:
+        out = _sdpa(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+    else:
+        nc = S // q_chunk
+        qs = q.reshape(B, nc, q_chunk, num_heads, head_dim).transpose(1, 0, 2, 3, 4)
+        qp = pos.reshape(nc, q_chunk)
+        _, outs = jax.lax.scan(
+            lambda _, qc: (None, _sdpa(qc[0], k, v, q_pos=qc[1], k_pos=pos,
+                                       causal=True)), None, (qs, qp))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, num_heads, head_dim)
+    pad = cache_len - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = linear(p["wo"], out.reshape(B, S, num_heads * head_dim))
+    if kv_quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        return out, {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
+    return out, {"k": k, "v": v}
+
+
+def attn_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
+                qk_norm=False, rope="1d", rope_theta=10000.0):
+    """One-token step. x: [B, 1, D]; cache {"k","v"} [B, Sc, Hkv, dh] or
+    the int8 form {"k_q","k_s","v_q","v_s"}; ``pos``: scalar int32 write
+    position (the mask admits k_index <= pos). Returns (out, new cache)."""
+    B = x.shape[0]
+    quant = "k_q" in cache
+    Sc = (cache["k_q"] if quant else cache["k"]).shape[1]
+    q, k, v = _project_qkv(p, x, x, num_heads=num_heads,
+                           num_kv_heads=num_kv_heads, head_dim=head_dim,
+                           qk_norm=qk_norm)
+    if rope != "none":
+        frac = 0.5 if rope == "2d" else 1.0
+        rot = int(head_dim * frac) - (int(head_dim * frac) % 2)
+        cos, sin = rope_angles(pos[None], rot, rope_theta)
+        q = apply_rope(q, cos, sin, frac)
+        k = apply_rope(k, cos, sin, frac)
+    if quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        new = {
+            "k_q": jax.lax.dynamic_update_slice(cache["k_q"], kq,
+                                                (0, pos, 0, 0)),
+            "k_s": jax.lax.dynamic_update_slice(
+                cache["k_s"], ks.astype(cache["k_s"].dtype), (0, pos, 0)),
+            "v_q": jax.lax.dynamic_update_slice(cache["v_q"], vq,
+                                                (0, pos, 0, 0)),
+            "v_s": jax.lax.dynamic_update_slice(
+                cache["v_s"], vs.astype(cache["v_s"].dtype), (0, pos, 0)),
+        }
+        ck = _dequant_kv(new["k_q"], new["k_s"], q.dtype)
+        cv = _dequant_kv(new["v_q"], new["v_s"], q.dtype)
+        cache = new
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        cache = {"k": ck, "v": cv}
+    k_pos = jnp.arange(Sc)
+    out = _sdpa(q, ck, cv, q_pos=pos[None], k_pos=k_pos, causal=True)
+    out = linear(p["wo"], out.reshape(B, 1, num_heads * head_dim))
+    return out, cache

@@ -1,0 +1,142 @@
+"""Shared model components: norms, projections, MLPs, position encodings.
+
+Everything is functional: params are nested dicts of jnp arrays, built by
+``init_*`` helpers and consumed by pure ``apply``-style functions. No flax
+-- the framework owns its substrate end to end (pjit shards plain pytrees
+just as well, and scan-over-groups only needs stacked leaves).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_dense_init(scale: float = 0.02):
+    def init(key, shape, dtype):
+        return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                    jnp.float32)).astype(dtype)
+    return init
+
+
+dense_init = make_dense_init()
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32):
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * p["w"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, act: str = "swiglu",
+             bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": linear_init(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+         "down": linear_init(ks[1], d_ff, d_model, bias=bias, dtype=dtype)}
+    if act == "swiglu":
+        p["gate"] = linear_init(ks[2], d_model, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(linear(p["up"], x))
+    return linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (1d standard; "2d" = half-dim rotary a la ChatGLM)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions [...]-> (cos, sin) [..., dim/2] in f32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               fraction: float = 1.0) -> jax.Array:
+    """x: [..., S, H, dh]; cos/sin: [S, rot/2] broadcastable. ``fraction``
+    rotates only the first fraction of head dims (ChatGLM-style 2d RoPE)."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[..., None, :]  # [S, 1, rot/2] -> broadcast over heads
+    s = sin[..., None, :]
+    o1 = x1 * c - x2 * s  # f32 (cos/sin are f32); cast back below
+    o2 = x2 * c + x1 * s
+    xr = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([xr, xp], axis=-1) if rot < dh else xr
+
+
+def sinusoidal_pos(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embedding [seq, d]."""
+    pos = np.arange(seq, dtype=np.float32)[:, None]
+    dim = np.arange(d // 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, 2.0 * dim / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype=dtype)
+
+
+def sinusoidal_at(pos: jax.Array, d: int, dtype=jnp.float32) -> jax.Array:
+    """Single sinusoidal position row at (traced) ``pos`` -> [d]."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def causal_mask_bias(q_pos: jax.Array, k_pos: jax.Array) -> jax.Array:
+    """Additive f32 bias: 0 where k<=q else -inf. Shapes broadcast."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)

@@ -1,0 +1,145 @@
+"""Mamba (S6 selective SSM) mixer -- the sub-quadratic half of Jamba.
+
+Training runs the selective recurrence as a single ``lax.scan`` over time
+(one compiled body regardless of sequence length -- essential for the 1-core
+dry-run compiles, and the production-sane default; a chunked/associative
+scan is a recorded hillclimb candidate in EXPERIMENTS.md Sec. Perf).
+
+Decode carries (conv_state [B, d_conv-1, d_inner], ssm_state
+[B, d_inner, d_state]) -- O(1) in sequence length, which is exactly why
+jamba runs the ``long_500k`` cell (DESIGN.md Sec. 6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear, linear_init
+
+
+def mamba_init(key, *, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None, dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": linear_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": {
+            "w": dense_init(ks[3], (dt_rank, d_inner), dtype),
+            "b": jnp.full((d_inner,), -4.6, dtype),  # softplus^-1(0.01)
+        },
+        "A_log": jnp.log(A),  # f32: recurrence is numerically sensitive
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": linear_init(ks[4], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _ssm_params(p, x, *, d_state, dt_rank):
+    """x: [B, S, d_inner] -> (delta [B,S,d_inner], Bm/Cm [B,S,d_state])."""
+    proj = linear(p["x_proj"], x)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"]["w"] + p["dt_proj"]["b"])
+    return delta.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_train(p, x, *, d_state: int = 16, d_conv: int = 4, expand: int = 2,
+                dt_rank: int | None = None, return_state: bool = False,
+                chunk: int = 128):
+    """x: [B, S, D] -> [B, S, D] (optionally also the final decode cache).
+
+    The selective scan runs as a two-level (chunked) scan: the outer scan
+    carries the SSM state across chunks (one saved carry per chunk) and its
+    body is ``jax.checkpoint``-ed, so scan AD saves O(S/chunk) states
+    instead of O(S) -- a plain scan would store the [B, d_inner, d_state]
+    carry *per timestep* during backward (~34 GB/device for jamba
+    train_4k; see EXPERIMENTS.md Sec. Dry-run notes).
+    """
+    B, S, D = x.shape
+    d_inner = expand * D
+    dt_rank = dt_rank or max(1, D // 16)
+    xz = linear(p["in_proj"], x)
+    xs_pre, z = jnp.split(xz, 2, axis=-1)  # [B, S, d_inner] each
+
+    # causal depthwise conv over time
+    pad = jnp.pad(xs_pre, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * p["conv_w"][i] for i in range(d_conv))
+    xs = jax.nn.silu(conv + p["conv_b"])
+
+    delta, Bm, Cm = _ssm_params(p, xs, d_state=d_state, dt_rank=dt_rank)
+    A = -jnp.exp(p["A_log"])  # [d_inner, d_state]
+    xf = xs.astype(jnp.float32)
+
+    def step(h, t):
+        d_t, B_t, C_t, x_t = t  # [B,di], [B,ds], [B,ds], [B,di]
+        dA = jnp.exp(d_t[..., None] * A[None])          # [B, di, ds]
+        dBx = d_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    seq = (delta.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+           Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2))  # [S, B, ...]
+
+    if S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        seq_c = jax.tree_util.tree_map(
+            lambda a: a.reshape((nc, chunk) + a.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(h, tc):
+            return jax.lax.scan(step, h, tc)
+
+        h_last, ys = jax.lax.scan(chunk_body, h0, seq_c)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(step, h0, seq)
+
+    y = ys.transpose(1, 0, 2) + xf * p["D"][None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    if return_state:
+        tail = xs_pre[:, -(d_conv - 1):, :] if d_conv > 1 else \
+            xs_pre[:, :0, :]
+        return out, {"conv": tail, "ssm": h_last}
+    return out
+
+
+def mamba_init_cache(batch: int, *, d_model: int, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2, dtype=jnp.float32):
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, *, d_state: int = 16, d_conv: int = 4,
+                 expand: int = 2, dt_rank: int | None = None):
+    """One-token step. x: [B, 1, D]. Returns (y [B,1,D], new cache)."""
+    B, _, D = x.shape
+    dt_rank = dt_rank or max(1, D // 16)
+    xz = linear(p["in_proj"], x[:, 0])
+    xs, z = jnp.split(xz, 2, axis=-1)  # [B, d_inner]
+
+    window = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # [B,dc,di]
+    conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xs_c = jax.nn.silu(conv)
+
+    delta, Bm, Cm = _ssm_params(p, xs_c[:, None, :], d_state=d_state,
+                                dt_rank=dt_rank)
+    d_t, B_t, C_t = delta[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(d_t[..., None] * A[None])
+    dBx = d_t[..., None] * B_t[:, None, :] * xs_c.astype(jnp.float32)[..., None]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_t) + xs_c.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)[:, None, :]
+    return out, {"conv": window[:, 1:], "ssm": h}

@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (DeepSeek-V2) -- kv_lora-compressed KV.
+
+Train path uses the standard (non-absorbed) form: decompress c_kv into
+per-head k_nope/v and run GQA-style attention (matmul-heavy, MXU-friendly).
+
+Decode path uses the **absorbed** form: W_uk folds into the query and W_uv
+into the output, so attention runs directly against the cached latent
+``c_kv`` [B, S, kv_lora] plus the shared rope key [B, S, d_rope]. The KV
+cache is therefore (kv_lora + d_rope) per token -- 576 instead of
+2*H*dh = 4096 for the lite config -- which moves the decode roofline from
+memory-bound toward compute-bound (see EXPERIMENTS.md deepseek cells).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, linear, linear_init, rmsnorm, rmsnorm_init, rope_angles
+
+
+def mla_init(key, *, d_model: int, num_heads: int, kv_lora: int,
+             d_nope: int, d_rope: int, d_v: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": linear_init(ks[0], d_model, num_heads * (d_nope + d_rope), dtype=dtype),
+        "wdkv": linear_init(ks[1], d_model, kv_lora, dtype=dtype),
+        "kv_norm": rmsnorm_init(kv_lora, dtype),
+        "wuk": linear_init(ks[2], kv_lora, num_heads * d_nope, dtype=dtype),
+        "wuv": linear_init(ks[3], kv_lora, num_heads * d_v, dtype=dtype),
+        "wkr": linear_init(ks[4], d_model, d_rope, dtype=dtype),
+        "wo": linear_init(ks[5], num_heads * d_v, d_model, dtype=dtype),
+    }
+
+
+def _q_proj(p, x, *, num_heads, d_nope, d_rope, rope_theta, positions):
+    B, S = x.shape[0], x.shape[1]
+    q = linear(p["wq"], x).reshape(B, S, num_heads, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    cos, sin = rope_angles(positions, d_rope, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x, *, rope_theta, positions):
+    c_kv = rmsnorm(p["kv_norm"], linear(p["wdkv"], x))  # [B, S, lora]
+    k_rope = linear(p["wkr"], x)  # [B, S, d_rope] (single shared head)
+    cos, sin = rope_angles(positions, k_rope.shape[-1], rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(p, x, *, num_heads, kv_lora, d_nope, d_rope, d_v,
+              rope_theta=10000.0, q_chunk=None):
+    """Full-sequence causal MLA (non-absorbed)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q_nope, q_rope = _q_proj(p, x, num_heads=num_heads, d_nope=d_nope,
+                             d_rope=d_rope, rope_theta=rope_theta, positions=pos)
+    c_kv, k_rope = _latent_kv(p, x, rope_theta=rope_theta, positions=pos)
+    k_nope = linear(p["wuk"], c_kv).reshape(B, S, num_heads, d_nope)
+    v = linear(p["wuv"], c_kv).reshape(B, S, num_heads, d_v)
+
+    scale = 1.0 / jnp.sqrt(d_nope + d_rope).astype(jnp.float32)
+
+    def block(qn, qr, qpos):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope)
+        s = s + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope)
+        s = (s * scale).astype(jnp.float32)
+        ok = pos[None, :] <= qpos[:, None]
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+    if q_chunk is None or q_chunk >= S:
+        out = block(q_nope, q_rope, pos)
+    else:
+        nc = S // q_chunk
+        qn = q_nope.reshape(B, nc, q_chunk, num_heads, d_nope).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nc, q_chunk, num_heads, d_rope).transpose(1, 0, 2, 3, 4)
+        qp = pos.reshape(nc, q_chunk)
+        _, outs = jax.lax.scan(lambda _, c: (None, block(*c)), None, (qn, qr, qp))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, num_heads, d_v)
+    return linear(p["wo"], out.reshape(B, S, num_heads * d_v))
+
+
+def mla_prefill(p, x, *, num_heads, kv_lora, d_nope, d_rope, d_v, cache_len,
+                rope_theta=10000.0, q_chunk=None):
+    out = mla_train(p, x, num_heads=num_heads, kv_lora=kv_lora, d_nope=d_nope,
+                    d_rope=d_rope, d_v=d_v, rope_theta=rope_theta, q_chunk=q_chunk)
+    pos = jnp.arange(x.shape[1])
+    c_kv, k_rope = _latent_kv(p, x, rope_theta=rope_theta, positions=pos)
+    pad = cache_len - x.shape[1]
+    if pad:
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p, x, cache, pos, *, num_heads, kv_lora, d_nope, d_rope, d_v,
+               rope_theta=10000.0):
+    """Absorbed one-token step against the latent cache."""
+    B = x.shape[0]
+    Sc = cache["c_kv"].shape[1]
+    q_nope, q_rope = _q_proj(p, x, num_heads=num_heads, d_nope=d_nope,
+                             d_rope=d_rope, rope_theta=rope_theta,
+                             positions=pos[None])
+    c_new, kr_new = _latent_kv(p, x, rope_theta=rope_theta, positions=pos[None])
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    wuk = p["wuk"]["w"].reshape(kv_lora, num_heads, d_nope)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wuk)  # absorb W_uk
+    s = jnp.einsum("bqhl,bkl->bhqk", q_lat, c_kv)
+    s = s + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    s = (s / jnp.sqrt(d_nope + d_rope)).astype(jnp.float32)
+    ok = jnp.arange(Sc)[None, :] <= pos[None][:, None]
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhqk,bkl->bqhl", w, c_kv)
+    wuv = p["wuv"]["w"].reshape(kv_lora, num_heads, d_v)
+    out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wuv)  # absorb W_uv
+    out = linear(p["wo"], out.reshape(B, 1, num_heads * d_v))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

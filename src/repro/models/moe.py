@@ -1,0 +1,165 @@
+"""Mixture-of-Experts with OLT-compaction dispatch (the paper's primitive).
+
+Token->expert routing is exactly the ASK write-OLT insert (DESIGN.md
+Sec. 4): each token "subdivides" into its top-k experts; its slot inside an
+expert's contiguous buffer is the exclusive prefix-sum rank over that
+expert's flags (``core.olt.batched_compact_ranks`` -- the atomicAdd
+replacement). Capacity-factor padding plays the role of ASK's bucketed
+OLT capacity; overflow tokens are dropped (and their combine weight is
+zero, so the residual path carries them), underflow slots are zero.
+
+Dispatch/return are gather/scatter-adds, so under pjit with experts sharded
+on the "model" axis this lowers to the standard EP all-to-all pattern.
+
+Shapes: x [B, S, D] -> buffers [E, C, D] -> expert FFN -> combine [B, S, D].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.olt import batched_compact_ranks
+from repro.models.common import dense_init, linear_init, linear, mlp_apply, mlp_init
+
+
+def moe_init(key, *, d_model: int, d_ff: int, num_experts: int, top_k: int,
+             num_shared: int = 0, act: str = "swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": {"w": dense_init(ks[0], (d_model, num_experts), jnp.float32)},
+        "experts": {
+            "gate": dense_init(ks[1], (num_experts, d_model, d_ff), dtype),
+            "up": dense_init(ks[2], (num_experts, d_model, d_ff), dtype),
+            "down": dense_init(ks[3], (num_experts, d_ff, d_model), dtype),
+        },
+    }
+    if num_shared:
+        p["shared"] = mlp_init(jax.random.fold_in(key, 7), d_model,
+                               d_ff * num_shared, act=act, dtype=dtype)
+    return p
+
+
+def moe_apply(p, x, *, num_experts: int, top_k: int, capacity_factor: float = 1.25,
+              act: str = "swiglu", router_z_weight: float = 1e-3,
+              ep_axis=None, token_axes=None, group_size: int = 1024):
+    """Returns (y [B,S,D], aux) where aux carries the load-balance and
+    router-z losses (added to the training objective by the model).
+
+    Dispatch is the GShard-style *grouped einsum*: tokens are split into
+    groups of ``group_size`` (group dim sharded on the data axes), each
+    group owns a per-group capacity C = ceil(cf * S_g * K / E), and a
+    one-hot dispatch tensor [G, S_g, E, C] routes tokens to expert buffers
+    [E, G, C, D] (expert dim sharded on "model" == EP; the contraction is
+    what SPMD lowers to the dispatch all-to-all). A gather/scatter
+    formulation is NOT shardable -- the data-dependent global gather forced
+    a 32 GiB/device all-gather of every token (see EXPERIMENTS.md).
+
+    position_in_expert is the paper's OLT compact-insert: an exclusive
+    prefix sum over each (group, expert) column (core.olt.batched_compact_
+    ranks) -- the atomicAdd replacement, vectorised twice over.
+
+    Dispatch einsum overhead ~= E*C*D/(K*3*D*F) of the expert FFN flops
+    (3% for jamba, ~30% for the fine-grained deepseek/moonshot experts at
+    group_size=1024; group_size is a recorded hillclimb knob).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def anchor(a, spec_entries):
+        if all(e is None for e in spec_entries):
+            return a
+        return jax.lax.with_sharding_constraint(a, P(*spec_entries))
+
+    B, S, D = x.shape
+    T = B * S
+    E, K = num_experts, top_k
+    Sg = min(group_size, T)
+    if T % Sg:
+        Sg = T  # degenerate small inputs: one group
+    G = T // Sg
+    tok = tuple(token_axes) if token_axes else None
+    xg = anchor(x.reshape(G, Sg, D), (tok, None, None))
+
+    # router in bf16 with f32 accumulation: avoids materialising an f32
+    # copy of the whole activation tensor just for the router matmul
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"]["w"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)  # [G, Sg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # [G, Sg, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- OLT insert: per-(group, expert) exclusive ranks --------------------
+    # flags [G, Sg*K, E]; rank along the Sg*K axis = position_in_expert
+    oh = jax.nn.one_hot(expert_ids.reshape(G, Sg * K), E, dtype=jnp.int32)
+    inc = jnp.cumsum(oh, axis=1)
+    ranks = inc - oh  # exclusive scan == batched_compact_ranks per group
+    pos = jnp.sum(ranks * oh, axis=-1).reshape(G, Sg, K)  # [G, Sg, K]
+    counts = inc[:, -1, :]  # [G, E] tokens routed per expert per group
+
+    C = max(1, int(capacity_factor * Sg * K / E))
+    keep = (pos < C).astype(jnp.float32)  # overflow dropped (residual path)
+
+    # ---- dispatch / combine one-hots ----------------------------------------
+    e_oh = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # [G,Sg,K,E]
+    c_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)  # [G,Sg,K,C]
+    combine = jnp.einsum("gske,gskc,gsk,gsk->gsec", e_oh, c_oh, keep,
+                         gate_vals)  # [G, Sg, E, C] f32
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # ---- expert buffers [E, G, C, D] (E on model, G on data) ----------------
+    buf = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    buf = anchor(buf, (ep_axis, tok, None, None))
+    ex = p["experts"]
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", buf, ex["gate"]))
+        h = h * jnp.einsum("egcd,edf->egcf", buf, ex["up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", buf, ex["up"]))
+    out = jnp.einsum("egcf,efd->egcd", h, ex["down"])
+    out = anchor(out, (ep_axis, tok, None, None))
+
+    # ---- combine back to tokens ---------------------------------------------
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), out)
+    y = anchor(y, (tok, None, None)).reshape(B, S, D)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act=act)
+
+    # ---- aux losses (GShard/Switch style) -----------------------------------
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert [E]
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))  # top-1 assignment fraction per expert [E]
+    load_balance = E * jnp.sum(me * ce)
+    router_z = router_z_weight * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"load_balance": load_balance, "router_z": router_z,
+           "expert_counts": jnp.sum(counts, axis=0)}
+    return y, aux
+
+
+def moe_apply_dense_fallback(p, x, *, num_experts: int, top_k: int,
+                             act: str = "swiglu"):
+    """Reference (oracle) MoE: every expert computes every token, masked by
+    router weights. O(E) FLOPs -- used only in tests to validate the OLT
+    dispatch path (with capacity_factor high enough that nothing drops)."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    w = jnp.zeros((T, num_experts), jnp.float32)
+    w = w.at[jnp.arange(T)[:, None], expert_ids].set(gate_vals)
+    ex = p["experts"]
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, ex["gate"]))
+        h = h * jnp.einsum("td,edf->tef", xt, ex["up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("td,edf->tef", xt, ex["up"]))
+    out = jnp.einsum("tef,efd->ted", h, ex["down"])
+    y = jnp.einsum("ted,te->td", out, w.astype(x.dtype))
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act=act)
+    return y

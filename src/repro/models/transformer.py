@@ -1,0 +1,492 @@
+"""Model assembly: pattern-of-blocks decoder (+ optional encoder) stacks.
+
+A model is ``num_groups`` repetitions of a fixed block *pattern*
+(``cfg.pattern``), scanned with ``jax.lax.scan`` over stacked group params:
+one compiled body per model regardless of depth -- this is what makes the
+40-cell dry-run compile on one CPU core, and is the production layout
+(Megatron/MaxText do the same). ``jax.checkpoint`` wraps the group body
+when ``cfg.remat``.
+
+Block = pre-norm mixer (+ residual) then pre-norm FFN (+ residual). Mixers:
+  attn        causal self-attention (GQA/MQA, rope, qk-norm)
+  attn_cross  self-attention followed by cross-attention (whisper decoder)
+  cross       cross-attention only (llama-3.2-vision media layers)
+  enc         bidirectional self-attention (whisper encoder)
+  mla         DeepSeek multi-head latent attention
+  mamba       selective SSM
+  mlstm/slstm xLSTM blocks (carry their own projections; ffn == none)
+
+Entry points (all pure, cfg static):
+  init_params(cfg, key)
+  forward(cfg, params, tokens, media=None)        -> logits  (training)
+  loss_fn(cfg, params, batch)                     -> scalar
+  init_cache(cfg, batch, cache_len)
+  prefill(cfg, params, tokens, media=None)        -> (logits, cache)
+  decode_step(cfg, params, cache, tokens, pos)    -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (dense_init, linear, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, sinusoidal_at,
+                                 sinusoidal_pos)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_slot(cfg: ArchConfig, spec: LayerSpec, key, *, encoder: bool = False):
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.norm, cfg.d_model, dt)}
+    hd = cfg.head_dim_
+    if spec.mixer in ("attn", "enc"):
+        p["mixer"] = attn_lib.attn_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd, bias=cfg.attn_bias,
+            qk_norm=cfg.qk_norm, dtype=dt)
+    elif spec.mixer == "cross":
+        p["mixer"] = attn_lib.attn_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd, bias=cfg.attn_bias,
+            qk_norm=cfg.qk_norm, dtype=dt)
+    elif spec.mixer == "attn_cross":
+        p["mixer"] = attn_lib.attn_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd, bias=cfg.attn_bias,
+            qk_norm=cfg.qk_norm, dtype=dt)
+        p["cross"] = attn_lib.attn_init(
+            ks[3], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=hd, bias=cfg.attn_bias,
+            qk_norm=False, dtype=dt)
+        p["norm_cross"] = norm_init(cfg.norm, cfg.d_model, dt)
+    elif spec.mixer == "mla":
+        m = cfg.mla
+        p["mixer"] = mla_lib.mla_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            kv_lora=m.kv_lora, d_nope=m.d_nope, d_rope=m.d_rope, d_v=m.d_v,
+            dtype=dt)
+    elif spec.mixer == "mamba":
+        mb = cfg.mamba
+        p["mixer"] = mamba_lib.mamba_init(
+            ks[0], d_model=cfg.d_model, d_state=mb.d_state, d_conv=mb.d_conv,
+            expand=mb.expand, dtype=dt)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_lib.mlstm_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads,
+            expand=cfg.lstm_expand, dtype=dt)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_lib.slstm_init(
+            ks[0], d_model=cfg.d_model, num_heads=cfg.num_heads, dtype=dt)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer!r}")
+
+    if spec.ffn == "mlp":
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model, dt)
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, act=cfg.act,
+                            bias=cfg.attn_bias, dtype=dt)
+    elif spec.ffn == "moe":
+        mo = cfg.moe
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model, dt)
+        p["ffn"] = moe_lib.moe_init(
+            ks[1], d_model=cfg.d_model, d_ff=mo.d_ff,
+            num_experts=mo.num_experts, top_k=mo.top_k,
+            num_shared=mo.num_shared, act=cfg.act, dtype=dt)
+    elif spec.ffn != "none":
+        raise ValueError(f"unknown ffn {spec.ffn!r}")
+    return p
+
+
+def _init_group(cfg: ArchConfig, key, *, encoder: bool = False):
+    pattern = (
+        (LayerSpec("enc", "mlp"),) if encoder else cfg.pattern)
+    ks = jax.random.split(key, len(pattern))
+    return {str(j): _init_slot(cfg, spec, ks[j], encoder=encoder)
+            for j, spec in enumerate(pattern)}
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    kE, kG, kH, kEnc = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": {"w": dense_init(kE, (cfg.padded_vocab, cfg.d_model), cfg.pdtype)},
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.pdtype),
+    }
+    gkeys = jax.random.split(kG, cfg.num_groups)
+    params["groups"] = jax.vmap(
+        functools.partial(_init_group, cfg))(gkeys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": dense_init(kH, (cfg.d_model, cfg.padded_vocab),
+                                             cfg.pdtype)}
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(kEnc, cfg.encoder_layers)
+        params["encoder"] = {
+            "groups": jax.vmap(functools.partial(
+                _init_group, cfg, encoder=True))(ekeys),
+            "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.pdtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(cfg: ArchConfig, spec: LayerSpec, p, x, *, memory, mode,
+                 cache=None, pos=None):
+    """mode: train | prefill | decode. Returns (out, new_cache)."""
+    hd = cfg.head_dim_
+    kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+              head_dim=hd, qk_norm=cfg.qk_norm, rope=cfg.rope,
+              rope_theta=cfg.rope_theta)
+    if spec.mixer == "enc":
+        out = attn_lib.attn_train(p["mixer"], x, causal=False,
+                                  q_chunk=cfg.q_chunk, **kw)
+        return out, None
+    if spec.mixer == "cross":
+        out = attn_lib.attn_train(p["mixer"], x, kv_x=memory,
+                                  q_chunk=cfg.q_chunk, **kw)
+        return out, None
+    if spec.mixer in ("attn", "attn_cross"):
+        if mode == "train":
+            out = attn_lib.attn_train(p["mixer"], x, q_chunk=cfg.q_chunk, **kw)
+            new_cache = None
+        elif mode == "prefill":
+            quant = cfg.kv_cache_dtype == "int8"
+            clen = (cache["k_q"] if quant else cache["k"]).shape[1]
+            out, new_cache = attn_lib.attn_prefill(
+                p["mixer"], x, cache_len=clen, q_chunk=cfg.q_chunk,
+                kv_quant=quant, **kw)
+        else:
+            out, new_cache = attn_lib.attn_decode(p["mixer"], x, cache, pos, **kw)
+        if spec.mixer == "attn_cross":
+            h = x + out  # residual for the self-attn half
+            xc = norm_apply(cfg.norm, p["norm_cross"], h)
+            out = attn_lib.attn_train(p["cross"], xc, kv_x=memory,
+                                      q_chunk=cfg.q_chunk, **kw) + out
+        return out, new_cache
+    if spec.mixer == "mla":
+        m = cfg.mla
+        mkw = dict(num_heads=cfg.num_heads, kv_lora=m.kv_lora, d_nope=m.d_nope,
+                   d_rope=m.d_rope, d_v=m.d_v, rope_theta=cfg.rope_theta)
+        if mode == "train":
+            return mla_lib.mla_train(p["mixer"], x, q_chunk=cfg.q_chunk, **mkw), None
+        if mode == "prefill":
+            return mla_lib.mla_prefill(p["mixer"], x,
+                                       cache_len=cache["c_kv"].shape[1],
+                                       q_chunk=cfg.q_chunk, **mkw)
+        return mla_lib.mla_decode(p["mixer"], x, cache, pos, **mkw)
+    if spec.mixer == "mamba":
+        mb = cfg.mamba
+        mkw = dict(d_state=mb.d_state, d_conv=mb.d_conv, expand=mb.expand)
+        if mode == "train":
+            return mamba_lib.mamba_train(p["mixer"], x, **mkw), None
+        if mode == "prefill":
+            return mamba_lib.mamba_train(p["mixer"], x, return_state=True, **mkw)
+        return mamba_lib.mamba_decode(p["mixer"], x, cache, **mkw)
+    if spec.mixer == "mlstm":
+        lkw = dict(num_heads=cfg.num_heads, expand=cfg.lstm_expand,
+                   q_chunk=cfg.q_chunk)
+        dkw = dict(num_heads=cfg.num_heads, expand=cfg.lstm_expand)
+        if mode == "train":
+            return xlstm_lib.mlstm_train(p["mixer"], x, **lkw), None
+        if mode == "prefill":
+            return xlstm_lib.mlstm_train(p["mixer"], x, return_state=True, **lkw)
+        return xlstm_lib.mlstm_decode(p["mixer"], x, cache, **dkw)
+    if spec.mixer == "slstm":
+        if mode == "train":
+            return xlstm_lib.slstm_train(p["mixer"], x,
+                                         num_heads=cfg.num_heads), None
+        if mode == "prefill":
+            return xlstm_lib.slstm_train(p["mixer"], x,
+                                         num_heads=cfg.num_heads,
+                                         return_state=True)
+        return xlstm_lib.slstm_decode(p["mixer"], x, cache,
+                                      num_heads=cfg.num_heads)
+    raise ValueError(spec.mixer)
+
+
+def _apply_block(cfg: ArchConfig, spec: LayerSpec, p, h, *, memory, mode,
+                 cache=None, pos=None):
+    x = norm_apply(cfg.norm, p["norm1"], h)
+    out, new_cache = _apply_mixer(cfg, spec, p, x, memory=memory, mode=mode,
+                                  cache=cache, pos=pos)
+    h = h + out
+    aux = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+    if spec.ffn != "none":
+        x = norm_apply(cfg.norm, p["norm2"], h)
+        if spec.ffn == "mlp":
+            h = h + mlp_apply(p["ffn"], x, act=cfg.act)
+        else:
+            mo = cfg.moe
+            y, moe_aux = moe_lib.moe_apply(
+                p["ffn"], x, num_experts=mo.num_experts, top_k=mo.top_k,
+                capacity_factor=mo.capacity_factor, act=cfg.act,
+                ep_axis=cfg.ep_axis, token_axes=cfg.act_sharding,
+                group_size=mo.group_size)
+            h = h + y
+            aux = {"load_balance": moe_aux["load_balance"],
+                   "router_z": moe_aux["router_z"]}
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _anchor(cfg: ArchConfig, x):
+    """Pin the batch axis of [B, ...] activations to the data mesh axes
+    (cfg.act_sharding; a no-op when unset or when B doesn't divide)."""
+    if cfg.act_sharding is None or x is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.act_sharding), *([None] * (x.ndim - 1))))
+
+
+def _run_stack(cfg: ArchConfig, groups, h, *, memory=None, mode="train",
+               cache=None, pos=None, pattern=None):
+    """Scan the group pattern over stacked params (and cache, if any)."""
+    pattern = pattern or cfg.pattern
+
+    # Nested remat: the scan body saves only group-boundary activations;
+    # inside the (recomputed) group each block is itself checkpointed, so
+    # the backward live set is ONE block's internals + per-block boundaries
+    # -- without the inner level, a jamba group (8 blocks) held ~50 f32
+    # [B,S,D] intermediates at once (76 GiB/device; EXPERIMENTS.md).
+    inner_remat = cfg.remat and mode == "train" and len(pattern) > 1
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if cfg.remat_policy == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def group_fn(carry, xs):
+        h, aux = carry
+        h = _anchor(cfg, h)
+        gp = xs["params"]
+        gc = xs.get("cache")
+        new_gc = {}
+        for j, spec in enumerate(pattern):
+            c_j = gc.get(str(j)) if gc is not None else None
+            blk = functools.partial(_apply_block, cfg, spec, memory=memory,
+                                    mode=mode, cache=c_j, pos=pos)
+            if inner_remat:
+                blk = jax.checkpoint(blk, policy=policy)
+            h, nc, a = blk(gp[str(j)], h)
+            if nc is not None:
+                new_gc[str(j)] = nc
+            aux = {k: aux[k] + a[k] for k in aux}
+        return (h, aux), (new_gc if new_gc else None)
+
+    body = group_fn
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_fn, policy=policy)
+
+    xs = {"params": groups}
+    if cache is not None:
+        xs["cache"] = cache
+    (h, aux), caches = jax.lax.scan(body, (h, _zero_aux()), xs)
+    return h, aux, caches
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    h = params["embed"]["w"][tokens].astype(cfg.cdtype)
+    return _anchor(cfg, h * jnp.sqrt(cfg.d_model).astype(cfg.cdtype))
+
+
+def _head(cfg: ArchConfig, params, h):
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].T
+    return linear(params["lm_head"], h)
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """Whisper encoder over stub frame embeddings [B, T, D] (conv frontend
+    is a stub per the assignment: input_specs provides these directly)."""
+    h = frames.astype(cfg.cdtype) + sinusoidal_pos(
+        frames.shape[1], cfg.d_model, cfg.cdtype)[None]
+    enc = params["encoder"]
+    pat = (LayerSpec("enc", "mlp"),)
+    h, _, _ = _run_stack(cfg, enc["groups"], h, mode="train", pattern=pat)
+    return norm_apply(cfg.norm, enc["final_norm"], h)
+
+
+def forward(cfg: ArchConfig, params, tokens, media=None):
+    """Training/eval forward -> logits [B, S, padded_vocab].
+
+    ``media``: vlm -> [B, M, D] patch embeddings (cross-attn memory);
+    audio -> [B, T, D] frame embeddings (run through the encoder first)."""
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(cfg, params, media)
+    elif cfg.num_media_tokens:
+        memory = media.astype(cfg.cdtype)
+    h = _embed(cfg, params, tokens)
+    if cfg.rope == "none" and cfg.family == "audio":
+        h = h + sinusoidal_pos(tokens.shape[1], cfg.d_model, cfg.cdtype)[None]
+    h, aux, _ = _run_stack(cfg, params["groups"], h, memory=memory,
+                           mode="train")
+    return _head(cfg, params, h), aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, lb_weight: float = 0.01):
+    """batch: {"tokens": [B,S], "labels": [B,S]} (+ "media"/"frames")."""
+    logits, aux = forward(cfg, params, batch["tokens"], batch.get("media"))
+    logits = logits.astype(jnp.float32)
+    V = cfg.padded_vocab
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab_size)
+    ce = jnp.sum(jnp.where(mask, logz - gold, 0.0)) / jnp.maximum(
+        jnp.sum(mask), 1)
+    zl = 1e-4 * jnp.mean(jnp.square(logz))
+    total = ce + zl + lb_weight * aux["load_balance"] + aux["router_z"]
+    return total, {"ce": ce, "z_loss": zl, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _slot_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int):
+    dt = cfg.cdtype
+    hd = cfg.head_dim_
+    if spec.mixer in ("attn", "attn_cross"):
+        shape = (batch, cache_len, cfg.num_kv_heads, hd)
+        if cfg.kv_cache_dtype == "int8":
+            sshape = shape[:-1]
+            return {"k_q": jnp.zeros(shape, jnp.int8),
+                    "k_s": jnp.zeros(sshape, jnp.float32),
+                    "v_q": jnp.zeros(shape, jnp.int8),
+                    "v_s": jnp.zeros(sshape, jnp.float32)}
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, cache_len, m.kv_lora), dt),
+                "k_rope": jnp.zeros((batch, cache_len, m.d_rope), dt)}
+    if spec.mixer == "mamba":
+        mb = cfg.mamba
+        return mamba_lib.mamba_init_cache(
+            batch, d_model=cfg.d_model, d_state=mb.d_state, d_conv=mb.d_conv,
+            expand=mb.expand, dtype=dt)
+    if spec.mixer == "mlstm":
+        return xlstm_lib.mlstm_init_cache(batch, d_model=cfg.d_model,
+                                          num_heads=cfg.num_heads,
+                                          expand=cfg.lstm_expand)
+    if spec.mixer == "slstm":
+        return xlstm_lib.slstm_init_cache(batch, d_model=cfg.d_model)
+    return None  # cross / enc have no decode cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Stacked-over-groups cache pytree matching the scan layout."""
+    def one_group(_):
+        return {str(j): c for j, spec in enumerate(cfg.pattern)
+                if (c := _slot_cache(cfg, spec, batch, cache_len)) is not None}
+    sample = one_group(0)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_groups,) + x.shape).copy(),
+        sample)
+
+
+def prefill(cfg: ArchConfig, params, tokens, media=None):
+    """Run the prompt, return (last-position logits [B, V], cache)."""
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(cfg, params, media)
+    elif cfg.num_media_tokens:
+        memory = media.astype(cfg.cdtype)
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens)
+    if cfg.rope == "none" and cfg.family == "audio":
+        h = h + sinusoidal_pos(S, cfg.d_model, cfg.cdtype)[None]
+    cache = init_cache(cfg, B, S)
+    h, _, caches = _run_stack(cfg, params["groups"], h, memory=memory,
+                              mode="prefill", cache=cache)
+    logits = _head(cfg, params, h[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, media=None,
+                memory=None):
+    """One decode step. tokens [B, 1]; pos: scalar int32 write position.
+    Returns (logits [B, V], new cache)."""
+    if memory is None and cfg.num_media_tokens and media is not None:
+        memory = media.astype(cfg.cdtype)
+    h = _embed(cfg, params, tokens)
+    if cfg.rope == "none" and cfg.family == "audio":
+        h = h + sinusoidal_at(pos, cfg.d_model, cfg.cdtype)[None, None]
+    h, _, caches = _run_stack(cfg, params["groups"], h, memory=memory,
+                              mode="decode", cache=cache, pos=pos)
+    logits = _head(cfg, params, h)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter count (for MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    D, hd = cfg.d_model, cfg.head_dim_
+    H, Hkv = cfg.num_heads, cfg.num_kv_heads
+    n = cfg.padded_vocab * D  # embed
+    if not cfg.tie_embeddings:
+        n += D * cfg.padded_vocab
+    n += D  # final norm (+b ignored; negligible)
+
+    def slot_params(spec: LayerSpec) -> int:
+        s = D  # norm1
+        if spec.mixer in ("attn", "enc", "cross"):
+            s += D * H * hd + 2 * D * Hkv * hd + H * hd * D
+        elif spec.mixer == "attn_cross":
+            s += 2 * (D * H * hd + 2 * D * Hkv * hd + H * hd * D) + D
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            s += (D * H * (m.d_nope + m.d_rope) + D * m.kv_lora + m.kv_lora
+                  + m.kv_lora * H * m.d_nope + m.kv_lora * H * m.d_v
+                  + D * m.d_rope + H * m.d_v * D)
+        elif spec.mixer == "mamba":
+            mb = cfg.mamba
+            di = mb.expand * D
+            dtr = max(1, D // 16)
+            s += (D * 2 * di + mb.d_conv * di + di
+                  + di * (dtr + 2 * mb.d_state) + dtr * di + di
+                  + di * mb.d_state + di + di * D)
+        elif spec.mixer == "mlstm":
+            di = cfg.lstm_expand * D
+            s += D * 2 * di + 4 * di * di + 2 * di * H + di * D
+        elif spec.mixer == "slstm":
+            s += 4 * D * D + D * 2 * D + 2 * D * D
+        if spec.ffn == "mlp":
+            s += D + (3 if cfg.act == "swiglu" else 2) * D * cfg.d_ff
+        elif spec.ffn == "moe":
+            mo = cfg.moe
+            per_expert = 3 * D * mo.d_ff
+            experts = mo.top_k if active_only else mo.num_experts
+            s += D + D * mo.num_experts + experts * per_expert
+            if mo.num_shared:
+                s += 3 * D * (mo.d_ff * mo.num_shared)
+        return s
+
+    for spec in cfg.pattern:
+        n += cfg.num_groups * slot_params(spec)
+    if cfg.encoder_layers:
+        n += cfg.encoder_layers * slot_params(LayerSpec("enc", "mlp")) + D
+    return int(n)

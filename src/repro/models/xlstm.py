@@ -1,0 +1,260 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows the xLSTM paper's block structure (arXiv:2405.04517): both blocks
+carry their own up/down projections (the assigned config has d_ff = 0 --
+there is no separate FFN). Exponential gating is stabilised with the
+max-state m (log-space), recurrences run as lax.scan over time for training
+and single-step updates for decode. Decode state is O(1) in sequence
+length, so xlstm runs the ``long_500k`` cell (DESIGN.md Sec. 6).
+
+mLSTM state per head: C [dh, dh] matrix memory, n [dh] normaliser, m [] max.
+sLSTM state per head: c, n, m scalars per hidden unit (head-structured).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import linear, linear_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, *, d_model: int, num_heads: int, expand: int = 2,
+               dtype=jnp.float32):
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "up": linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "wq": linear_init(ks[1], d_inner, d_inner, dtype=dtype),
+        "wk": linear_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "wv": linear_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "wi": linear_init(ks[4], d_inner, num_heads, bias=True, dtype=dtype),
+        "wf": linear_init(ks[5], d_inner, num_heads, bias=True, dtype=dtype),
+        "wo_gate": linear_init(ks[6], d_inner, d_inner, dtype=dtype),
+        "down": linear_init(ks[7], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_step(qkvif, state, *, num_heads, dh):
+    """One time step. qkvif: per-step projections; state: (C, n, m)."""
+    q, k, v, i_pre, f_pre = qkvif
+    C, n, m = state
+    B = q.shape[0]
+    qh = q.reshape(B, num_heads, dh).astype(jnp.float32)
+    kh = k.reshape(B, num_heads, dh).astype(jnp.float32) / jnp.sqrt(dh)
+    vh = v.reshape(B, num_heads, dh).astype(jnp.float32)
+    i_pre = i_pre.astype(jnp.float32)  # [B, H]
+    f_pre = f_pre.astype(jnp.float32)
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (
+        vh[..., :, None] * kh[..., None, :])  # [B,H,dh,dh] += v k^T
+    n = f_g[..., None] * n + i_g[..., None] * kh
+    num = jnp.einsum("bhvk,bhk->bhv", C, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qh)), 1.0)
+    h = num / den[..., None]  # [B, H, dh]
+    return (C, n, m_new), h.reshape(B, num_heads * dh)
+
+
+def mlstm_train(p, x, *, num_heads: int, expand: int = 2,
+                return_state: bool = False, parallel: bool = True,
+                q_chunk=None):
+    """Training-mode mLSTM.
+
+    ``parallel=True`` (default) uses the chunk-free *parallel form* of the
+    exponential-gated recurrence -- a linear-attention-style masked matmul:
+
+      D_ts = F_t - F_s + i_s  (s <= t),  F_t = cumsum(f_pre)
+      m_t  = max_s D_ts       (identical to the recurrent stabiliser)
+      h_t  = [sum_s e^{D_ts - m_t} (k_s . q_t) v_s]
+             / max(|sum_s e^{D_ts - m_t} (k_s . q_t)|, 1)
+
+    This matches ``_mlstm_step`` exactly (same stabilisation) while being
+    O(S^2) matmul work instead of an S-step scan whose AD would store the
+    [B, H, dh, dh] matrix state per timestep (~275 GB/device at
+    train_4k -- the reason a naive recurrent train pass is untrainable).
+
+    ``parallel=False`` keeps the recurrent path (used by equivalence tests).
+    """
+    B, S, D = x.shape
+    d_inner = expand * D
+    dh = d_inner // num_heads
+    xz = linear(p["up"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    q = linear(p["wq"], xs)
+    k = linear(p["wk"], xs)
+    v = linear(p["wv"], xs)
+    i_pre = linear(p["wi"], xs).astype(jnp.float32)  # [B, S, H]
+    f_pre = linear(p["wf"], xs).astype(jnp.float32)
+
+    if parallel:
+        qh = q.reshape(B, S, num_heads, dh).astype(jnp.float32)
+        kh = k.reshape(B, S, num_heads, dh).astype(jnp.float32) / jnp.sqrt(dh)
+        vh = v.reshape(B, S, num_heads, dh).astype(jnp.float32)
+        F = jnp.cumsum(f_pre, axis=1)  # [B, S, H]
+        a = i_pre - F  # a_s = i_s - F_s
+        Ft = F.transpose(0, 2, 1)  # [B, H, S]
+        at = a.transpose(0, 2, 1)
+        s_pos = jnp.arange(S)
+
+        def rows(q_rows, F_rows, t_pos):
+            """h for query rows t_pos: [B, qc, H, dh]."""
+            Dm = F_rows[..., None] + at[:, :, None, :]  # [B, H, qc, S]
+            ok = s_pos[None, :] <= t_pos[:, None]
+            Dm = jnp.where(ok[None, None], Dm, -jnp.inf)
+            # the recurrence starts from m_0 = 0, which floors the
+            # stabiliser at F_t (the pure-decay path): m_t >= F_t
+            m = jnp.maximum(jnp.max(Dm, axis=-1), F_rows)
+            W = jnp.exp(Dm - m[..., None])
+            sc = jnp.einsum("bthd,bshd->bhts", q_rows, kh)
+            WS = W * sc
+            num = jnp.einsum("bhts,bshd->bthd", WS, vh)
+            den = jnp.maximum(jnp.abs(jnp.sum(WS, axis=-1)), 1.0)
+            return num / den.transpose(0, 2, 1)[..., None]
+
+        if q_chunk is None or q_chunk >= S or S % q_chunk:
+            h = rows(qh, Ft, s_pos)
+        else:
+            # chunked over query rows: the [B, H, qc, S] decay matrix is
+            # the memory hot spot at 32k (68 GiB/device unchunked;
+            # EXPERIMENTS.md Sec. Perf notes)
+            nc = S // q_chunk
+            qs = qh.reshape(B, nc, q_chunk, num_heads, dh).transpose(
+                1, 0, 2, 3, 4)
+            Fs = Ft.reshape(B, num_heads, nc, q_chunk).transpose(2, 0, 1, 3)
+            ts = s_pos.reshape(nc, q_chunk)
+            _, hs = jax.lax.scan(
+                lambda _, c: (None, rows(*c)), None, (qs, Fs, ts))
+            h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, num_heads, dh)
+        h = h.reshape(B, S, d_inner)
+        hs_out = h
+        if return_state:
+            # m_S = F_S + max(0, max_s a_s): unrolled recurrent stabiliser
+            # including the m_0 = 0 floor
+            m_S = Ft[:, :, -1] + jnp.maximum(jnp.max(at, axis=-1), 0.0)
+            # w_s = exp(F_S + a_s - m_S): [B, H, S]
+            w_last = jnp.exp(F[:, -1][:, :, None] + a.transpose(0, 2, 1)
+                             - m_S[..., None])
+            C = jnp.einsum("bhs,bshv,bshk->bhvk", w_last, vh, kh)
+            n = jnp.einsum("bhs,bshk->bhk", w_last, kh)
+            state = (C, n, m_S)
+    else:
+        C0 = jnp.zeros((B, num_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, num_heads, dh), jnp.float32)
+        m0 = jnp.zeros((B, num_heads), jnp.float32)
+
+        def step(state, t):
+            state, h = _mlstm_step(t, state, num_heads=num_heads, dh=dh)
+            return state, h
+
+        seq = tuple(a.transpose(1, 0, 2) for a in (q, k, v, i_pre, f_pre))
+        state, hs = jax.lax.scan(step, (C0, n0, m0), seq)
+        hs_out = hs.transpose(1, 0, 2)
+
+    h = hs_out.astype(x.dtype)
+    h = h * jax.nn.sigmoid(linear(p["wo_gate"], xs))
+    y = h * jax.nn.silu(z)
+    out = linear(p["down"], y)
+    if return_state:
+        return out, {"C": state[0], "n": state[1], "m": state[2]}
+    return out
+
+
+def mlstm_init_cache(batch: int, *, d_model: int, num_heads: int,
+                     expand: int = 2):
+    d_inner = expand * d_model
+    dh = d_inner // num_heads
+    return {
+        "C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.zeros((batch, num_heads), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cache, *, num_heads: int, expand: int = 2):
+    B, _, D = x.shape
+    d_inner = expand * D
+    dh = d_inner // num_heads
+    xz = linear(p["up"], x[:, 0])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    t = (linear(p["wq"], xs), linear(p["wk"], xs), linear(p["wv"], xs),
+         linear(p["wi"], xs), linear(p["wf"], xs))
+    state = (cache["C"], cache["n"], cache["m"])
+    state, h = _mlstm_step(t, state, num_heads=num_heads, dh=dh)
+    h = h.astype(x.dtype) * jax.nn.sigmoid(linear(p["wo_gate"], xs))
+    y = h * jax.nn.silu(z)
+    out = linear(p["down"], y)[:, None, :]
+    return out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, *, d_model: int, num_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": linear_init(ks[0], d_model, d_model, bias=True, dtype=dtype),
+        "wi": linear_init(ks[1], d_model, d_model, bias=True, dtype=dtype),
+        "wf": linear_init(ks[2], d_model, d_model, bias=True, dtype=dtype),
+        "wo": linear_init(ks[3], d_model, d_model, bias=True, dtype=dtype),
+        "up": linear_init(ks[4], d_model, 2 * d_model, dtype=dtype),
+        "down": linear_init(ks[5], 2 * d_model, d_model, dtype=dtype),
+    }
+
+
+def _slstm_step(zifo, state):
+    z_pre, i_pre, f_pre, o_pre = (a.astype(jnp.float32) for a in zifo)
+    c, n, m = state
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_pre)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new), h
+
+
+def slstm_train(p, x, *, num_heads: int, return_state: bool = False):
+    B, S, D = x.shape
+    z = linear(p["wz"], x)
+    i = linear(p["wi"], x)
+    f = linear(p["wf"], x)
+    o = linear(p["wo"], x)
+    c0 = n0 = m0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(state, t):
+        state, h = _slstm_step(t, state)
+        return state, h
+
+    seq = tuple(a.transpose(1, 0, 2) for a in (z, i, f, o))
+    state, hs = jax.lax.scan(step, (c0, n0, m0), seq)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    up = linear(p["up"], h)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = linear(p["down"], jnp.concatenate([jax.nn.gelu(a), b], axis=-1))
+    if return_state:
+        return out, {"c": state[0], "n": state[1], "m": state[2]}
+    return out
+
+
+def slstm_init_cache(batch: int, *, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z, "m": z}
+
+
+def slstm_decode(p, x, cache, *, num_heads: int):
+    xs = x[:, 0]
+    t = (linear(p["wz"], xs), linear(p["wi"], xs),
+         linear(p["wf"], xs), linear(p["wo"], xs))
+    state, h = _slstm_step(t, (cache["c"], cache["n"], cache["m"]))
+    h = h.astype(x.dtype)
+    up = linear(p["up"], h)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = linear(p["down"], jnp.concatenate([jax.nn.gelu(a), b], axis=-1))
+    return out[:, None, :], {"c": state[0], "n": state[1], "m": state[2]}

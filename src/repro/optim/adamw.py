@@ -1,0 +1,85 @@
+"""AdamW with f32 master weights, built for ZeRO-sharded pytrees.
+
+State = {"master": f32 copy of params, "m": f32, "v": f32, "step": i32}.
+Every leaf of master/m/v inherits the parameter's sharding (launch/
+sharding.py gives optimizer state the same PartitionSpec as its param),
+so with FSDP enabled the whole optimizer is ZeRO-3 sharded: the update is
+purely local, no collectives beyond the gradient reduction the backward
+pass already performed.
+
+Gradients arrive in compute dtype; the update runs in f32 and re-casts the
+bf16 working copy from the master.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params,
+                 lr_scale: jax.Array | float = 1.0) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    unflat = treedef.unflatten
+    new_state = {"master": unflat(new_w), "m": unflat(new_m),
+                 "v": unflat(new_v), "step": step}
+    pdtypes = jax.tree_util.tree_map(lambda x: x.dtype, params)
+    new_params = jax.tree_util.tree_map(
+        lambda w, dt: w.astype(dt), new_state["master"], pdtypes)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

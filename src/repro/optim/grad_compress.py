@@ -1,0 +1,60 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At multi-pod scale the ``pod`` axis rides DCN, which is an order of
+magnitude slower than ICI; compressing the pod-axis gradient all-reduce
+8x (f32->int8 with per-leaf scale) is a standard distributed-optimization
+trick. Error feedback keeps the quantisation *residual* locally and adds
+it back next step, preserving convergence (Seide et al., Karimireddy et
+al.).
+
+Honesty note (measured, EXPERIMENTS.md Sec. Perf extras): in the current
+global-view train_step the quantisation runs AFTER XLA's automatic
+gradient reduction, so the dry-run shows no collective-byte savings --
+the error-feedback machinery and its conservation property are tested
+building blocks, but routing the pod-axis reduce-scatter itself through
+int8 needs a shard_map custom reduction (recorded future work). The
+module exposes pure quantise/dequantise plus the residual-carrying
+wrapper so it drops into that scheme unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Quantise (grads + residual); return (dequantised grads for the
+    update, new residual). Residual pytree matches grads (f32)."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return deq, target - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    return deq, new_r
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)

@@ -1,0 +1,70 @@
+"""ASK-refined block-sparse decode attention vs exact oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adaptive_attention import (adaptive_decode_attention,
+                                           build_envelope_pyramid,
+                                           exact_decode_attention)
+
+
+def _qkv(Bt=2, S=512, H=4, dh=32, seed=0, peaked=True):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (Bt, H, dh))
+    k = 0.3 * jax.random.normal(ks[1], (Bt, S, H, dh))
+    v = jax.random.normal(ks[2], (Bt, S, H, dh))
+    if peaked:
+        # plant a few decisively high-affinity keys (the "dense region");
+        # with weak peaks the mass is genuinely diffuse and no sparse
+        # method can capture it -- that regime is covered by the
+        # full-capacity exactness test instead
+        hot = jax.random.randint(ks[3], (Bt, H, 8), 0, S)
+        for b in range(Bt):
+            for h in range(H):
+                k = k.at[b, hot[b, h], h].set(q[b, h] * 3.0)
+    return q, k, v
+
+
+def test_envelope_bounds_are_upper_bounds():
+    q, k, _ = _qkv()
+    pyr = build_envelope_pyramid(k, g=8, r=2, B=64)
+    kmin, kmax = pyr[0]  # coarse level: 8 blocks
+    Bt, nb, H, dh = kmin.shape
+    ub = jnp.sum(jnp.maximum(q[:, None] * kmin, q[:, None] * kmax), -1)
+    scores = jnp.einsum("bhd,bshd->bsh", q, k).reshape(Bt, nb, -1, H)
+    true_max = jnp.max(scores, axis=2)
+    assert bool(jnp.all(ub >= true_max - 1e-5))
+
+
+def test_full_capacity_equals_exact():
+    q, k, v = _qkv()
+    want = exact_decode_attention(q, k, v)
+    got, stats = adaptive_decode_attention(
+        q, k, v, g=8, r=2, B=64, margin=1e9, capacity=8)  # all 8 leaves
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_peaked_attention_recovered_sparsely(seed):
+    """With planted hot keys, a small capacity recovers the exact output
+    to high accuracy (the ASK refinement finds the dense regions)."""
+    q, k, v = _qkv(S=1024, seed=seed)
+    want = exact_decode_attention(q, k, v)
+    got, stats = adaptive_decode_attention(
+        q, k, v, g=16, r=2, B=32, margin=12.0, capacity=8)  # 8/32 blocks
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 5e-2, err
+    assert float(stats["kept_fraction"].mean()) <= 0.25 + 1e-6
+
+
+def test_live_len_masking():
+    q, k, v = _qkv(S=256)
+    want = exact_decode_attention(q, k, v, live_len=100)
+    got, _ = adaptive_decode_attention(
+        q, k, v, g=8, r=2, B=16, margin=1e9, capacity=16, live_len=100)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)

@@ -1,0 +1,68 @@
+"""System tests for the subdivision engines: ASK == fused ASK == DP == Ex,
+plus the structural claims of the paper (launch counts, OLT sizes)."""
+
+import numpy as np
+import pytest
+
+from repro.core.ask import _num_levels
+from repro.mandelbrot import MandelbrotProblem, solve
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("g,r,B", [(2, 2, 16), (4, 2, 8), (2, 4, 8)])
+def test_all_methods_agree(backend, g, r, B):
+    prob = MandelbrotProblem(n=128, g=g, r=r, B=B, max_dwell=32,
+                             backend=backend)
+    ex, _ = solve(prob, "ex")
+    ask, st_ask = solve(prob, "ask")
+    fused, st_fused = solve(prob, "ask_fused")
+    ex, ask, fused = map(np.asarray, (ex, ask, fused))
+    np.testing.assert_array_equal(ask, ex)
+    np.testing.assert_array_equal(fused, ex)
+    assert st_fused.overflow_dropped == 0
+
+
+def test_dp_agrees_and_launch_counts():
+    """ASK launches one kernel per level (+leaf); DP launches one per tree
+    node -- the paper's structural claim about lambda overhead."""
+    prob = MandelbrotProblem(n=128, g=2, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    ask, st_ask = solve(prob, "ask")
+    dp, st_dp = solve(prob, "dp")
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(ask))
+    levels = _num_levels(128, 2, 2, 16)
+    assert st_ask.kernel_launches <= levels + 1
+    assert st_dp.kernel_launches > st_ask.kernel_launches  # DP overhead
+    # every ASK level processed at least one region
+    assert all(c > 0 for c in st_ask.region_counts)
+
+
+def test_fused_single_dispatch():
+    prob = MandelbrotProblem(n=64, g=2, r=2, B=8, max_dwell=16,
+                             backend="jnp")
+    _, st = solve(prob, "ask_fused")
+    assert st.kernel_launches == 1  # whole pipeline is one XLA program
+
+
+@pytest.mark.parametrize("scheme", ["sbr", "mbr"])
+def test_sbr_mbr_equivalent_results(scheme):
+    """SBR vs MBR is a parallel-mapping choice; results must be identical
+    (paper Sec. 4.3)."""
+    prob = MandelbrotProblem(n=64, g=2, r=2, B=8, max_dwell=16,
+                             scheme=scheme, tile=4, backend="pallas")
+    ask, _ = solve(prob, "ask")
+    ex, _ = solve(prob, "ex")
+    np.testing.assert_array_equal(np.asarray(ask), np.asarray(ex))
+
+
+def test_work_tracking_matches_cost_model_shape():
+    """Region counts decay roughly geometrically for the Mandelbrot set
+    (SSD property: subdivision probability ~constant across levels)."""
+    prob = MandelbrotProblem(n=256, g=4, r=2, B=8, max_dwell=64,
+                             backend="jnp")
+    _, st = solve(prob, "ask")
+    counts = st.region_counts
+    assert counts[0] == 16
+    # counts never exceed the exhaustive grid at that level
+    for i, c in enumerate(counts):
+        assert c <= (4 * 2 ** i) ** 2

@@ -1,0 +1,95 @@
+"""Cost-model tests: equation identities + hypothesis invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+
+
+def test_exhaustive_work_eq2():
+    assert cm.w_exhaustive(1024, 512) == 1024 * 1024 * 512
+
+
+def test_tau_levels_eq():
+    # tau = log_r(n/(gB)); n=1024, g=2, B=32, r=2 -> log2(16) = 4
+    assert cm.tau_levels(1024, 2, 2, 32) == pytest.approx(4.0)
+
+
+def test_general_matches_ssd_form():
+    """Eq. (16) with constant P/Q/S/T must equal the SSD Mandelbrot
+    specialisation Eq. (20)."""
+    n, A, P, lam, g, r, B = 4096, 512.0, 0.6, 10.0, 4, 2, 32
+    G, R = g * g, r * r
+    tau = int(np.floor(cm.tau_levels(n, g, r, B)))
+    Q = [4 * n * A / (g * r ** i) for i in range(tau - 1)]
+    S = [lam * A] * (tau - 1)
+    T = [n * n / (G * R ** i) for i in range(tau - 1)]
+    general = cm.w_subdivision_general(
+        n, [P] * (tau - 1), Q=Q, S=S, T=T, A=A, G=G, R=R)
+    ssd = float(cm.w_ssd_mandelbrot(n, A, P, lam, g, r, B))
+    assert general == pytest.approx(ssd, rel=1e-12)
+
+
+grb = st.sampled_from([2, 4, 8, 16, 32, 64, 128])
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n=st.sampled_from([1024, 4096, 16384, 65536]),
+    A=st.sampled_from([32.0, 512.0, 4096.0]),
+    P=st.floats(0.05, 0.98),
+    lam=st.sampled_from([1.0, 100.0, 1e4]),
+    g=grb, r=grb, B=grb,
+)
+def test_omega_upper_bounded_by_A(n, A, P, lam, g, r, B):
+    """Paper Sec. 4.2.2/8: the work-reduction factor is upper bounded by
+    A. Follows from coverage: every element is written at least once, so
+    W_SSD >= n^2."""
+    w = float(cm.w_ssd_mandelbrot(n, A, P, lam, g, r, B))
+    assert np.isfinite(w) and w > 0
+    if cm.valid_grb(n, g, r, B):
+        assert w >= n * n * 0.999  # coverage lower bound
+    assert float(cm.omega(n, A, P, lam, g, r, B)) <= A * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    n=st.sampled_from([4096, 65536]),
+    P=st.floats(0.05, 0.95),
+    lam=st.sampled_from([1.0, 100.0]),
+    g=grb, r=grb, B=grb,
+)
+def test_parallel_times_positive_and_bounded(n, P, lam, g, r, B):
+    A = 512.0
+    mach = cm.Machine(q=128, c=64)
+    t_ex = float(cm.t_exhaustive(n, A, mach))
+    t_s = float(cm.t_sbr(n, A, P, lam, g, r, B, mach))
+    t_m = float(cm.t_mbr(n, A, P, lam, g, r, B, mach))
+    assert t_ex > 0 and np.isfinite(t_s) and np.isfinite(t_m)
+    assert t_s > 0 and t_m > 0
+    # speedups cannot exceed A by more than ceil slack (paper: bound = A)
+    assert t_ex / t_s <= A * 1.01
+    assert t_ex / t_m <= A * 1.01
+
+
+def test_optimal_grb_matches_paper_regime():
+    """Paper abstract: optimal scheme has g in [2,16], r in {2,4},
+    B ~ 32 for parallel time at large n."""
+    params = cm.SSDParams(n=65536, A=512.0, P=0.75, lam=64.0)
+    best = cm.search_optimal_grb(params, metric="sbr")
+    assert best.r in (2, 4)
+    assert 2 <= best.g <= 64
+    assert 8 <= best.B <= 128
+
+
+def test_work_optimum_prefers_small_r():
+    params = cm.SSDParams(n=16384, A=512.0, P=0.7, lam=10.0)
+    best = cm.search_optimal_grb(params, metric="work")
+    assert best.r == 2  # Fig. 3: r ~ 2 is optimal for work
+
+
+def test_degenerate_grb_falls_back_to_exhaustive():
+    # g*B > n -> no subdivision possible -> exhaustive work
+    w = float(cm.w_ssd_mandelbrot(256, 64.0, 0.5, 1.0, 1024, 2, 1024))
+    assert w == pytest.approx(256 * 256 * 64.0)

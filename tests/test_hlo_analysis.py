@@ -1,0 +1,58 @@
+"""Unit tests for the loop-weighted collective-bytes HLO parser."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import collective_bytes, split_computations
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %body.1 (arg: (s32[], bf16[128,64])) -> (s32[], bf16[128,64]) {
+      %p = (s32[], bf16[128,64]) parameter(0)
+      %ar = bf16[128,64]{1,0} all-reduce(%x), replica_groups={}
+      ROOT %t = (s32[], bf16[128,64]) tuple(%i, %ar)
+    }
+
+    %cond.1 (arg: (s32[], bf16[128,64])) -> pred[] {
+      %p2 = (s32[], bf16[128,64]) parameter(0)
+      %gte = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(12)
+      ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+    }
+
+    ENTRY %main (a: bf16[256,64]) -> bf16[256,64] {
+      %a = bf16[256,64] parameter(0)
+      %ag = bf16[512,64]{1,0} all-gather(%a), dimensions={0}
+      %w = (s32[], bf16[128,64]) while(%init), condition=%cond.1, body=%body.1
+      %cp = f32[64]{0} collective-permute(%b), source_target_pairs={{0,1}}
+      %ars = (bf16[32,8]{1,0}, bf16[32,8]{1,0}) all-reduce-start(%c2)
+      ROOT %r = bf16[256,64] add(%x2, %y2)
+    }
+    """)
+
+
+def test_split_computations():
+    comps = split_computations(HLO)
+    names = set(comps)
+    assert any(n.startswith("__entry__") for n in names)
+    assert "body.1" in names and "cond.1" in names
+
+
+def test_collective_bytes_loop_weighted():
+    rep = collective_bytes(HLO)
+    # entry: all-gather 512*64*2 = 65536 B; collective-permute 64*4 = 256 B;
+    # all-reduce-start tuple (in+out)/2 = 32*8*2 = 512 B
+    # body (trip 12): all-reduce 128*64*2 * 12 = 196608 B
+    assert rep.by_kind["all-gather"] == 512 * 64 * 2
+    assert rep.by_kind["collective-permute"] == 256
+    assert rep.by_kind["all-reduce"] == 128 * 64 * 2 * 12 + 512
+    assert rep.unresolved_loops == 0
+    assert rep.total_bytes == (65536 + 256 + 512 + 196608)
+
+
+def test_unresolved_loop_counts_once():
+    hlo = HLO.replace("%c = s32[] constant(12)",
+                      "%c = s32[] custom-thing()")
+    rep = collective_bytes(hlo)
+    assert rep.unresolved_loops == 1
+    assert rep.by_kind["all-reduce"] == 128 * 64 * 2 + 512  # weight 1

@@ -1,0 +1,108 @@
+"""OLT compaction + SFC property tests (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import olt
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=200))
+def test_compact_ranks_matches_serial_insertion(flags):
+    """The prefix-sum ranks must equal the slots a serial atomic counter
+    would hand out (paper Sec. 5.3.1), and count == total inserts."""
+    f = jnp.asarray(flags)
+    ranks, count = olt.compact_ranks(f)
+    assert int(count) == sum(flags)
+    expected = 0
+    for i, fl in enumerate(flags):
+        if fl:
+            assert int(ranks[i]) == expected
+            expected += 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(1, 40),  # live regions
+    st.sampled_from([2, 3, 4]),  # r
+    st.data(),
+)
+def test_subdivide_olt_children(n, r, data):
+    flags = jnp.asarray(data.draw(
+        st.lists(st.booleans(), min_size=n, max_size=n)))
+    coords = jnp.stack([jnp.arange(n), jnp.arange(n) * 3 % 17], -1).astype(
+        jnp.int32)
+    cap = olt.next_pow2(n * r * r)
+    children, count = olt.subdivide_olt(coords, flags, r=r, capacity=cap)
+    k = int(jnp.sum(flags))
+    assert int(count) == k * r * r
+    # children appear compactly, in parent order, block layout r*r
+    live = [i for i, f in enumerate(np.asarray(flags)) if f]
+    for rank, i in enumerate(live):
+        cy, cx = int(coords[i, 0]), int(coords[i, 1])
+        blk = np.asarray(children[rank * r * r:(rank + 1) * r * r])
+        want = np.array([[cy * r + dy, cx * r + dx]
+                         for dy in range(r) for dx in range(r)])
+        np.testing.assert_array_equal(blk, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1023), st.integers(0, 1023)),
+                min_size=1, max_size=64))
+def test_morton2d_bijective(pts):
+    p = jnp.asarray(pts, jnp.int32)
+    enc = olt.morton_encode2d(p)
+    dec = olt.morton_decode2d(enc)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(p))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 511), st.integers(0, 511),
+                          st.integers(0, 511)), min_size=1, max_size=64))
+def test_morton3d_bijective(pts):
+    p = jnp.asarray(pts, jnp.int32)
+    dec = olt.morton_decode3d(olt.morton_encode3d(p))
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(p))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.data())
+def test_canonical_sfc_bijective_any_k(k, data):
+    grid = tuple(data.draw(st.integers(2, 9)) for _ in range(k))
+    pts = data.draw(st.lists(
+        st.tuples(*(st.integers(0, g - 1) for g in grid)),
+        min_size=1, max_size=32))
+    p = jnp.asarray(pts, jnp.int32)
+    enc = olt.sfc_canonical_encode(p, grid)
+    dec = olt.sfc_canonical_decode(enc, grid)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(p))
+    # Eq. (33) k=2 reduces to Eq. (31): |G|_x * p_y + p_x with (y, x) order
+    if k == 2:
+        want = np.asarray(pts)[:, 1] * grid[0] + np.asarray(pts)[:, 0]
+        np.testing.assert_array_equal(np.asarray(enc), want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(2, 8), st.data())
+def test_batched_compact_ranks(n, e, data):
+    flags = np.array(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=e, max_size=e),
+        min_size=n, max_size=n)), dtype=bool)
+    ranks, counts = olt.batched_compact_ranks(jnp.asarray(flags))
+    np.testing.assert_array_equal(np.asarray(counts), flags.sum(0))
+    for col in range(e):
+        r1, _ = olt.compact_ranks(jnp.asarray(flags[:, col]))
+        np.testing.assert_array_equal(np.asarray(ranks[:, col]),
+                                      np.asarray(r1))
+
+
+def test_pad_olt():
+    import jax
+    coords = jnp.arange(6).reshape(3, 2).astype(jnp.int32)
+    padded, valid = olt.pad_olt(coords, 3, 8)
+    assert padded.shape == (8, 2)
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [True] * 3 + [False] * 5)
+    np.testing.assert_array_equal(np.asarray(padded[3:]),
+                                  np.tile(np.asarray(coords[:1]), (5, 1)))

@@ -1,0 +1,94 @@
+"""Optimizer, gradient compression, schedule, and data-pipeline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeCase
+from repro.data import SyntheticLMData, make_pipeline
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.grad_compress import (compress_with_feedback,
+                                       dequantize_int8, init_residual,
+                                       quantize_int8)
+from repro.optim.schedule import cosine_schedule
+
+
+def test_adamw_minimises_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = {"w": 2 * (state["master"]["w"] - target)}
+        params, state, _ = adamw_update(cfg, g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_grad_clip_metric():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    _, _, m = adamw_update(AdamWConfig(), {"w": jnp.full((4,), 100.0)},
+                           state, params)
+    np.testing.assert_allclose(float(m["grad_norm"]), 200.0, rtol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_quantisation_error_bound(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-step rounding bound
+
+
+def test_error_feedback_preserves_sum():
+    """Over many steps, error feedback must deliver (almost) the full
+    gradient mass: sum of dequantised updates ~= sum of true gradients."""
+    rng = np.random.default_rng(0)
+    grads_seq = [{"w": jnp.asarray(rng.standard_normal(16), jnp.float32)}
+                 for _ in range(50)]
+    residual = init_residual(grads_seq[0])
+    delivered = np.zeros(16)
+    true = np.zeros(16)
+    for g in grads_seq:
+        deq, residual = compress_with_feedback(g, residual)
+        delivered += np.asarray(deq["w"])
+        true += np.asarray(g["w"])
+    # residual carries the (bounded) remainder
+    np.testing.assert_allclose(delivered + np.asarray(residual["w"]), true,
+                               atol=1e-4)
+
+
+def test_cosine_schedule_shape():
+    s = [float(cosine_schedule(jnp.int32(t), warmup=10, total=100))
+         for t in (0, 5, 10, 50, 100, 1000)]
+    assert s[0] == 0.0 and s[1] < s[2]
+    assert s[2] == max(s)  # peak right after warmup
+    assert abs(s[4] - 0.1) < 1e-5 and abs(s[5] - 0.1) < 1e-5  # min ratio
+
+
+def test_data_determinism_and_host_slicing():
+    cfg = get_config("qwen3-4b").reduced()
+    case = ShapeCase("t", "train", 32, 8)
+    d = SyntheticLMData(cfg, case, seed=3)
+    b1 = d.batch_at(5)
+    b2 = d.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert (d.batch_at(6)["tokens"] != b1["tokens"]).any()
+    # host slices tile the global batch exactly
+    parts = [d.host_slice(5, h, 4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_pipeline_prefetch_order():
+    cfg = get_config("qwen3-4b").reduced()
+    case = ShapeCase("t", "train", 16, 2)
+    d = SyntheticLMData(cfg, case)
+    steps = [s for s, _ in make_pipeline(d, 3, stop_step=8)]
+    assert steps == [3, 4, 5, 6, 7]

@@ -1,0 +1,46 @@
+"""Pipeline-parallel schedule: agreement with the unpipelined stack +
+presence of the collective-permute chain in the lowered HLO."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_pipeline_matches_plain_stack():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    code = textwrap.dedent("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.pipeline import pipeline_forward
+        from repro.models.transformer import _embed, _run_stack, init_params
+
+        cfg = get_config("qwen3-4b").reduced()
+        cfg = dataclasses.replace(cfg, num_layers=4, remat=False)  # 4 groups
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = make_mesh((4,), ("stage",))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                    cfg.vocab_size)
+        h = _embed(cfg, params, tokens)
+        want, _, _ = _run_stack(cfg, params["groups"], h, mode="train")
+        with mesh:
+            jitted = jax.jit(lambda g, x: pipeline_forward(
+                cfg, g, x, mesh, microbatches=2))
+            got = jitted(params["groups"], h)
+            hlo = jitted.lower(params["groups"], h).compile().as_text()
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+        assert "collective-permute" in hlo, "no stage transfers in HLO"
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420, env=env, cwd=ROOT)
+    assert r.returncode == 0, f"stdout:\\n{r.stdout}\\nstderr:\\n{r.stderr}"
+    assert "OK" in r.stdout

@@ -1,0 +1,66 @@
+"""Cross-check the analytic FLOP model against XLA cost_analysis on a
+single-group config (no scan undercount) -- validates the scan-corrected
+roofline inputs (DESIGN.md Sec. 7)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeCase
+from benchmarks.flops_model import forward_flops, hbm_bytes, model_flops
+
+
+def _tiny_cfg():
+    cfg = get_config("qwen3-4b")
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=512, vocab_size=1024, vocab_pad_multiple=64,
+        param_dtype="float32", compute_dtype="float32", remat=False)
+
+
+def test_forward_flops_matches_cost_analysis():
+    cfg = _tiny_cfg()
+    case = ShapeCase("t", "prefill", 128, 2)
+    from repro.models.transformer import forward, init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((2, 128), jnp.int32)
+    compiled = jax.jit(lambda p, t: forward(cfg, p, t)[0]).lower(
+        params, tokens).compile()
+    got = compiled.cost_analysis()["flops"]
+    want = forward_flops(cfg, case)
+    # XLA's CPU HloCostAnalysis counts 1 flop per MAC; the model (and the
+    # TPU peak-FLOPs convention) count 2. The model also averages causal
+    # attention to S/2 where XLA executes the full masked matmul. Within
+    # those conventions the matmul accounting must agree.
+    ratio = want / (2.0 * got)
+    assert 0.7 <= ratio <= 1.1, (got, want, ratio)
+
+
+def test_model_flops_definition():
+    cfg = get_config("deepseek-v2-lite-16b")
+    case = ShapeCase("t", "train", 4096, 256)
+    mf = model_flops(cfg, case)
+    assert mf == pytest.approx(
+        6.0 * cfg.active_param_count() * 4096 * 256, rel=1e-9)
+    # MoE: active < total
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_hbm_bytes_kv_dtype_sensitivity():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    case = ShapeCase("d", "decode", 32768, 128)
+    b16 = hbm_bytes(cfg, case)
+    i8 = hbm_bytes(dataclasses.replace(cfg, kv_cache_dtype="int8"), case)
+    assert i8 < 0.7 * b16  # cache dominates -> int8 nearly halves traffic
+
+
+def test_hlo_flops_remat_multipliers():
+    from benchmarks.flops_model import hlo_flops
+    cfg = _tiny_cfg()
+    case = ShapeCase("t", "train", 128, 2)
+    full = hlo_flops(cfg, case)
+    dots = hlo_flops(dataclasses.replace(cfg, remat_policy="dots"), case)
+    assert dots < full  # saving dot outputs reduces recompute
