@@ -1,0 +1,129 @@
+"""Lambda-reduction benchmark: the five engines side by side.
+
+The paper's central claim is that ASK beats Dynamic Parallelism because it
+pays a smaller per-launch overhead lambda. This suite makes the claim
+measurable across the whole engine ladder:
+
+  ex         one flat kernel, no subdivision         (1 dispatch, no OLT)
+  dp         one dispatch per subdivision-tree node  (lambda paid per node)
+  ask        one dispatch per level + host sync      (lambda paid per level)
+  ask_fused  one dispatch, worst-case OLT buffers    (lambda paid once,
+                                                      memory worst-case)
+  ask_scan   one dispatch, bounded OLT ring          (lambda paid once,
+                                                      memory ~expected)
+
+Rows (``name,case,value``):
+  ask_scan_launches_<m>      kernel dispatch count
+  ask_scan_olt_peak_rows_<m> peak live OLT rows resident at once
+  ask_scan_olt_total_rows_<m> total OLT rows allocated across the program
+  ask_scan_wall_ms_<m>       best-of-3 wall time (CPU/jnp backend)
+  ask_scan_identical_<m>     canvas identical to run_ask (1/0)
+plus ``ask_scan_batch_*`` rows for the vmapped multi-frame front-end.
+
+Peak-rows accounting: ask re-uses one bucket per level (peak = largest
+parent+child pair); fused keeps every per-level worst-case buffer inside
+one program (peak = sum); scan keeps exactly two ring buffers (peak =
+2 x max level capacity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.ask import run_ask
+from repro.mandelbrot import MandelbrotProblem, solve, solve_batch
+
+DWELL = 128
+
+METHODS = ("ex", "dp", "ask", "ask_fused", "ask_scan")
+
+
+def _best_time(fn, reps=3):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _peak_rows(method: str, stats, r: int) -> int:
+    caps = list(getattr(stats, "olt_caps", ()) or ())
+    if method == "ex" or not caps:
+        return 0
+    if method == "dp":
+        return 1  # one 1-row OLT per dispatch
+    if method == "ask":
+        # serial kernels: parent bucket + the transient child write-OLT
+        # (run_ask sizes it next_pow2(cap * r^2) before the next level's
+        # bucket shrinks it back to next_pow2(count))
+        from repro.core.olt import next_pow2
+        if len(caps) == 1:
+            return caps[0]
+        return max(c + next_pow2(c * r * r) for c in caps[:-1])
+    if method == "ask_fused":
+        return sum(caps)  # all per-level buffers live in one program
+    if method == "ask_scan":
+        return 2 * max(caps)  # the double-buffered ring
+    return sum(caps)
+
+
+def engines(writer, n=256, g=4, r=2, B=16):
+    prob = MandelbrotProblem(n=n, g=g, r=r, B=B, max_dwell=DWELL,
+                             backend="jnp")
+    reference, _ = run_ask(prob)
+    reference = np.asarray(reference)
+    case = f"n={n}"
+    for method in METHODS:
+        solve(prob, method)  # warm the jit caches
+        canvas, stats = solve(prob, method)
+        wall = _best_time(lambda m=method: solve(prob, m))
+        launches = stats.kernel_launches if method != "ex" else 1
+        writer(f"ask_scan_launches_{method}", case, launches)
+        writer(f"ask_scan_olt_peak_rows_{method}", case,
+               _peak_rows(method, stats, r) if method != "ex" else 0)
+        writer(f"ask_scan_olt_total_rows_{method}", case,
+               sum(getattr(stats, "olt_caps", ()) or ()) if method != "ex"
+               else 0)
+        writer(f"ask_scan_wall_ms_{method}", case, wall * 1e3)
+        writer(f"ask_scan_identical_{method}", case,
+               int(np.array_equal(np.asarray(canvas), reference)))
+
+
+def batch_serving(writer, n=256, frames=8):
+    """The serving front-end: F frames of a zoom sequence, one dispatch."""
+    prob = MandelbrotProblem(n=n, g=4, r=2, B=16, max_dwell=DWELL,
+                             backend="jnp")
+    re0, im0, re1, im1 = prob.bounds
+    zooms = np.linspace(0.0, 0.6, frames)
+    bounds = [(re0 + z * (re1 - re0) * 0.4, im0 + z * (im1 - im0) * 0.4,
+               re1 - z * (re1 - re0) * 0.4, im1 - z * (im1 - im0) * 0.4)
+              for z in zooms]
+    solve_batch(prob, bounds)  # warm
+    t = _best_time(lambda: solve_batch(prob, bounds))
+    _, stats = solve_batch(prob, bounds)
+    writer("ask_scan_batch_frames", f"n={n}", frames)
+    writer("ask_scan_batch_launches", f"n={n}", stats.kernel_launches)
+    writer("ask_scan_batch_wall_ms", f"n={n}", t * 1e3)
+    writer("ask_scan_batch_ms_per_frame", f"n={n}", t * 1e3 / frames)
+    writer("ask_scan_batch_overflow", f"n={n}", stats.overflow_dropped)
+
+    # single-frame loop as the serving baseline (same engine, F dispatches)
+    def loop():
+        for b in bounds:
+            solve(dataclasses.replace(prob, bounds=tuple(b)), "ask_scan")
+
+    loop()  # warm (each distinct bounds tuple retraces once)
+    writer("ask_scan_unbatched_wall_ms", f"n={n}", _best_time(loop) * 1e3)
+
+
+def run(writer, full=False):
+    if full:
+        engines(writer, n=1024, g=4, r=2, B=32)
+        batch_serving(writer, n=512, frames=16)
+    else:  # CI smoke: small n, dp recursion stays cheap
+        engines(writer, n=256, g=4, r=2, B=16)
+        batch_serving(writer, n=128, frames=4)

@@ -5,6 +5,8 @@ summary per suite. Suites:
 
   cost_model  -> Fig. 3 (Omega) + Fig. 4 (theoretical SBR/MBR speedup)
   mandelbrot  -> Fig. 8 (measured Ex/DP/ASK speedups) + Table 2 analogue
+  ask_scan    -> lambda-reduction ladder: ex/dp/ask/ask_fused/ask_scan
+                 dispatches, OLT memory, wall time + batched frame serving
   landscape   -> Fig. 7 ({g,r,B} landscape, measured vs model)
   moe         -> beyond-paper: OLT-dispatch MoE
   roofline    -> deliverable (g): printed from experiments/dryrun if present
@@ -21,8 +23,8 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=("all", "cost_model", "mandelbrot", "landscape",
-                             "moe", "roofline"))
+                    choices=("all", "cost_model", "mandelbrot", "ask_scan",
+                             "landscape", "moe", "roofline"))
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
@@ -38,6 +40,10 @@ def main(argv=None) -> None:
         from benchmarks import bench_mandelbrot
         suites.append(("mandelbrot",
                        lambda: bench_mandelbrot.run(writer, full=args.full)))
+    if args.suite in ("all", "ask_scan"):
+        from benchmarks import bench_ask_scan
+        suites.append(("ask_scan",
+                       lambda: bench_ask_scan.run(writer, full=args.full)))
     if args.suite in ("all", "landscape"):
         from benchmarks import bench_landscape
         suites.append(("landscape",

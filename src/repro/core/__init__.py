@@ -2,15 +2,19 @@
 
   cost_model          Eqs. 1-25: W_E/W_SSD, T_SBR/T_MBR, Omega, {g,r,B} search
   olt                 offset lookup tables: prefix-sum compaction, SFCs
-  ask                 Adaptive Serial Kernels engine (bucketed + fused)
+  ask                 Adaptive Serial Kernels engine (bucketed + fused +
+                      single-dispatch scan over a bounded OLT ring)
   dp_emul             Dynamic-Parallelism-style recursive baseline
   ssd_synth           Sec. 7: k-D ASK on synthetic SSD fields (Morton OLT)
   adaptive_attention  beyond-paper: ASK-refined block-sparse attention
 """
 
 from repro.core import cost_model, olt
-from repro.core.ask import ASKProblem, ASKStats, run_ask, run_ask_fused
+from repro.core.ask import (ASKProblem, ASKStats, run_ask, run_ask_fused,
+                            run_ask_scan, run_ask_scan_batch,
+                            scan_capacities)
 from repro.core.dp_emul import run_dp
 
 __all__ = ["cost_model", "olt", "ASKProblem", "ASKStats", "run_ask",
-           "run_ask_fused", "run_dp"]
+           "run_ask_fused", "run_ask_scan", "run_ask_scan_batch",
+           "scan_capacities", "run_dp"]

@@ -4,13 +4,16 @@ ASK replaces Dynamic Parallelism's recursive kernel tree with a *serial*
 sequence of flat kernels, one per subdivision level, the active-region set
 carried between launches in a compact OLT (see ``core/olt.py``).
 
-Two execution modes (DESIGN.md Sec. 2):
+Three execution modes (DESIGN.md Sec. 2), trading dispatches for memory:
 
 ``run_ask``        -- the paper-faithful mode: one host-driven kernel launch
-                      per level. XLA needs static shapes, so the live region
-                      count is padded to the next power of two ("bucketing");
-                      at most O(log n) distinct shapes are ever compiled and
-                      the jit cache amortises them across levels and frames.
+                      per level (tau+1 dispatches, one host<->device sync per
+                      level to learn the next grid size). XLA needs static
+                      shapes, so the live region count is padded to the next
+                      power of two ("bucketing"); at most O(log n) distinct
+                      shapes are ever compiled and the jit cache amortises
+                      them across levels and frames. OLT memory: the live
+                      bucket only -- O(next_pow2(max live count)).
 
 ``run_ask_fused``  -- beyond-paper: because ASK is *iterative*, the entire
                       level pipeline can be unrolled into ONE jitted XLA
@@ -18,7 +21,35 @@ Two execution modes (DESIGN.md Sec. 2):
                       removing even the per-level launch+sync overhead.
                       DP's data-dependent recursion tree cannot be compiled
                       this way -- this is the structural advantage the
-                      paper's cost model prices as a smaller lambda.
+                      paper's cost model prices as a smaller lambda. The
+                      price is memory: per-level buffers are the *worst
+                      case* (g r^l)^2, and all tau+1 of them live inside one
+                      program -- the exact blow-up DP-consolidation
+                      compilers (arXiv 1606.08150, 2201.02789) hit.
+
+``run_ask_scan``   -- the serving engine: ONE dispatch like the fused mode,
+                      but the live OLT is carried through a ``lax.scan``
+                      over levels in a bounded double-buffered ring
+                      (``olt.ring_*``). Per-level capacities come from the
+                      cost model's *expected* occupancy E_l = g^2 (r^2 P)^l
+                      times a safety factor (``cost_model.
+                      expected_level_counts``), so memory is O(2 x
+                      max expected live set) -- strictly below the fused
+                      worst case from level 2 on. Regions beyond capacity
+                      are dropped and counted in ``ASKStats.
+                      overflow_dropped``. The default sizing (P=0.7,
+                      safety 2x) covers the paper's benchmark config but
+                      is NOT a guarantee -- near-boundary windows run
+                      hotter than the constant-P model; callers needing
+                      bit-exactness must check ``overflow_dropped == 0``
+                      and retry with a larger ``safety_factor`` (or
+                      worst-case ``capacities``) when it isn't.
+                      Because level kernels are shape-specialised, the scan
+                      body dispatches through ``lax.switch`` -- the scan
+                      index is unbatched under ``vmap``, which is what
+                      makes the batched frame-serving front-end
+                      (``mandelbrot.solve_batch``) a single XLA program
+                      over a whole stack of frames.
 
 A problem plugs in via the ``ASKProblem`` protocol; the Mandelbrot /
 Mariani-Silver instantiation lives in ``repro/mandelbrot``.
@@ -27,15 +58,18 @@ Mariani-Silver instantiation lives in ``repro/mandelbrot``.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Any, Protocol, Tuple
+from typing import Any, Protocol, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import olt as olt_lib
+from repro.core.cost_model import expected_level_counts, num_levels
 
-__all__ = ["ASKProblem", "ASKStats", "run_ask", "run_ask_fused"]
+__all__ = ["ASKProblem", "ASKStats", "run_ask", "run_ask_fused",
+           "run_ask_scan", "run_ask_scan_batch", "scan_capacities"]
 
 
 class ASKProblem(Protocol):
@@ -43,6 +77,12 @@ class ASKProblem(Protocol):
 
     Regions at level ``l`` live on a ``(g * r**l)``-per-side grid and are
     identified by int32 coords (cy, cx) -- see ``core/olt.py``.
+
+    Optional extension for batched serving (``run_ask_scan_batch``):
+    ``level_step_dyn(state, coords, valid, *, level, extra)`` and
+    ``leaf_step_dyn(...)`` -- the same kernels but parameterised by a
+    traced per-frame pytree ``extra`` (the vmap axis), e.g. the complex-
+    plane bounds of each frame in a zoom sequence.
     """
 
     n: int
@@ -79,17 +119,13 @@ class ASKStats:
     region_counts: tuple = ()  # live regions entering each level
     leaf_count: int = 0
     wall_s: float = 0.0
-    overflow_dropped: int = 0  # fused mode only
+    overflow_dropped: int = 0  # fused/scan modes: regions beyond capacity
+    olt_caps: tuple = ()  # OLT rows allocated per level (incl. leaf level)
 
 
 def _num_levels(n: int, g: int, r: int, B: int) -> int:
-    """Number of exploration levels: subdivide while region side > B."""
-    lv = 0
-    side = n // g
-    while side > B:
-        lv += 1
-        side //= r
-    return lv
+    """Number of exploration levels (shared definition: cost_model)."""
+    return num_levels(n, g, r, B)
 
 
 def run_ask(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any, ASKStats]:
@@ -101,6 +137,7 @@ def run_ask(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any
     count = g * g
     stats = ASKStats()
     counts = []
+    caps_used = []
 
     levels = _num_levels(n, g, r, B)
     level_fn = jax.jit(problem.level_step, static_argnames=("level",))
@@ -112,6 +149,7 @@ def run_ask(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any
         cap = olt_lib.next_pow2(count)
         coords_p, valid = olt_lib.pad_olt(coords, count, cap)
         counts.append(count)
+        caps_used.append(cap)
         state, flags = level_fn(state, coords_p, valid, level=level)
         stats.kernel_launches += 1
         # write-OLT: every flagged region inserts r*r children (Sec. 5.3.2)
@@ -127,10 +165,12 @@ def run_ask(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any
         state = leaf_fn(state, coords_p, valid, level=stats.levels)
         stats.kernel_launches += 1
         stats.leaf_count = count
+        caps_used.append(cap)
 
     if block_until_ready:
         state = jax.block_until_ready(state)
     stats.region_counts = tuple(counts)
+    stats.olt_caps = tuple(caps_used)
     stats.wall_s = time.perf_counter() - t0
     return state, stats
 
@@ -185,5 +225,244 @@ def run_ask_fused(
         leaf_count=int(leaf_count),
         overflow_dropped=int(dropped),
         wall_s=time.perf_counter() - t0,
+        olt_caps=tuple(caps),
     )
     return state, stats
+
+
+# ---------------------------------------------------------------------------
+# run_ask_scan: single-dispatch streaming engine over a bounded OLT ring
+# ---------------------------------------------------------------------------
+
+def scan_capacities(
+    n: int, g: int, r: int, B: int,
+    *, p_subdiv: float = 0.7, safety_factor: float = 2.0,
+) -> Tuple[int, ...]:
+    """Per-level ring-slice capacities for ``run_ask_scan``.
+
+    Expected occupancy from the cost model (E_l = g^2 (r^2 p)^l) times a
+    safety factor, clamped to the exhaustive worst case (g r^l)^2. Level 0
+    is always exactly g^2 (every root is live).
+    """
+    expected = expected_level_counts(n, g, r, B, P=p_subdiv)
+    caps = []
+    for lv, e in enumerate(expected):
+        worst = (g * r ** lv) ** 2
+        caps.append(max(1, min(int(math.ceil(e * safety_factor)), worst)))
+    return tuple(caps)
+
+
+def _resolve_capacities(problem: ASKProblem, capacities, p_subdiv,
+                        safety_factor) -> Tuple[int, ...]:
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    levels = _num_levels(n, g, r, B)
+    if capacities is None:
+        caps = scan_capacities(n, g, r, B, p_subdiv=p_subdiv,
+                               safety_factor=safety_factor)
+    elif isinstance(capacities, int):
+        caps = (max(1, capacities),) * (levels + 1)
+    else:
+        caps = tuple(max(1, int(c)) for c in capacities)
+        if len(caps) != levels + 1:
+            raise ValueError(
+                f"need {levels + 1} capacities (levels 0..{levels}), "
+                f"got {len(caps)}")
+    return caps
+
+
+def _build_scan_pipeline(problem: ASKProblem, caps: Sequence[int]):
+    """One XLA program: lax.scan over levels, lax.switch to the
+    shape-specialised level kernel, live OLT in a double-buffered ring.
+
+    Returns ``pipeline(state, extra=None) -> (state, entering [levels],
+    leaf_count, dropped)``. When ``extra`` is not None the problem must
+    provide ``level_step_dyn`` / ``leaf_step_dyn`` taking the traced pytree
+    (e.g. per-frame complex-plane bounds) -- that is the ``vmap`` axis of
+    the batched front-end.
+    """
+    g, r = problem.g, problem.r
+    levels = len(caps) - 1
+    ring_width = max(caps)
+    roots_n = g * g
+
+    def pipeline(state, extra=None):
+        def level_at(lv, state, coords, valid):
+            if extra is None:
+                return problem.level_step(state, coords, valid, level=lv)
+            return problem.level_step_dyn(state, coords, valid, level=lv,
+                                          extra=extra)
+
+        def leaf_at(lv, state, coords, valid):
+            if extra is None:
+                return problem.leaf_step(state, coords, valid, level=lv)
+            return problem.leaf_step_dyn(state, coords, valid, level=lv,
+                                         extra=extra)
+
+        roots = problem.root_coords()
+        ring = olt_lib.ring_init(roots, roots_n, ring_width)
+        parity = jnp.int32(0)
+        count = jnp.int32(min(roots_n, caps[0]))
+        dropped = jnp.int32(max(roots_n - caps[0], 0))
+
+        def make_branch(lv):
+            cap_in, cap_out = caps[lv], caps[lv + 1]
+
+            def branch(carry):
+                state, ring, parity, count, dropped = carry
+                coords = olt_lib.ring_read(ring, parity, cap_in)
+                valid = jnp.arange(cap_in) < count
+                state, flags = level_at(lv, state, coords, valid)
+                flags = jnp.logical_and(flags, valid)
+                children, child_count = olt_lib.subdivide_olt(
+                    coords, flags, r=r, capacity=cap_out)
+                dropped = dropped + jnp.maximum(child_count - cap_out, 0)
+                count = jnp.minimum(child_count, cap_out)
+                ring = olt_lib.ring_write(ring, parity, children)
+                return state, ring, jnp.int32(1) - parity, count, dropped
+
+            return branch
+
+        branches = [make_branch(lv) for lv in range(levels)]
+
+        def scan_body(carry, lv):
+            entering = carry[3]  # live count entering this level
+            carry = jax.lax.switch(lv, branches, carry)
+            return carry, entering
+
+        carry = (state, ring, parity, count, dropped)
+        if levels > 0:
+            carry, entering = jax.lax.scan(
+                scan_body, carry, jnp.arange(levels, dtype=jnp.int32))
+        else:
+            entering = jnp.zeros((0,), jnp.int32)
+        state, ring, parity, count, dropped = carry
+
+        cap_leaf = caps[levels]
+        coords = olt_lib.ring_read(ring, parity, cap_leaf)
+        valid = jnp.arange(cap_leaf) < count
+        state = leaf_at(levels, state, coords, valid)
+        return state, entering, count, dropped
+
+    return pipeline
+
+
+# Jitted-pipeline cache: retracing on every call would reintroduce a
+# host-side per-frame overhead -- the very lambda the engine removes.
+# Keyed on (problem, caps, batched) when the problem is hashable (the
+# Mandelbrot adapter is a frozen dataclass); unhashable problems just
+# rebuild. Bounded FIFO so a long-lived server can't grow it unboundedly.
+_PIPELINE_CACHE: dict = {}
+_PIPELINE_CACHE_MAX = 128
+
+
+def _jitted_pipeline(problem: ASKProblem, caps: Tuple[int, ...],
+                     batched: bool):
+    try:
+        key = (problem, caps, batched)
+        cached = _PIPELINE_CACHE.get(key)
+        if cached is not None:
+            return cached
+    except TypeError:  # unhashable problem: no caching
+        key = None
+    pipeline = _build_scan_pipeline(problem, caps)
+    if batched:
+        fn = jax.jit(jax.vmap(
+            lambda extra: pipeline(problem.init_state(), extra)))
+    else:
+        fn = jax.jit(pipeline)
+    if key is not None:
+        if len(_PIPELINE_CACHE) >= _PIPELINE_CACHE_MAX:
+            _PIPELINE_CACHE.pop(next(iter(_PIPELINE_CACHE)))
+        _PIPELINE_CACHE[key] = fn
+    return fn
+
+
+def run_ask_scan(
+    problem: ASKProblem,
+    *,
+    capacities: Union[None, int, Sequence[int]] = None,
+    p_subdiv: float = 0.7,
+    safety_factor: float = 2.0,
+    block_until_ready: bool = True,
+) -> Tuple[Any, ASKStats]:
+    """Single-dispatch streaming ASK: lax.scan over levels, bounded ring.
+
+    ``capacities`` overrides the cost-model sizing: an int is a uniform
+    per-level capacity (the overflow tests undersize it deliberately), a
+    sequence gives one capacity per level 0..tau. Output is bit-identical
+    to ``run_ask`` whenever nothing overflows (``stats.overflow_dropped ==
+    0``); dropped regions leave their pixels at the init_state value.
+    """
+    caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
+    fn = _jitted_pipeline(problem, caps, batched=False)
+
+    t0 = time.perf_counter()
+    state, entering, leaf_count, dropped = fn(problem.init_state())
+    if block_until_ready:
+        state = jax.block_until_ready(state)
+
+    counts = []
+    for c in jax.device_get(entering).tolist():  # one transfer, not tau
+        if c == 0:
+            break
+        counts.append(int(c))
+    stats = ASKStats(
+        levels=len(counts),
+        kernel_launches=1,  # the whole level pipeline is one dispatch
+        region_counts=tuple(counts),
+        leaf_count=int(leaf_count),
+        overflow_dropped=int(dropped),
+        wall_s=time.perf_counter() - t0,
+        olt_caps=tuple(caps),
+    )
+    return state, stats
+
+
+def run_ask_scan_batch(
+    problem: ASKProblem,
+    extras: Any,
+    *,
+    capacities: Union[None, int, Sequence[int]] = None,
+    p_subdiv: float = 0.7,
+    safety_factor: float = 2.0,
+    block_until_ready: bool = True,
+) -> Tuple[Any, ASKStats]:
+    """vmap the scan engine over a stack of per-frame parameters.
+
+    ``extras`` is a pytree whose leading axis is the frame axis (for
+    Mandelbrot: [F, 4] complex-plane bounds); the problem must implement
+    ``level_step_dyn`` / ``leaf_step_dyn``. The whole batch is ONE XLA
+    dispatch -- the lax.scan level index stays unbatched, so lax.switch
+    executes exactly one shape-specialised branch per level for all
+    frames.
+
+    Returns (stacked states [F, ...], stats) where ``stats.region_counts``
+    is a tuple of per-frame tuples and leaf/overflow counts are summed.
+    """
+    caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
+    batched = _jitted_pipeline(problem, caps, batched=True)
+
+    t0 = time.perf_counter()
+    states, entering, leaf_counts, dropped = batched(extras)
+    if block_until_ready:
+        states = jax.block_until_ready(states)
+
+    entering = jax.device_get(entering)  # [F, levels]
+    per_frame = []
+    for row in entering:
+        counts = []
+        for c in row.tolist():
+            if c == 0:
+                break
+            counts.append(int(c))
+        per_frame.append(tuple(counts))
+    stats = ASKStats(
+        levels=max((len(c) for c in per_frame), default=0),  # executed
+        kernel_launches=1,  # one dispatch serves the whole frame batch
+        region_counts=tuple(per_frame),
+        leaf_count=int(jnp.sum(leaf_counts)),
+        overflow_dropped=int(jnp.sum(dropped)),
+        wall_s=time.perf_counter() - t0,
+        olt_caps=tuple(caps),
+    )
+    return states, stats

@@ -37,6 +37,8 @@ __all__ = [
     "SSDParams",
     "Machine",
     "tau_levels",
+    "num_levels",
+    "expected_level_counts",
     "w_exhaustive",
     "w_subdivision_general",
     "w_ssd_mandelbrot",
@@ -87,6 +89,42 @@ def tau_levels(n, g, r, B):
     B = np.asarray(B, dtype=np.float64)
     with np.errstate(divide="ignore", invalid="ignore"):
         return np.log(n / (g * B)) / np.log(r)
+
+
+def num_levels(n: int, g: int, r: int, B: int) -> int:
+    """Integer exploration-level count: subdivide while region side > B.
+
+    The single definition shared by the ASK engines
+    (``repro.core.ask._num_levels`` delegates here) and the occupancy
+    model below -- the floor() of ``tau_levels`` for exact chains.
+    """
+    levels = 0
+    side = n // g
+    while side > B:
+        levels += 1
+        side //= r
+    return levels
+
+
+def expected_level_counts(n: int, g: int, r: int, B: int, P: float = 0.7):
+    """Expected live-OLT occupancy entering each level of an ASK run.
+
+    E_0 = g^2 (all roots live); each live region subdivides with
+    probability P into r^2 children (assumption ii of Sec. 4.2.1), so
+    E_l = g^2 (r^2 P)^l, clamped to the exhaustive level grid (g r^l)^2.
+    Returns a list of length tau+1: entries 0..tau-1 are the exploration
+    levels, entry tau the expected leaf-OLT occupancy. This is what sizes
+    the bounded ring of ``repro.core.ask.run_ask_scan`` (capacity =
+    occupancy x safety factor), replacing the fused engine's worst-case
+    per-level buffers.
+    """
+    levels = num_levels(n, g, r, B)
+    out = []
+    for lv in range(levels + 1):
+        expected = float(g * g) * (r * r * P) ** lv
+        worst = float((g * r ** lv) ** 2)
+        out.append(min(expected, worst))
+    return out
 
 
 def valid_grb(n, g, r, B):

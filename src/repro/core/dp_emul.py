@@ -41,6 +41,8 @@ def run_dp(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any,
     t0 = time.perf_counter()
     state = problem.init_state()
 
+    counts = [0] * levels  # live regions entering each level (== run_ask's)
+
     def recurse(state, cy: int, cx: int, level: int):
         coords = jnp.array([[cy, cx]], dtype=jnp.int32)
         if level == levels:
@@ -49,6 +51,7 @@ def run_dp(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any,
             stats.leaf_count += 1
             return leaf_fn(state, coords, one_valid, level=level)
         # exploration child-kernel: query + terminal work for this region
+        counts[level] += 1
         stats.kernel_launches += 1
         state, flags = level_fn(state, coords, one_valid, level=level)
         if bool(flags[0]):  # device->host sync per node, as in CUDA DP's
@@ -57,11 +60,13 @@ def run_dp(problem: ASKProblem, *, block_until_ready: bool = True) -> Tuple[Any,
                     state = recurse(state, cy * r + dy, cx * r + dx, level + 1)
         return state
 
-    counts = [0] * levels
     for cy in range(g):
         for cx in range(g):
             state = recurse(state, cy, cx, 0)
-    stats.region_counts = tuple(counts)
+    stats.region_counts = tuple(c for c in counts if c > 0)
+    # one 1-row OLT per dispatched node => per-level rows == node counts
+    stats.olt_caps = stats.region_counts + (
+        (stats.leaf_count,) if stats.leaf_count else ())
 
     if block_until_ready:
         state = jax.block_until_ready(state)

@@ -32,6 +32,9 @@ __all__ = [
     "compact_ranks",
     "compact_gather",
     "subdivide_olt",
+    "ring_init",
+    "ring_read",
+    "ring_write",
     "sfc_canonical_encode",
     "sfc_canonical_decode",
     "morton_encode2d",
@@ -70,6 +73,41 @@ def pad_olt(coords: jax.Array, count: int, capacity: int) -> Tuple[jax.Array, ja
         out = jnp.concatenate([coords, fill], axis=0)
     valid = jnp.arange(capacity) < count
     return out, valid
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered OLT ring (the ``run_ask_scan`` carry -- DESIGN: one
+# read buffer + one write buffer of equal width, swapped by parity each
+# level, so live-OLT memory is O(2 * max_level_capacity) instead of the
+# fused engine's sum of per-level worst cases).
+# ---------------------------------------------------------------------------
+
+def ring_init(coords: jax.Array, count: int, capacity: int) -> jax.Array:
+    """Build a [2, capacity, k] ring with ``coords`` in the front (parity-0)
+    buffer. If ``capacity < count`` the tail is truncated (the caller is
+    responsible for accounting those as overflow drops)."""
+    buf0, _ = pad_olt(coords, min(count, capacity), capacity)
+    return jnp.stack([buf0, jnp.zeros_like(buf0)], axis=0)
+
+
+def ring_read(ring: jax.Array, parity: jax.Array, cap: int) -> jax.Array:
+    """Live prefix of the front buffer: [cap, k]. ``cap`` is the static
+    per-level capacity slice; ``parity`` may be traced."""
+    front = jax.lax.dynamic_index_in_dim(ring, parity, axis=0, keepdims=False)
+    return front[:cap]
+
+
+def ring_write(ring: jax.Array, parity: jax.Array, buf: jax.Array) -> jax.Array:
+    """Store ``buf`` (a compact child OLT, width <= ring width) into the
+    BACK buffer (1 - parity), zero-padding to the ring width."""
+    width = ring.shape[1]
+    if buf.shape[0] > width:
+        raise ValueError(f"child OLT {buf.shape[0]} exceeds ring width {width}")
+    if buf.shape[0] < width:
+        pad = jnp.zeros((width - buf.shape[0],) + buf.shape[1:], buf.dtype)
+        buf = jnp.concatenate([buf, pad], axis=0)
+    back = jnp.int32(1) - parity
+    return jax.lax.dynamic_update_index_in_dim(ring, buf, back, axis=0)
 
 
 @jax.jit

@@ -44,9 +44,18 @@ def mandelbrot(n, *, bounds=ref.DEFAULT_BOUNDS, max_dwell=512,
     return _mandelbrot_pallas(n, bounds, max_dwell, blk, _interpret())
 
 
+def _bounds_traced(bounds) -> bool:
+    """Per-frame bounds arrive as a traced [4] array from the batched
+    serving path (mandelbrot.solve_batch); static tuples stay jit-static."""
+    return isinstance(bounds, jax.Array)
+
+
 def perimeter_query(coords, *, side, n, bounds=ref.DEFAULT_BOUNDS,
                     max_dwell=512, backend="pallas"):
     """Border query Q: (homog [N] bool, common [N] int32)."""
+    if _bounds_traced(bounds):
+        return ref.perimeter_query_dyn(
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
     if backend == "jnp":
         return ref.perimeter_query_ref(
             coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
@@ -78,9 +87,11 @@ def region_dwell(canvas, coords, nonempty, *, side, n,
                  bounds=ref.DEFAULT_BOUNDS, max_dwell=512, scheme="sbr",
                  tile=256, backend="pallas"):
     """Last-level work A: interior dwell of the (duplicate-padded) leaf-OLT."""
-    if backend == "jnp":
+    if backend == "jnp" or _bounds_traced(bounds):
         N = coords.shape[0]
-        tiles = ref.region_interior_ref(
+        interior = (ref.region_interior_dyn if _bounds_traced(bounds)
+                    else ref.region_interior_ref)
+        tiles = interior(
             coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
         iy = jnp.arange(side)
         ys = coords[:, 0:1, None] * side + iy[None, :, None]

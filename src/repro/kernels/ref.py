@@ -84,14 +84,11 @@ def perimeter_coords(coords: jax.Array, side: int):
     return ys, xs
 
 
-@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
-def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
+def perimeter_query_dyn(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512):
-    """Oracle for the Mariani-Silver border query Q (paper Sec. 4.2.1).
-
-    Returns (homog [N] bool, common [N] int32): whether all 4*side border
-    dwells agree, and the shared value (row (0,0) -- junk if not homog).
-    """
+    """Un-jitted border query Q: same math as ``perimeter_query_ref`` but
+    ``bounds`` may be a traced [4] array -- the batched frame-serving path
+    vmaps over it (one complex-plane window per frame)."""
     ys, xs = perimeter_coords(coords, side)
     cr, ci = map_coords(xs, ys, n, bounds)
     dw = dwell_compute(cr, ci, max_dwell)  # [N, 4, side]
@@ -101,10 +98,21 @@ def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
 
 
 @functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
-def region_interior_ref(coords: jax.Array, *, side: int, n: int,
+def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512):
+    """Oracle for the Mariani-Silver border query Q (paper Sec. 4.2.1).
+
+    Returns (homog [N] bool, common [N] int32): whether all 4*side border
+    dwells agree, and the shared value (row (0,0) -- junk if not homog).
+    """
+    return perimeter_query_dyn(coords, side=side, n=n, bounds=bounds,
+                               max_dwell=max_dwell)
+
+
+def region_interior_dyn(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
-    """Oracle for the last-level application work A: [N, side, side] dwell
-    tiles for each region."""
+    """Un-jitted last-level work A (traced-bounds variant, see
+    ``perimeter_query_dyn``)."""
     py = (coords[:, 0] * side).astype(jnp.float32)
     px = (coords[:, 1] * side).astype(jnp.float32)
     iy = jnp.arange(side, dtype=jnp.float32)
@@ -114,6 +122,15 @@ def region_interior_ref(coords: jax.Array, *, side: int, n: int,
     xs = jnp.broadcast_to(xs, (coords.shape[0], side, side))
     cr, ci = map_coords(xs, ys, n, bounds)
     return dwell_compute(cr, ci, max_dwell)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
+def region_interior_ref(coords: jax.Array, *, side: int, n: int,
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
+    """Oracle for the last-level application work A: [N, side, side] dwell
+    tiles for each region."""
+    return region_interior_dyn(coords, side=side, n=n, bounds=bounds,
+                               max_dwell=max_dwell)
 
 
 def compact_ranks_ref(flags):

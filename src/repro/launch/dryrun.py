@@ -43,7 +43,9 @@ def run_cell(cfg, case, mesh, *, opts=None, fsdp=None, extra=None):
     """Lower+compile one (arch, shape, mesh) cell; return the record dict."""
     from repro.configs.shapes import applicable, batch_specs, cache_specs, param_specs
     from repro.launch import sharding as sh
-    from repro.launch.hlo_analysis import collective_bytes, loop_weighted_flops
+    from repro.launch.hlo_analysis import (collective_bytes,
+                                           cost_analysis_dict,
+                                           loop_weighted_flops)
     from repro.launch.steps import (StepOptions, make_prefill_step,
                                     make_serve_step, make_train_step,
                                     train_state_specs)
@@ -148,7 +150,7 @@ def run_cell(cfg, case, mesh, *, opts=None, fsdp=None, extra=None):
                 ma.argument_size_in_bytes + ma.output_size_in_bytes
                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
         }
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
                        "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
         hlo = compiled.as_text()

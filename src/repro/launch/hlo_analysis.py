@@ -23,6 +23,29 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-proof ``compiled.cost_analysis()``.
+
+    jaxlib <= 0.4.30 returns a dict (or None); newer jaxlib returns a
+    *list* with one properties-dict per executable program. Normalize to a
+    single flat dict, summing numeric values across programs so callers can
+    keep doing ``ca.get("flops", 0.0)``.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    out: Dict[str, float] = {}
+    for part in ca:
+        for k, v in dict(part).items():
+            if isinstance(v, (int, float)) and k in out:
+                out[k] += v
+            else:
+                out[k] = v
+    return out
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
     "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,

@@ -70,10 +70,12 @@ class MandelbrotProblem:
         return self.n // (self.g * self.r ** level)
 
     def level_step(self, state: jax.Array, coords: jax.Array,
-                   valid: jax.Array, *, level: int) -> Tuple[jax.Array, jax.Array]:
+                   valid: jax.Array, *, level: int,
+                   bounds=None) -> Tuple[jax.Array, jax.Array]:
+        bounds = self.bounds if bounds is None else bounds
         side = self.region_side(level)
         homog, common = ops.perimeter_query(
-            coords, side=side, n=self.n, bounds=self.bounds,
+            coords, side=side, n=self.n, bounds=bounds,
             max_dwell=self.max_dwell, backend=self.backend)
         homog = jnp.logical_and(homog, valid)
 
@@ -94,7 +96,8 @@ class MandelbrotProblem:
         return state, subdivide
 
     def leaf_step(self, state: jax.Array, coords: jax.Array,
-                  valid: jax.Array, *, level: int) -> jax.Array:
+                  valid: jax.Array, *, level: int, bounds=None) -> jax.Array:
+        bounds = self.bounds if bounds is None else bounds
         side = self.region_side(level)
         # duplicate-pad the invalid tail (idempotent recompute)
         cap = coords.shape[0]
@@ -103,13 +106,26 @@ class MandelbrotProblem:
         coords = coords[idx]
         nonempty = (count > 0).astype(jnp.int32).reshape((1,))
         return ops.region_dwell(
-            state, coords, nonempty, side=side, n=self.n, bounds=self.bounds,
+            state, coords, nonempty, side=side, n=self.n, bounds=bounds,
             max_dwell=self.max_dwell, scheme=self.scheme, tile=self.tile,
             backend=self.backend)
 
+    # -- dynamic-parameter protocol (batched frame serving) -----------------
+    # ``extra`` is a traced [4] bounds array: one complex-plane window per
+    # frame in the vmapped ask_scan pipeline. The kernels route to the
+    # traced-bounds jnp path automatically (ops._bounds_traced).
+
+    def level_step_dyn(self, state, coords, valid, *, level: int, extra):
+        return self.level_step(state, coords, valid, level=level,
+                               bounds=extra)
+
+    def leaf_step_dyn(self, state, coords, valid, *, level: int, extra):
+        return self.leaf_step(state, coords, valid, level=level,
+                              bounds=extra)
+
 
 def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
-    """Convenience dispatcher: method in {ex, ask, ask_fused, dp}."""
+    """Convenience dispatcher: method in {ex, ask, ask_fused, ask_scan, dp}."""
     if method == "ex":
         from repro.mandelbrot.exhaustive import exhaustive
         return exhaustive(problem.n, max_dwell=problem.max_dwell,
@@ -120,7 +136,29 @@ def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
     if method == "ask_fused":
         from repro.core.ask import run_ask_fused
         return run_ask_fused(problem, **kw)
+    if method == "ask_scan":
+        from repro.core.ask import run_ask_scan
+        return run_ask_scan(problem, **kw)
     if method == "dp":
         from repro.core.dp_emul import run_dp
         return run_dp(problem, **kw)
     raise ValueError(f"unknown method {method!r}")
+
+
+def solve_batch(problem: MandelbrotProblem, bounds_batch, **kw):
+    """Batched frame serving: render F frames in ONE XLA dispatch.
+
+    ``bounds_batch`` is [F, 4] (re0, im0, re1, im1) per frame -- a zoom
+    sequence or F tenants' viewports. The scan engine is vmapped over the
+    frame axis (see ``core.ask.run_ask_scan_batch``): per-level capacities
+    are shared across frames, overflow accounting is summed. The dwell
+    compute runs the traced-bounds jnp path (identical math, so each frame
+    is bit-identical to a single-frame ``run_ask`` at those bounds).
+
+    Returns (canvases [F, n, n], ASKStats).
+    """
+    from repro.core.ask import run_ask_scan_batch
+    bounds_arr = jnp.asarray(bounds_batch, jnp.float32)
+    if bounds_arr.ndim != 2 or bounds_arr.shape[1] != 4:
+        raise ValueError(f"bounds_batch must be [F, 4], got {bounds_arr.shape}")
+    return run_ask_scan_batch(problem, bounds_arr, **kw)

@@ -1,0 +1,157 @@
+"""Property-testing front-end: real ``hypothesis`` when installed, else a
+minimal built-in fallback.
+
+The test suite's property tests only need a small strategy vocabulary
+(booleans / integers / floats / sampled_from / lists / tuples / data).
+``hypothesis`` is declared as a test extra in pyproject.toml, but some
+execution environments (hermetic CI images, the benchmark container) don't
+ship it; rather than losing collection of four test modules to an
+ImportError, tests import ``given/settings/strategies`` from here.
+
+The fallback is NOT hypothesis: no shrinking, no example database, no
+deadline enforcement -- just deterministic seeded random sampling with the
+same decorator surface. Failures re-raise the original exception with the
+falsifying example attached to the message. Determinism: the RNG is seeded
+from the test function's qualified name, so a failure reproduces on rerun.
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies", "HAVE_HYPOTHESIS"]
+
+try:  # prefer the real thing whenever it is importable
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 50
+
+    class _Strategy:
+        """A strategy is just a draw function rnd -> value."""
+
+        def __init__(self, draw, repr_=""):
+            self._draw = draw
+            self._repr = repr_ or "strategy"
+
+        def do_draw(self, rnd):
+            return self._draw(rnd)
+
+        def __repr__(self):
+            return self._repr
+
+    class _DataObject:
+        """Interactive draws (``st.data()``): bound to the example's RNG."""
+
+        def __init__(self, rnd):
+            self._rnd = rnd
+
+        def draw(self, strategy, label=None):
+            return strategy.do_draw(self._rnd)
+
+        def __repr__(self):
+            return "data(...)"
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rnd: _DataObject(rnd), "data()")
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5, "booleans()")
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value),
+                             f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rnd):
+                # bias toward the boundary values property tests care about
+                pick = rnd.random()
+                if pick < 0.05:
+                    return lo
+                if pick < 0.10:
+                    return hi
+                if pick < 0.15:
+                    return min(max(0.0, lo), hi)
+                return rnd.uniform(lo, hi)
+
+            return _Strategy(draw, f"floats({lo}, {hi})")
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rnd: rnd.choice(elems),
+                             f"sampled_from({elems!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 16
+
+            def draw(rnd):
+                size = rnd.randint(min_size, hi)
+                return [elements.do_draw(rnd) for _ in range(size)]
+
+            return _Strategy(draw, f"lists({elements!r})")
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rnd: tuple(e.do_draw(rnd) for e in elements),
+                f"tuples({', '.join(map(repr, elements))})")
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        """Decorator: records max_examples on the (already-wrapped) test."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Decorator: run the test over seeded random examples."""
+
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rnd = random.Random(seed)
+                for i in range(n):
+                    args = tuple(s.do_draw(rnd) for s in arg_strategies)
+                    kwargs = {k: s.do_draw(rnd)
+                              for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception as e:
+                        shown = {f"arg{j}": a for j, a in enumerate(args)}
+                        shown.update(kwargs)
+                        e.args = (f"[hypothesis_compat example {i}/{n}: "
+                                  f"{shown!r}] " + " ".join(
+                                      str(a) for a in e.args),)
+                        raise
+
+            # pytest must see a zero-arg signature (no fixture params), so
+            # copy identity attrs by hand instead of functools.wraps (which
+            # would set __wrapped__ and leak the original signature).
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -16,10 +16,14 @@ def test_all_methods_agree(backend, g, r, B):
     ex, _ = solve(prob, "ex")
     ask, st_ask = solve(prob, "ask")
     fused, st_fused = solve(prob, "ask_fused")
-    ex, ask, fused = map(np.asarray, (ex, ask, fused))
+    scan, st_scan = solve(prob, "ask_scan", safety_factor=1e9)
+    ex, ask, fused, scan = map(np.asarray, (ex, ask, fused, scan))
     np.testing.assert_array_equal(ask, ex)
     np.testing.assert_array_equal(fused, ex)
+    np.testing.assert_array_equal(scan, ex)
     assert st_fused.overflow_dropped == 0
+    assert st_scan.overflow_dropped == 0
+    assert st_scan.kernel_launches == 1
 
 
 def test_dp_agrees_and_launch_counts():
@@ -35,6 +39,20 @@ def test_dp_agrees_and_launch_counts():
     assert st_dp.kernel_launches > st_ask.kernel_launches  # DP overhead
     # every ASK level processed at least one region
     assert all(c > 0 for c in st_ask.region_counts)
+
+
+def test_dp_region_counts_match_ask():
+    """Regression: run_dp must report per-level live-region counts, and
+    they must equal run_ask's (the DP tree visits exactly the ASK live
+    set, one node at a time)."""
+    for g, r, B in ((2, 2, 16), (4, 2, 8)):
+        prob = MandelbrotProblem(n=128, g=g, r=r, B=B, max_dwell=32,
+                                 backend="jnp")
+        _, st_ask = solve(prob, "ask")
+        _, st_dp = solve(prob, "dp")
+        assert st_dp.region_counts == st_ask.region_counts
+        assert any(c > 0 for c in st_dp.region_counts)
+        assert st_dp.leaf_count == st_ask.leaf_count
 
 
 def test_fused_single_dispatch():

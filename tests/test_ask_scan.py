@@ -1,0 +1,176 @@
+"""Tests for the single-dispatch streaming ASK engine (run_ask_scan) and
+the batched frame-serving front-end (solve_batch)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import olt as olt_lib
+from repro.core.ask import (_num_levels, run_ask, run_ask_scan,
+                            scan_capacities)
+from repro.mandelbrot import MandelbrotProblem, solve_batch
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+
+def test_acceptance_config_identical_and_bounded():
+    """The ISSUE acceptance case: n=1024 g=4 r=2 B=32 -- canvas identical
+    to run_ask, ONE dispatch, and every level-l capacity (l > 1) strictly
+    below run_ask_fused's worst case (g r^l)^2."""
+    prob = MandelbrotProblem(n=1024, g=4, r=2, B=32, max_dwell=128,
+                             backend="jnp")
+    ask, st_ask = run_ask(prob)
+    scan, st_scan = run_ask_scan(prob)
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
+    assert st_scan.kernel_launches == 1
+    assert st_scan.overflow_dropped == 0
+    assert st_scan.region_counts == st_ask.region_counts
+    assert st_scan.leaf_count == st_ask.leaf_count
+    levels = _num_levels(1024, 4, 2, 32)
+    assert len(st_scan.olt_caps) == levels + 1
+    for lv, cap in enumerate(st_scan.olt_caps):
+        worst = (4 * 2 ** lv) ** 2
+        assert cap <= worst
+        if lv > 1:
+            assert cap < worst, (lv, cap, worst)
+
+
+def _valid_chain(n, g, r, B):
+    if n % g:
+        return False
+    side = n // g
+    while side > B:
+        if side % r:
+            return False
+        side //= r
+    return True
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([64, 128]),
+    g=st.sampled_from([2, 4]),
+    r=st.sampled_from([2, 4]),
+    B=st.sampled_from([8, 16, 32]),
+)
+def test_scan_bit_identical_to_ask(n, g, r, B):
+    """Property: with overflow ruled out (worst-case capacities), the one-
+    dispatch scan engine reproduces run_ask bit for bit on random
+    subdivision chains."""
+    if not _valid_chain(n, g, r, B):
+        return
+    prob = MandelbrotProblem(n=n, g=g, r=r, B=B, max_dwell=32, backend="jnp")
+    ask, st_ask = run_ask(prob)
+    scan, st_scan = run_ask_scan(prob, safety_factor=1e9)
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
+    assert st_scan.kernel_launches == 1
+    assert st_scan.overflow_dropped == 0
+    assert st_scan.region_counts == st_ask.region_counts
+    assert st_scan.leaf_count == st_ask.leaf_count
+
+
+def _host_reference_with_caps(prob, caps):
+    """Host-driven mirror of the scan engine's clamping semantics: the
+    same per-level OLT capacities, drops counted exactly, level kernels
+    dispatched serially (run_ask style)."""
+    g, r = prob.g, prob.r
+    levels = len(caps) - 1
+    state = prob.init_state()
+    coords = prob.root_coords()
+    count = min(g * g, caps[0])
+    dropped = max(g * g - caps[0], 0)
+    for level in range(levels):
+        coords_p, valid = olt_lib.pad_olt(coords, count, caps[level])
+        state, flags = prob.level_step(state, coords_p, valid, level=level)
+        flags = jnp.logical_and(flags, valid)
+        coords, child_count = olt_lib.subdivide_olt(
+            coords_p, flags, r=r, capacity=caps[level + 1])
+        child_count = int(child_count)
+        dropped += max(child_count - caps[level + 1], 0)
+        count = min(child_count, caps[level + 1])
+    coords_p, valid = olt_lib.pad_olt(coords, count, caps[levels])
+    state = prob.leaf_step(state, coords_p, valid, level=levels)
+    return state, dropped
+
+
+def test_overflow_dropped_exact_when_undersized():
+    """Deliberately undersized uniform capacity: overflow_dropped must
+    equal the exact drop count of a host-driven reference with the same
+    clamping, and the surviving regions must render identically."""
+    prob = MandelbrotProblem(n=128, g=2, r=2, B=8, max_dwell=32,
+                             backend="jnp")
+    levels = _num_levels(128, 2, 2, 8)
+    caps = (4,) + (12,) * levels  # roots fit; children overflow
+    scan, st = run_ask_scan(prob, capacities=caps)
+    ref, ref_dropped = _host_reference_with_caps(prob, caps)
+    assert ref_dropped > 0  # the test must actually exercise overflow
+    assert st.overflow_dropped == ref_dropped
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(ref))
+
+
+def test_hot_window_overflow_reported_and_recoverable():
+    """A config where the constant-P default sizing runs hot (n=512 g=2
+    B=32, dwell 256): the engine must REPORT the drops, and the documented
+    fallback (worst-case capacities) must restore bit-exactness."""
+    prob = MandelbrotProblem(n=512, g=2, r=2, B=32, max_dwell=256,
+                             backend="jnp")
+    ask, _ = run_ask(prob)
+    _, st_default = run_ask_scan(prob)
+    if st_default.overflow_dropped:  # the documented contract
+        scan, st = run_ask_scan(prob, safety_factor=1e9)
+        assert st.overflow_dropped == 0
+        np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
+
+
+def test_overflow_zero_at_worst_case_capacity():
+    prob = MandelbrotProblem(n=128, g=2, r=2, B=8, max_dwell=32,
+                             backend="jnp")
+    _, st = run_ask_scan(prob, safety_factor=1e9)
+    assert st.overflow_dropped == 0
+    # worst-case clamp: capacities equal the exhaustive level grids
+    levels = _num_levels(128, 2, 2, 8)
+    assert st.olt_caps == tuple((2 * 2 ** lv) ** 2 for lv in range(levels + 1))
+
+
+def test_scan_capacities_monotone_and_clamped():
+    caps = scan_capacities(1024, 4, 2, 32, p_subdiv=0.7, safety_factor=2.0)
+    assert caps[0] == 16  # level 0 is exactly g^2
+    for lv, cap in enumerate(caps):
+        assert 1 <= cap <= (4 * 2 ** lv) ** 2
+    # a safety factor large enough degenerates to the worst case
+    worst = scan_capacities(1024, 4, 2, 32, safety_factor=1e9)
+    assert worst == tuple((4 * 2 ** lv) ** 2 for lv in range(len(caps)))
+
+
+def test_solve_batch_matches_single_frame():
+    """Each frame of the vmapped batch must be bit-identical to a single-
+    frame run_ask at that frame's bounds, with ONE dispatch overall."""
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    frames = [
+        (-1.5, -1.0, 0.5, 1.0),
+        (-1.0, -0.5, 0.0, 0.5),
+        (-0.8, -0.2, -0.4, 0.2),
+    ]
+    canvases, st = solve_batch(prob, frames, safety_factor=1e9)
+    assert canvases.shape == (3, 128, 128)
+    assert st.kernel_launches == 1
+    assert st.overflow_dropped == 0
+    for i, b in enumerate(frames):
+        single, st_single = run_ask(dataclasses.replace(prob, bounds=b))
+        np.testing.assert_array_equal(np.asarray(canvases[i]),
+                                      np.asarray(single))
+        assert st.region_counts[i] == st_single.region_counts
+
+
+def test_levels_zero_chain():
+    """n/g <= B: no exploration levels, the scan engine is just the leaf
+    kernel over the root OLT."""
+    prob = MandelbrotProblem(n=64, g=2, r=2, B=64, max_dwell=16,
+                             backend="jnp")
+    ask, _ = run_ask(prob)
+    scan, st = run_ask_scan(prob)
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
+    assert st.kernel_launches == 1
+    assert st.region_counts == ()
+    assert st.leaf_count == 4

@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core import olt
 

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.configs.shapes import ShapeCase

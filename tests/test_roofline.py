@@ -29,7 +29,8 @@ def test_forward_flops_matches_cost_analysis():
     tokens = jnp.zeros((2, 128), jnp.int32)
     compiled = jax.jit(lambda p, t: forward(cfg, p, t)[0]).lower(
         params, tokens).compile()
-    got = compiled.cost_analysis()["flops"]
+    from repro.launch.hlo_analysis import cost_analysis_dict
+    got = cost_analysis_dict(compiled)["flops"]
     want = forward_flops(cfg, case)
     # XLA's CPU HloCostAnalysis counts 1 flop per MAC; the model (and the
     # TPU peak-FLOPs convention) count 2. The model also averages causal
