@@ -29,7 +29,13 @@ one program (peak = sum); scan keeps exactly two ring buffers (peak =
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -120,10 +126,78 @@ def batch_serving(writer, n=256, frames=8):
     writer("ask_scan_unbatched_wall_ms", f"n={n}", _best_time(loop) * 1e3)
 
 
+def sharded_serving(writer, n=128, frames=16, devices=8, chunk=8):
+    """The sharded row: 1-device vs N-host-device frame-axis sharding.
+
+    XLA locks the host device count at first init, so the comparison runs
+    in a subprocess with ``--xla_force_host_platform_device_count``. Both
+    mesh sizes stream the SAME chunked zoom trajectory through
+    ``launch.render_service``; rows record wall time per mesh, dispatches
+    per chunk (the acceptance target: exactly 1), and whether the sharded
+    canvases are bit-identical to the 1-device render.
+    """
+    root = Path(__file__).resolve().parent.parent
+    code = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        from repro.launch.mesh import make_frames_mesh
+        from repro.launch.render_service import RenderService, zoom_bounds
+        from repro.mandelbrot import MandelbrotProblem
+
+        prob = MandelbrotProblem(n={n}, g=4, r=2, B=16, max_dwell={DWELL},
+                                 backend="jnp")
+        out = {{}}
+        canvases = {{}}
+        for ndev in (1, {devices}):
+            svc = RenderService(prob, mesh=make_frames_mesh(ndev),
+                                chunk_frames={chunk}, safety_factor=1e9)
+            for _ in svc.stream(zoom_bounds(svc.chunk_frames)):
+                pass  # warm the jitted sharded pipeline
+            best = None
+            for _ in range(2):
+                c, rs = svc.render(zoom_bounds({frames}))
+                best = rs if best is None or rs.wall_s < best.wall_s else best
+            canvases[ndev] = c
+            out[f"wall_ms_{{ndev}}dev"] = best.wall_s * 1e3
+            out[f"dispatches_per_chunk_{{ndev}}dev"] = best.dispatches_per_chunk
+            out[f"program_traces_{{ndev}}dev"] = best.program_traces
+            out["chunks"] = best.chunks
+        out["identical"] = int(np.array_equal(canvases[1], canvases[{devices}]))
+        print("RESULT " + json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(root / "src")
+    case = f"n={n} f={frames}"  # no commas: rows stay 3-column CSV
+    try:
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=900, env=env, cwd=root)
+    except subprocess.TimeoutExpired:
+        writer("ask_scan_sharded_error", case, "timeout after 900s")
+        return
+    if r.returncode != 0:
+        tail = " ".join(r.stderr.split())[-200:].replace(",", ";")
+        writer("ask_scan_sharded_error", case, tail)
+        return
+    res = json.loads(r.stdout.rsplit("RESULT ", 1)[1])
+    writer("ask_scan_sharded_frames", case, frames)
+    writer("ask_scan_sharded_devices", case, devices)
+    writer("ask_scan_sharded_wall_ms_1dev", case, res["wall_ms_1dev"])
+    writer(f"ask_scan_sharded_wall_ms_{devices}dev", case,
+           res[f"wall_ms_{devices}dev"])
+    writer("ask_scan_sharded_dispatches_per_chunk", case,
+           res[f"dispatches_per_chunk_{devices}dev"])
+    writer("ask_scan_sharded_program_traces", case,
+           res[f"program_traces_{devices}dev"])
+    writer("ask_scan_sharded_identical", case, res["identical"])
+
+
 def run(writer, full=False):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
+        sharded_serving(writer, n=256, frames=64, devices=8, chunk=16)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
+        sharded_serving(writer, n=128, frames=16, devices=8, chunk=8)

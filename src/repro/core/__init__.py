@@ -10,11 +10,11 @@
 """
 
 from repro.core import cost_model, olt
-from repro.core.ask import (ASKProblem, ASKStats, run_ask, run_ask_fused,
-                            run_ask_scan, run_ask_scan_batch,
-                            scan_capacities)
+from repro.core.ask import (ASKProblem, ASKStats, pad_frames, run_ask,
+                            run_ask_fused, run_ask_scan, run_ask_scan_batch,
+                            run_ask_scan_sharded, scan_capacities)
 from repro.core.dp_emul import run_dp
 
 __all__ = ["cost_model", "olt", "ASKProblem", "ASKStats", "run_ask",
            "run_ask_fused", "run_ask_scan", "run_ask_scan_batch",
-           "scan_capacities", "run_dp"]
+           "run_ask_scan_sharded", "pad_frames", "scan_capacities", "run_dp"]

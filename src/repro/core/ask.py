@@ -51,6 +51,15 @@ Three execution modes (DESIGN.md Sec. 2), trading dispatches for memory:
                       (``mandelbrot.solve_batch``) a single XLA program
                       over a whole stack of frames.
 
+``run_ask_scan_sharded`` spreads the *frame* axis of the batched scan
+pipeline over a 1-D device mesh (``jax.sharding.NamedSharding``): per-level
+ring capacities are shared across frames and the ``lax.switch`` level index
+is unbatched, so only the canvas / OLT-ring carries partition -- each device
+renders its slice of the frame batch with zero cross-device collectives and
+the result is bit-identical to the unsharded batch. Frame counts that don't
+divide the device count are padded (repeating frame 0) and the padded
+frames are masked out of the leaf/overflow sums.
+
 A problem plugs in via the ``ASKProblem`` protocol; the Mandelbrot /
 Mariani-Silver instantiation lives in ``repro/mandelbrot``.
 """
@@ -69,7 +78,8 @@ from repro.core import olt as olt_lib
 from repro.core.cost_model import expected_level_counts, num_levels
 
 __all__ = ["ASKProblem", "ASKStats", "run_ask", "run_ask_fused",
-           "run_ask_scan", "run_ask_scan_batch", "scan_capacities"]
+           "run_ask_scan", "run_ask_scan_batch", "run_ask_scan_sharded",
+           "pad_frames", "scan_capacities"]
 
 
 class ASKProblem(Protocol):
@@ -348,17 +358,26 @@ def _build_scan_pipeline(problem: ASKProblem, caps: Sequence[int]):
 
 # Jitted-pipeline cache: retracing on every call would reintroduce a
 # host-side per-frame overhead -- the very lambda the engine removes.
-# Keyed on (problem, caps, batched) when the problem is hashable (the
-# Mandelbrot adapter is a frozen dataclass); unhashable problems just
-# rebuild. Bounded FIFO so a long-lived server can't grow it unboundedly.
+# Keyed on (problem, caps, batched, mesh) when the problem is hashable
+# (the Mandelbrot adapter is a frozen dataclass; Mesh is hashable);
+# unhashable problems just rebuild. Bounded FIFO so a long-lived server
+# can't grow it unboundedly.
 _PIPELINE_CACHE: dict = {}
 _PIPELINE_CACHE_MAX = 128
 
 
 def _jitted_pipeline(problem: ASKProblem, caps: Tuple[int, ...],
-                     batched: bool):
+                     batched: bool, mesh=None):
+    """Build (or fetch) the jitted scan pipeline.
+
+    ``mesh`` (batched only) places the frame axis of the extras / canvas /
+    ring carries on the mesh's single axis via ``NamedSharding``; the
+    lax.scan level index (and the lax.switch it feeds) is unbatched, hence
+    replicated -- every device runs the same per-level branch on its frame
+    slice, no collectives.
+    """
     try:
-        key = (problem, caps, batched)
+        key = (problem, caps, batched, mesh)
         cached = _PIPELINE_CACHE.get(key)
         if cached is not None:
             return cached
@@ -366,8 +385,15 @@ def _jitted_pipeline(problem: ASKProblem, caps: Tuple[int, ...],
         key = None
     pipeline = _build_scan_pipeline(problem, caps)
     if batched:
-        fn = jax.jit(jax.vmap(
-            lambda extra: pipeline(problem.init_state(), extra)))
+        vm = jax.vmap(lambda extra: pipeline(problem.init_state(), extra))
+        if mesh is None:
+            fn = jax.jit(vm)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            frames = NamedSharding(mesh, PartitionSpec(_frames_axis(mesh)))
+            fn = jax.jit(vm, in_shardings=frames,
+                         out_shardings=(frames, frames, frames, frames))
     else:
         fn = jax.jit(pipeline)
     if key is not None:
@@ -447,7 +473,22 @@ def run_ask_scan_batch(
     if block_until_ready:
         states = jax.block_until_ready(states)
 
-    entering = jax.device_get(entering)  # [F, levels]
+    per_frame = _per_frame_counts(jax.device_get(entering))
+    stats = ASKStats(
+        levels=max((len(c) for c in per_frame), default=0),  # executed
+        kernel_launches=1,  # one dispatch serves the whole frame batch
+        region_counts=per_frame,
+        leaf_count=int(jnp.sum(leaf_counts)),
+        overflow_dropped=int(jnp.sum(dropped)),
+        wall_s=time.perf_counter() - t0,
+        olt_caps=tuple(caps),
+    )
+    return states, stats
+
+
+def _per_frame_counts(entering) -> tuple:
+    """[F, levels] entering-count matrix -> per-frame region_counts tuples
+    (trailing zero levels trimmed, as in the single-frame engine)."""
     per_frame = []
     for row in entering:
         counts = []
@@ -456,13 +497,109 @@ def run_ask_scan_batch(
                 break
             counts.append(int(c))
         per_frame.append(tuple(counts))
+    return tuple(per_frame)
+
+
+# ---------------------------------------------------------------------------
+# run_ask_scan_sharded: the batched engine spread over a device mesh
+# ---------------------------------------------------------------------------
+
+def _frame_count(extras) -> int:
+    """Size of the leading (frame) axis, validated across all leaves."""
+    leaves = jax.tree_util.tree_leaves(extras)
+    if not leaves:
+        raise ValueError("extras must contain at least one array leaf")
+    sizes = {int(leaf.shape[0]) for leaf in leaves}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent frame-axis sizes across extras leaves: {sorted(sizes)}")
+    return sizes.pop()
+
+
+def pad_frames(extras, multiple: int):
+    """Pad the frame axis of ``extras`` up to the next multiple of ``multiple``.
+
+    Padding rows repeat frame 0 (valid parameters, so the padded frames
+    trace the same compute); callers mask them out of any reduction --
+    ``run_ask_scan_sharded`` slices its outputs back to the true frame
+    count before summing leaf/overflow stats. Returns (padded, F).
+    """
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    F = _frame_count(extras)
+    pad = (-F) % multiple
+
+    def _pad(leaf):
+        leaf = jnp.asarray(leaf)
+        if pad == 0:
+            return leaf
+        fill = jnp.broadcast_to(leaf[:1], (pad,) + leaf.shape[1:])
+        return jnp.concatenate([leaf, fill], axis=0)
+
+    return jax.tree_util.tree_map(_pad, extras), F
+
+
+def _frames_axis(mesh) -> str:
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            "run_ask_scan_sharded needs a 1-D frames mesh "
+            f"(e.g. launch.mesh.make_frames_mesh()), got axes {mesh.axis_names}")
+    return mesh.axis_names[0]
+
+
+def run_ask_scan_sharded(
+    problem: ASKProblem,
+    extras: Any,
+    *,
+    mesh,
+    capacities: Union[None, int, Sequence[int]] = None,
+    p_subdiv: float = 0.7,
+    safety_factor: float = 2.0,
+    pad_to: Union[int, None] = None,
+    block_until_ready: bool = True,
+) -> Tuple[Any, ASKStats]:
+    """``run_ask_scan_batch`` with the frame axis sharded over ``mesh``.
+
+    ``mesh`` is a 1-D ``jax.sharding.Mesh`` (conventionally axis
+    ``"frames"``; see ``launch.mesh.make_frames_mesh``). The frame batch is
+    padded up to a multiple of the device count (``pad_to`` overrides the
+    padding multiple -- the render service pins it to the chunk size so
+    every chunk, ragged tail included, reuses ONE compiled program). Padded
+    frames repeat frame 0 and are masked out of the returned canvases and
+    the leaf/overflow sums, so results are bit-identical to the unsharded
+    batch at any F. Still ONE dispatch: the whole sharded batch is a
+    single GSPMD-partitioned XLA program.
+    """
+    caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
+    n_dev = int(mesh.devices.size)
+    multiple = n_dev if pad_to is None else int(pad_to)
+    if multiple % n_dev:
+        raise ValueError(
+            f"pad_to={multiple} must be a multiple of the mesh device count {n_dev}")
+    padded, F = pad_frames(extras, multiple)
+    fn = _jitted_pipeline(problem, caps, batched=True, mesh=mesh)
+
+    t0 = time.perf_counter()
+    states, entering, leaf_counts, dropped = fn(padded)
+    if block_until_ready:
+        states = jax.block_until_ready(states)
+    wall = time.perf_counter() - t0
+
+    # per-device stats come back frame-sharded; gather once, then mask the
+    # padded tail out of every reduction (divisible batches skip the slice)
+    entering = jax.device_get(entering)[:F]
+    leaf_counts = jax.device_get(leaf_counts)[:F]
+    dropped = jax.device_get(dropped)[:F]
+    if F % multiple:
+        states = jax.tree_util.tree_map(lambda x: x[:F], states)
+
+    per_frame = _per_frame_counts(entering)
     stats = ASKStats(
-        levels=max((len(c) for c in per_frame), default=0),  # executed
-        kernel_launches=1,  # one dispatch serves the whole frame batch
-        region_counts=tuple(per_frame),
-        leaf_count=int(jnp.sum(leaf_counts)),
-        overflow_dropped=int(jnp.sum(dropped)),
-        wall_s=time.perf_counter() - t0,
+        levels=max((len(c) for c in per_frame), default=0),
+        kernel_launches=1,  # one GSPMD program serves all devices' frames
+        region_counts=per_frame,
+        leaf_count=int(sum(int(c) for c in leaf_counts)),
+        overflow_dropped=int(sum(int(d) for d in dropped)),
+        wall_s=wall,
         olt_caps=tuple(caps),
     )
     return states, stats

@@ -14,10 +14,26 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "data_axes", "DATA_AXES",
-           "MODEL_AXIS"]
+__all__ = ["make_production_mesh", "make_mesh", "make_frames_mesh",
+           "data_axes", "DATA_AXES", "MODEL_AXIS", "FRAMES_AXIS"]
 
 MODEL_AXIS = "model"
+FRAMES_AXIS = "frames"
+
+
+def make_frames_mesh(num_devices: int | None = None, *,
+                     axis_name: str = FRAMES_AXIS):
+    """1-D serving mesh for sharded frame rendering.
+
+    The frame axis of the batched ASK scan pipeline
+    (``core.ask.run_ask_scan_sharded`` / ``mandelbrot.solve_batch(...,
+    mesh=...)``) shards over this mesh's single axis. Defaults to every
+    visible device; pass ``num_devices`` to carve out a prefix (the
+    render-service benchmarks pit a 1-device mesh against the full host
+    complement).
+    """
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    return jax.make_mesh((n,), (axis_name,))
 
 
 def make_production_mesh(*, multi_pod: bool = False,

@@ -145,7 +145,7 @@ def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
     raise ValueError(f"unknown method {method!r}")
 
 
-def solve_batch(problem: MandelbrotProblem, bounds_batch, **kw):
+def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None, **kw):
     """Batched frame serving: render F frames in ONE XLA dispatch.
 
     ``bounds_batch`` is [F, 4] (re0, im0, re1, im1) per frame -- a zoom
@@ -155,10 +155,19 @@ def solve_batch(problem: MandelbrotProblem, bounds_batch, **kw):
     compute runs the traced-bounds jnp path (identical math, so each frame
     is bit-identical to a single-frame ``run_ask`` at those bounds).
 
+    ``mesh`` (a 1-D ``jax.sharding.Mesh``, see ``launch.mesh.
+    make_frames_mesh``) shards the frame axis across its devices
+    (``core.ask.run_ask_scan_sharded``): still one dispatch, frame counts
+    that don't divide the device count are padded and masked, and each
+    frame stays bit-identical to the unsharded batch. For streaming more
+    frames than fit one batch, see ``launch.render_service``.
+
     Returns (canvases [F, n, n], ASKStats).
     """
-    from repro.core.ask import run_ask_scan_batch
+    from repro.core.ask import run_ask_scan_batch, run_ask_scan_sharded
     bounds_arr = jnp.asarray(bounds_batch, jnp.float32)
     if bounds_arr.ndim != 2 or bounds_arr.shape[1] != 4:
         raise ValueError(f"bounds_batch must be [F, 4], got {bounds_arr.shape}")
-    return run_ask_scan_batch(problem, bounds_arr, **kw)
+    if mesh is None:
+        return run_ask_scan_batch(problem, bounds_arr, **kw)
+    return run_ask_scan_sharded(problem, bounds_arr, mesh=mesh, **kw)

@@ -6,9 +6,13 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.core import olt as olt_lib
-from repro.core.ask import (_num_levels, run_ask, run_ask_scan,
+from repro.core.ask import (_num_levels, _resolve_capacities, pad_frames,
+                            run_ask, run_ask_scan, run_ask_scan_batch,
                             scan_capacities)
+from repro.launch.mesh import make_frames_mesh
 from repro.mandelbrot import MandelbrotProblem, solve_batch
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
@@ -161,6 +165,139 @@ def test_solve_batch_matches_single_frame():
         np.testing.assert_array_equal(np.asarray(canvases[i]),
                                       np.asarray(single))
         assert st.region_counts[i] == st_single.region_counts
+
+
+# ---------------------------------------------------------------------------
+# sharded path: frame padding + masking (the in-process device count is 1,
+# so these pin the padding multiple with pad_to; the real 8-device mesh run
+# lives in tests/test_distributed.py)
+# ---------------------------------------------------------------------------
+
+def test_pad_frames_repeats_frame_zero():
+    b = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    padded, f = pad_frames(b, 4)
+    assert f == 3 and padded.shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(padded[3]), np.asarray(b[0]))
+    same, f = pad_frames(b, 3)  # already divisible: untouched
+    assert f == 3 and same.shape == (3, 4)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(b))
+    with pytest.raises(ValueError):
+        pad_frames(b, 0)
+
+
+def _frames(f):
+    return np.stack([[-1.6 + 0.03 * i, -1.1, 0.55, 1.05] for i in range(f)]
+                    ).astype(np.float32)
+
+
+def test_sharded_single_frame_padded():
+    """F=1 padded up to 4: the three padding frames must be invisible --
+    canvas, leaf count, and region counts all match the unsharded batch."""
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    b = _frames(1)
+    ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b), safety_factor=1e9)
+    shd, st = solve_batch(prob, b, mesh=make_frames_mesh(1), pad_to=4,
+                          safety_factor=1e9)
+    assert shd.shape == (1, 128, 128)
+    np.testing.assert_array_equal(np.asarray(shd), np.asarray(ref))
+    assert st.kernel_launches == 1
+    assert st.leaf_count == st_ref.leaf_count
+    assert st.overflow_dropped == st_ref.overflow_dropped == 0
+    assert st.region_counts == st_ref.region_counts
+
+
+def test_sharded_padding_indivisible():
+    """F=7 against a padding multiple of 4 (7 -> 8): every true frame
+    bit-identical, padded tail sliced off."""
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    b = _frames(7)
+    ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b), safety_factor=1e9)
+    shd, st = solve_batch(prob, b, mesh=make_frames_mesh(1), pad_to=4,
+                          safety_factor=1e9)
+    assert shd.shape == (7, 128, 128)
+    np.testing.assert_array_equal(np.asarray(shd), np.asarray(ref))
+    assert st.leaf_count == st_ref.leaf_count
+    assert st.region_counts == st_ref.region_counts
+
+
+def test_sharded_pad_to_must_cover_devices():
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    mesh = make_frames_mesh(1)
+    with pytest.raises(ValueError):
+        solve_batch(prob, _frames(2), mesh=mesh, pad_to=0)
+
+
+def test_sharded_overflow_padded_frames_masked():
+    """Undersized capacities: the padding frames (copies of frame 0) DO
+    overflow inside the program, but must contribute zero to the reported
+    ``overflow_dropped`` -- the sum matches the unsharded batch exactly."""
+    prob = MandelbrotProblem(n=128, g=2, r=2, B=8, max_dwell=32,
+                             backend="jnp")
+    levels = _num_levels(128, 2, 2, 8)
+    caps = (4,) + (12,) * levels  # roots fit; children overflow
+    b = _frames(3)
+    # frame 0 alone must drop regions, else padding could never inflate the sum
+    _, st0 = run_ask_scan(dataclasses.replace(prob, bounds=tuple(b[0])),
+                          capacities=caps)
+    assert st0.overflow_dropped > 0
+    ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b), capacities=caps)
+    assert st_ref.overflow_dropped >= st0.overflow_dropped
+    shd, st = solve_batch(prob, b, mesh=make_frames_mesh(1), pad_to=8,
+                          capacities=caps)
+    assert st.overflow_dropped == st_ref.overflow_dropped
+    assert st.leaf_count == st_ref.leaf_count
+    np.testing.assert_array_equal(np.asarray(shd), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# capacity-sizing properties (scan_capacities / _resolve_capacities)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256, 1024]),
+    g=st.sampled_from([2, 4]),
+    r=st.sampled_from([2, 4]),
+    B=st.sampled_from([8, 16, 32]),
+    p=st.floats(0.05, 1.0),
+    sf=st.floats(1.0, 64.0),
+)
+def test_scan_capacities_properties(n, g, r, B, p, sf):
+    """Properties: positive, one capacity per level 0..tau, bounded by the
+    exhaustive worst case, and elementwise monotone in safety_factor."""
+    if not _valid_chain(n, g, r, B):
+        return
+    caps = scan_capacities(n, g, r, B, p_subdiv=p, safety_factor=sf)
+    levels = _num_levels(n, g, r, B)
+    assert len(caps) == levels + 1
+    for lv, cap in enumerate(caps):
+        assert cap >= 1
+        assert cap <= (g * r ** lv) ** 2
+    bigger = scan_capacities(n, g, r, B, p_subdiv=p, safety_factor=sf * 2)
+    assert all(hi >= lo for lo, hi in zip(caps, bigger))
+
+
+@settings(max_examples=25, deadline=None)
+@given(uniform=st.integers(-4, 64), sf=st.floats(1.0, 32.0))
+def test_resolve_capacities_properties(uniform, sf):
+    """_resolve_capacities: default path delegates to scan_capacities; an
+    int broadcasts (floored at 1) to every level; a sequence must cover
+    levels 0..tau exactly."""
+    prob = MandelbrotProblem(n=128, g=2, r=2, B=8, backend="jnp")
+    levels = _num_levels(128, 2, 2, 8)
+    default = _resolve_capacities(prob, None, 0.7, sf)
+    assert default == scan_capacities(128, 2, 2, 8, p_subdiv=0.7,
+                                      safety_factor=sf)
+    assert len(default) == levels + 1 and all(c >= 1 for c in default)
+    broadcast = _resolve_capacities(prob, uniform, 0.7, sf)
+    assert broadcast == (max(1, uniform),) * (levels + 1)
+    roundtrip = _resolve_capacities(prob, list(default), 0.7, sf)
+    assert roundtrip == default
+    with pytest.raises(ValueError):
+        _resolve_capacities(prob, list(default) + [1], 0.7, sf)
 
 
 def test_levels_zero_chain():
