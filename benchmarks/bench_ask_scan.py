@@ -192,12 +192,154 @@ def sharded_serving(writer, n=128, frames=16, devices=8, chunk=8):
     writer("ask_scan_sharded_identical", case, res["identical"])
 
 
+def planner_batch(writer, n=512, dwell=256, n_sparse=8, n_dense=4):
+    """Heterogeneous-zoom acceptance rows: the occupancy-aware capacity
+    planner (core/planner.py) against uniform safety_factor=2.0 sizing on
+    a batch mixing zoomed-out (sparse) and deep-zoom (dense) frames.
+
+    Rows record, per sizing policy: total OLT-ring memory (rows and
+    bytes), regions overflow-dropped, and warm wall time. The planner
+    must report overflow_dropped == 0 (retrying internally if a bucket
+    runs hot) with strictly less total ring memory than the uniform
+    baseline -- which, sized for the P=0.7 average, both over-allocates
+    the sparse majority AND drops regions on the dense frames.
+    """
+    from repro.core.ask import scan_capacities
+    from repro.core.planner import plan_capacities
+
+    prob = MandelbrotProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                             backend="jnp")
+
+    def window(cx, cy, w):
+        return (cx - w / 2, cy - w / 2, cx + w / 2, cy + w / 2)
+
+    widths = np.geomspace(16.0, 4.0, n_sparse)
+    sparse = [window(-0.5, 0.0, float(w)) for w in widths]
+    dense = [window(-0.7436447860, 0.1318252536, 3.0 / 2 ** k)
+             for k in np.linspace(4, 12, n_dense)]
+    bounds = sparse + dense
+    F = len(bounds)
+    case = f"n={n} f={F}"
+
+    plan = plan_capacities(prob, bounds, num_buckets=4)
+    # the warm call (compiles every bucket program) already yields the
+    # canvases + report; only the timing reps re-execute
+    planned_canv, rep = solve_batch(prob, bounds, plan=plan)
+    t_plan = _best_time(lambda: solve_batch(prob, bounds, plan=plan), reps=2)
+
+    _, st_uni = solve_batch(prob, bounds, safety_factor=2.0)  # warm
+    t_uni = _best_time(lambda: solve_batch(prob, bounds, safety_factor=2.0),
+                       reps=2)
+    uni_caps = scan_capacities(n, 4, 2, 16, safety_factor=2.0)
+    uni_rows = F * 2 * max(uni_caps)
+
+    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+
+    writer("ask_scan_planner_frames", case, F)
+    writer("ask_scan_planner_buckets", case, len(plan.buckets))
+    writer("ask_scan_planner_dispatches", case, rep.dispatches)
+    writer("ask_scan_planner_retries", case, rep.retries)
+    writer("ask_scan_planner_overflow", case, rep.overflow_dropped)
+    writer("ask_scan_planner_ring_rows", case, rep.ring_rows)
+    writer("ask_scan_planner_ring_bytes", case, rep.ring_bytes)
+    writer("ask_scan_planner_wall_ms", case, t_plan * 1e3)
+    writer("ask_scan_uniform2x_overflow", case, st_uni.overflow_dropped)
+    writer("ask_scan_uniform2x_ring_rows", case, uni_rows)
+    writer("ask_scan_uniform2x_ring_bytes", case, uni_rows * 8)
+    writer("ask_scan_uniform2x_wall_ms", case, t_uni * 1e3)
+    writer("ask_scan_planner_ring_vs_uniform", case,
+           rep.ring_rows / uni_rows if uni_rows else 0.0)
+    writer("ask_scan_planner_identical", case,
+           int(np.array_equal(planned_canv, np.asarray(exact))))
+
+
+def pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8,
+                      sink_ms=40.0):
+    """Async-pipeline acceptance rows: RenderService pipeline_depth=2 vs
+    the synchronous path on a >= 8-chunk trajectory with a blocking
+    per-chunk host-I/O sink (a sleep: models encoding/writing a chunk to
+    disk or network without competing for the CPU cores XLA computes
+    on). The pipelined wall time must land measurably below the sync
+    path's summed per-chunk (compute + host-copy) cost, rs.busy_s.
+
+    Runs in a subprocess: the measurement needs a pristine XLA client
+    (background async execution), which earlier in-process suites and
+    their child processes can perturb on small CI hosts.
+    """
+    root = Path(__file__).resolve().parent.parent
+    code = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        from repro.launch.mesh import make_frames_mesh
+        from repro.launch.render_service import RenderService, zoom_bounds
+        from repro.mandelbrot import MandelbrotProblem
+
+        prob = MandelbrotProblem(n={n}, g=4, r=2, B=16, max_dwell={dwell},
+                                 backend="jnp")
+        mesh = make_frames_mesh(1)
+
+        def sink(canvases, stats):
+            time.sleep({sink_ms} / 1e3)
+
+        out = {{}}
+        canvases = {{}}
+        for depth in (1, 2):
+            svc = RenderService(prob, mesh=mesh, chunk_frames={chunk},
+                                pipeline_depth=depth, safety_factor=2.0)
+            for _ in svc.stream(zoom_bounds(svc.chunk_frames)):
+                pass  # warm the chunk program
+            best = None
+            for _ in range(2):
+                c, rs = svc.render(zoom_bounds({frames}), sink=sink)
+                best = rs if best is None or rs.wall_s < best.wall_s else best
+            canvases[depth] = c
+            key = "sync" if depth == 1 else "pipelined"
+            out[f"{{key}}_wall_ms"] = best.wall_s * 1e3
+            out[f"{{key}}_busy_ms"] = best.busy_s * 1e3
+            out[f"{{key}}_fetch_ms"] = best.fetch_s * 1e3
+            out["chunks"] = best.chunks
+        out["identical"] = int(np.array_equal(canvases[1], canvases[2]))
+        print("RESULT " + json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    case = f"n={n} f={frames} chunk={chunk}"
+    try:
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, timeout=900, env=env, cwd=root)
+    except subprocess.TimeoutExpired:
+        writer("render_pipeline_error", case, "timeout after 900s")
+        return
+    if r.returncode != 0:
+        tail = " ".join(r.stderr.split())[-200:].replace(",", ";")
+        writer("render_pipeline_error", case, tail)
+        return
+    res = json.loads(r.stdout.rsplit("RESULT ", 1)[1])
+    writer("render_pipeline_chunks", case, res["chunks"])
+    writer("render_pipeline_sink_ms", case, sink_ms)
+    writer("render_sync_busy_ms", case, res["sync_busy_ms"])
+    writer("render_sync_wall_ms", case, res["sync_wall_ms"])
+    writer("render_sync_fetch_ms", case, res["sync_fetch_ms"])
+    writer("render_pipelined_wall_ms", case, res["pipelined_wall_ms"])
+    writer("render_pipelined_fetch_ms", case, res["pipelined_fetch_ms"])
+    writer("render_overlap_saved_ms", case,
+           res["sync_busy_ms"] - res["pipelined_wall_ms"])
+    writer("render_pipelined_speedup", case,
+           res["sync_busy_ms"] / res["pipelined_wall_ms"]
+           if res["pipelined_wall_ms"] else 0.0)
+    writer("render_pipelined_identical", case, res["identical"])
+
+
 def run(writer, full=False):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
         sharded_serving(writer, n=256, frames=64, devices=8, chunk=16)
+        planner_batch(writer, n=512, dwell=256, n_sparse=12, n_dense=6)
+        pipelined_serving(writer, n=256, dwell=128, frames=128, chunk=8)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
         sharded_serving(writer, n=128, frames=16, devices=8, chunk=8)
+        planner_batch(writer, n=512, dwell=128, n_sparse=8, n_dense=4)
+        pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8)

@@ -4,17 +4,25 @@
   olt                 offset lookup tables: prefix-sum compaction, SFCs
   ask                 Adaptive Serial Kernels engine (bucketed + fused +
                       single-dispatch scan over a bounded OLT ring)
+  planner             occupancy-aware capacity planner: per-frame p_subdiv
+                      from zoom depth, bucketed dispatch, overflow retry
   dp_emul             Dynamic-Parallelism-style recursive baseline
   ssd_synth           Sec. 7: k-D ASK on synthetic SSD fields (Morton OLT)
   adaptive_attention  beyond-paper: ASK-refined block-sparse attention
 """
 
-from repro.core import cost_model, olt
-from repro.core.ask import (ASKProblem, ASKStats, pad_frames, run_ask,
+from repro.core import cost_model, olt, planner
+from repro.core.ask import (ASKProblem, ASKStats, ShardedDispatch,
+                            dispatch_ask_scan_sharded, pad_frames, run_ask,
                             run_ask_fused, run_ask_scan, run_ask_scan_batch,
                             run_ask_scan_sharded, scan_capacities)
 from repro.core.dp_emul import run_dp
+from repro.core.planner import (CapacityPlan, PlanReport, plan_capacities,
+                                solve_planned)
 
-__all__ = ["cost_model", "olt", "ASKProblem", "ASKStats", "run_ask",
-           "run_ask_fused", "run_ask_scan", "run_ask_scan_batch",
-           "run_ask_scan_sharded", "pad_frames", "scan_capacities", "run_dp"]
+__all__ = ["cost_model", "olt", "planner", "ASKProblem", "ASKStats",
+           "ShardedDispatch", "run_ask", "run_ask_fused", "run_ask_scan",
+           "run_ask_scan_batch", "run_ask_scan_sharded",
+           "dispatch_ask_scan_sharded", "pad_frames", "scan_capacities",
+           "CapacityPlan", "PlanReport", "plan_capacities", "solve_planned",
+           "run_dp"]

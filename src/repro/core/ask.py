@@ -77,8 +77,9 @@ import jax.numpy as jnp
 from repro.core import olt as olt_lib
 from repro.core.cost_model import expected_level_counts, num_levels
 
-__all__ = ["ASKProblem", "ASKStats", "run_ask", "run_ask_fused",
-           "run_ask_scan", "run_ask_scan_batch", "run_ask_scan_sharded",
+__all__ = ["ASKProblem", "ASKStats", "ShardedDispatch", "run_ask",
+           "run_ask_fused", "run_ask_scan", "run_ask_scan_batch",
+           "run_ask_scan_sharded", "dispatch_ask_scan_sharded",
            "pad_frames", "scan_capacities"]
 
 
@@ -131,6 +132,18 @@ class ASKStats:
     wall_s: float = 0.0
     overflow_dropped: int = 0  # fused/scan modes: regions beyond capacity
     olt_caps: tuple = ()  # OLT rows allocated per level (incl. leaf level)
+    # batched/sharded engines only: per-true-frame breakdowns of the two
+    # sums above, in input frame order. ``frame_overflow`` is what the
+    # capacity planner's retry path keys on (core/planner.py): a frame
+    # whose entry is nonzero gets re-planned into a larger bucket.
+    frame_overflow: tuple = ()
+    frame_leaf_counts: tuple = ()
+
+    @property
+    def ring_rows(self) -> int:
+        """Live OLT rows resident per frame in the scan engines' double-
+        buffered ring: two buffers of the widest level slice."""
+        return 2 * max(self.olt_caps) if self.olt_caps else 0
 
 
 def _num_levels(n: int, g: int, r: int, B: int) -> int:
@@ -250,9 +263,20 @@ def scan_capacities(
 ) -> Tuple[int, ...]:
     """Per-level ring-slice capacities for ``run_ask_scan``.
 
-    Expected occupancy from the cost model (E_l = g^2 (r^2 p)^l) times a
-    safety factor, clamped to the exhaustive worst case (g r^l)^2. Level 0
-    is always exactly g^2 (every root is live).
+    Expected occupancy from the cost model (E_l = g^2 (r^2 p)^l, paper
+    Sec. 4.2.1 assumption ii -- ``cost_model.expected_level_counts``)
+    times a safety factor, clamped to the exhaustive worst case (g r^l)^2.
+    Level 0 is always exactly g^2 (every root is live). One capacity per
+    level 0..tau, where tau = floor(log_r(n / (g B))) is the paper's
+    subdivision depth (``cost_model.tau_levels`` / ``num_levels``).
+
+    ``p_subdiv`` is the constant per-level subdivision probability P that
+    also parameterises the paper's work model W_SSD^M (Eq. 20,
+    ``cost_model.w_ssd_mandelbrot``): the same P that predicts the work
+    reduction predicts the live-OLT footprint. The default P=0.7 matches
+    the paper's Mandelbrot benchmark window; deep-zoom windows hug the
+    set boundary and run effectively hotter -- ``core.planner`` sizes P
+    per frame from zoom depth instead of using this one constant.
     """
     expected = expected_level_counts(n, g, r, B, P=p_subdiv)
     caps = []
@@ -413,11 +437,22 @@ def run_ask_scan(
 ) -> Tuple[Any, ASKStats]:
     """Single-dispatch streaming ASK: lax.scan over levels, bounded ring.
 
+    The whole tau-level pipeline (tau from ``cost_model.tau_levels``, the
+    paper's assumption iii) compiles to ONE XLA program; the live OLT is
+    carried through a double-buffered ring whose per-level slices are
+    sized from the cost model's expected occupancy E_l = g^2 (r^2 P)^l
+    (``scan_capacities``; P = ``p_subdiv`` times ``safety_factor``) -- the
+    same P that parameterises W_SSD^M (Eq. 20, ``cost_model.
+    w_ssd_mandelbrot``). Ring memory is therefore O(2 x max_l E_l) rows
+    (``ASKStats.ring_rows``) instead of the fused engine's worst case.
+
     ``capacities`` overrides the cost-model sizing: an int is a uniform
     per-level capacity (the overflow tests undersize it deliberately), a
     sequence gives one capacity per level 0..tau. Output is bit-identical
     to ``run_ask`` whenever nothing overflows (``stats.overflow_dropped ==
     0``); dropped regions leave their pixels at the init_state value.
+    Rather than hand-tuning ``safety_factor`` when drops appear, see
+    ``core.planner`` -- it re-plans overflowing frames automatically.
     """
     caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
     fn = _jitted_pipeline(problem, caps, batched=False)
@@ -474,14 +509,18 @@ def run_ask_scan_batch(
         states = jax.block_until_ready(states)
 
     per_frame = _per_frame_counts(jax.device_get(entering))
+    leaf_host = [int(c) for c in jax.device_get(leaf_counts)]
+    drop_host = [int(d) for d in jax.device_get(dropped)]
     stats = ASKStats(
         levels=max((len(c) for c in per_frame), default=0),  # executed
         kernel_launches=1,  # one dispatch serves the whole frame batch
         region_counts=per_frame,
-        leaf_count=int(jnp.sum(leaf_counts)),
-        overflow_dropped=int(jnp.sum(dropped)),
+        leaf_count=sum(leaf_host),
+        overflow_dropped=sum(drop_host),
         wall_s=time.perf_counter() - t0,
         olt_caps=tuple(caps),
+        frame_overflow=tuple(drop_host),
+        frame_leaf_counts=tuple(leaf_host),
     )
     return states, stats
 
@@ -546,6 +585,104 @@ def _frames_axis(mesh) -> str:
     return mesh.axis_names[0]
 
 
+@dataclasses.dataclass
+class ShardedDispatch:
+    """An in-flight sharded batch: enqueued on the devices, not yet
+    materialised on the host.
+
+    JAX dispatch is asynchronous -- ``dispatch_ask_scan_sharded`` returns
+    as soon as the XLA call is enqueued, holding device arrays here. The
+    async render service (``launch.render_service``, ``pipeline_depth >=
+    2``) exploits exactly this: it enqueues chunk k+1 and only then calls
+    ``finalize()`` on chunk k, so the host-side transfer of k overlaps the
+    device compute of k+1. ``finalize`` blocks, applies the pad-masking,
+    and returns the same ``(states, ASKStats)`` the synchronous entry
+    point does.
+    """
+
+    states: Any  # padded [F_pad, ...] device arrays
+    entering: Any  # [F_pad, levels] live counts entering each level
+    leaf_counts: Any  # [F_pad]
+    dropped: Any  # [F_pad]
+    frames: int  # true F before padding
+    multiple: int  # padding multiple the batch was rounded up to
+    caps: Tuple[int, ...]
+    t0: float  # perf_counter at enqueue (finalize stamps wall_s from it)
+
+    def finalize(self, *, block_until_ready: bool = True) -> Tuple[Any, ASKStats]:
+        """Block on the in-flight program and assemble ``(states, stats)``.
+
+        Idempotent-by-construction is NOT promised: call once per
+        dispatch. Stats transfers (``entering``/``leaf``/``dropped``) force
+        a device sync regardless of ``block_until_ready``, which only
+        gates the explicit wait on the canvases.
+        """
+        states = self.states
+        if block_until_ready:
+            states = jax.block_until_ready(states)
+        F = self.frames
+        # per-device stats come back frame-sharded; gather once, then mask
+        # the padded tail out of every reduction (divisible batches skip
+        # the slice)
+        entering = jax.device_get(self.entering)[:F]
+        leaf_counts = jax.device_get(self.leaf_counts)[:F]
+        dropped = jax.device_get(self.dropped)[:F]
+        if F % self.multiple:
+            states = jax.tree_util.tree_map(lambda x: x[:F], states)
+
+        per_frame = _per_frame_counts(entering)
+        leaf_host = [int(c) for c in leaf_counts]
+        drop_host = [int(d) for d in dropped]
+        stats = ASKStats(
+            levels=max((len(c) for c in per_frame), default=0),
+            kernel_launches=1,  # one GSPMD program serves all devices' frames
+            region_counts=per_frame,
+            leaf_count=sum(leaf_host),
+            overflow_dropped=sum(drop_host),
+            wall_s=time.perf_counter() - self.t0,
+            olt_caps=tuple(self.caps),
+            frame_overflow=tuple(drop_host),
+            frame_leaf_counts=tuple(leaf_host),
+        )
+        return states, stats
+
+
+def dispatch_ask_scan_sharded(
+    problem: ASKProblem,
+    extras: Any,
+    *,
+    mesh,
+    capacities: Union[None, int, Sequence[int]] = None,
+    p_subdiv: float = 0.7,
+    safety_factor: float = 2.0,
+    pad_to: Union[int, None] = None,
+) -> ShardedDispatch:
+    """Enqueue one sharded batch WITHOUT blocking on the result.
+
+    The async half of ``run_ask_scan_sharded``: pads, fetches the compiled
+    pipeline from the cache, issues the XLA call, and returns a
+    ``ShardedDispatch`` handle immediately (JAX async dispatch -- the
+    devices compute in the background). Call ``.finalize()`` to collect
+    ``(states, ASKStats)``. The pipelined render service keeps a bounded
+    queue of these handles in flight.
+    """
+    caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
+    n_dev = int(mesh.devices.size)
+    multiple = n_dev if pad_to is None else int(pad_to)
+    if multiple % n_dev:
+        raise ValueError(
+            f"pad_to={multiple} must be a multiple of the mesh device count {n_dev}")
+    padded, F = pad_frames(extras, multiple)
+    fn = _jitted_pipeline(problem, caps, batched=True, mesh=mesh)
+
+    t0 = time.perf_counter()
+    states, entering, leaf_counts, dropped = fn(padded)
+    return ShardedDispatch(states=states, entering=entering,
+                           leaf_counts=leaf_counts, dropped=dropped,
+                           frames=F, multiple=multiple, caps=tuple(caps),
+                           t0=t0)
+
+
 def run_ask_scan_sharded(
     problem: ASKProblem,
     extras: Any,
@@ -568,38 +705,12 @@ def run_ask_scan_sharded(
     the leaf/overflow sums, so results are bit-identical to the unsharded
     batch at any F. Still ONE dispatch: the whole sharded batch is a
     single GSPMD-partitioned XLA program.
+
+    This is the synchronous wrapper over ``dispatch_ask_scan_sharded`` +
+    ``ShardedDispatch.finalize``; async callers use those two halves
+    directly to overlap host I/O with the next dispatch.
     """
-    caps = _resolve_capacities(problem, capacities, p_subdiv, safety_factor)
-    n_dev = int(mesh.devices.size)
-    multiple = n_dev if pad_to is None else int(pad_to)
-    if multiple % n_dev:
-        raise ValueError(
-            f"pad_to={multiple} must be a multiple of the mesh device count {n_dev}")
-    padded, F = pad_frames(extras, multiple)
-    fn = _jitted_pipeline(problem, caps, batched=True, mesh=mesh)
-
-    t0 = time.perf_counter()
-    states, entering, leaf_counts, dropped = fn(padded)
-    if block_until_ready:
-        states = jax.block_until_ready(states)
-    wall = time.perf_counter() - t0
-
-    # per-device stats come back frame-sharded; gather once, then mask the
-    # padded tail out of every reduction (divisible batches skip the slice)
-    entering = jax.device_get(entering)[:F]
-    leaf_counts = jax.device_get(leaf_counts)[:F]
-    dropped = jax.device_get(dropped)[:F]
-    if F % multiple:
-        states = jax.tree_util.tree_map(lambda x: x[:F], states)
-
-    per_frame = _per_frame_counts(entering)
-    stats = ASKStats(
-        levels=max((len(c) for c in per_frame), default=0),
-        kernel_launches=1,  # one GSPMD program serves all devices' frames
-        region_counts=per_frame,
-        leaf_count=int(sum(int(c) for c in leaf_counts)),
-        overflow_dropped=int(sum(int(d) for d in dropped)),
-        wall_s=wall,
-        olt_caps=tuple(caps),
-    )
-    return states, stats
+    d = dispatch_ask_scan_sharded(
+        problem, extras, mesh=mesh, capacities=capacities,
+        p_subdiv=p_subdiv, safety_factor=safety_factor, pad_to=pad_to)
+    return d.finalize(block_until_ready=block_until_ready)

@@ -1,0 +1,479 @@
+"""Occupancy-aware frame capacity planner for the batched ASK engines.
+
+The scan engines size their OLT ring from ONE global (``p_subdiv``,
+``safety_factor``) pair, so a batch mixing deep-zoom frames (dense: the
+window hugs the set boundary, almost every region subdivides) with wide
+frames (sparse: most regions are homogeneous) either overflows the ring
+or wastes ring memory on the sparse majority. This module replaces the
+global knob with a per-frame *plan*:
+
+  1. estimate each frame's effective subdivision probability from its
+     zoom depth (``effective_p_subdiv``: deep zooms => higher P, the
+     paper's Sec. 4.2.1 assumption-ii parameter evaluated per frame);
+  2. evaluate the cost model's expected occupancy E_l = g^2 (r^2 P)^l at
+     that per-frame P (``cost_model.expected_level_counts``) and bucket
+     frames into at most K capacity classes (``plan_capacities``);
+  3. dispatch ONE compiled program per bucket with bucket-local ring
+     capacities (``solve_planned``; capacities are part of the jitted-
+     pipeline cache key, so distinct buckets compile once each and are
+     reused across batches);
+  4. when a frame still overflows its bucket, re-plan it into the next
+     bucket (or escalate toward the worst case, which cannot overflow)
+     instead of asking the caller to hand-tune ``safety_factor`` --
+     the retry path keys on ``ASKStats.frame_overflow``.
+
+Grouping launches by *expected work* instead of issuing them uniformly is
+the same consolidation lever the DP-compiler literature pulls (Wu et al.
+2016; Olabi et al. 2022); here the unit of consolidation is a frame and
+the budget is ring rows.
+
+Entry points: ``plan_capacities`` (bounds -> ``CapacityPlan``),
+``solve_planned`` (execute a plan), and ``mandelbrot.solve_batch(...,
+plan=...)`` which wires both behind the familiar front-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.ask import (_num_levels, run_ask_scan_batch,
+                            run_ask_scan_sharded, scan_capacities)
+from repro.core.cost_model import expected_level_counts
+
+__all__ = [
+    "FrameEstimate",
+    "BucketPlan",
+    "CapacityPlan",
+    "PlanReport",
+    "zoom_depth",
+    "effective_p_subdiv",
+    "estimate_frames",
+    "plan_from_p",
+    "plan_capacities",
+    "worst_case_capacities",
+    "solve_planned",
+]
+
+# int32 (cy, cx) coordinates: bytes per OLT row
+_ROW_BYTES = 8
+
+
+# ---------------------------------------------------------------------------
+# per-frame occupancy estimation
+# ---------------------------------------------------------------------------
+
+def zoom_depth(width: float, *, ref_width: float, r: int) -> float:
+    """Zoom depth of a frame window in subdivision levels.
+
+    ``log_r(ref_width / width)``: how many r-fold shrinks separate this
+    frame from the reference window. NEGATIVE for frames wider than the
+    reference (zoomed out). Measured in the same base r as the
+    subdivision tree, so depth composes with the paper's tau =
+    log_r(n / (g B)) level count (``cost_model.tau_levels``).
+    """
+    if width <= 0 or ref_width <= 0:
+        raise ValueError(f"widths must be positive, got {width} / {ref_width}")
+    return math.log(ref_width / width) / math.log(r)
+
+
+def effective_p_subdiv(depth: float, *, p_deep: float = 0.97,
+                       slope: float = 0.18,
+                       p_min: float = 0.3) -> float:
+    """Effective per-level subdivision probability at a given zoom depth.
+
+    A self-similar boundary fills a constant *fraction* of the window at
+    every scale at or inside the reference view, so frames at depth >= 0
+    (reference width or any deep zoom onto the boundary) share a
+    saturated P = ``p_deep`` -- near-boundary windows run hot, the regime
+    the paper's constant-P assumption (Sec. 4.2.1 assumption ii)
+    describes. Zoomed OUT (depth < 0) the set occupies a shrinking
+    fraction of the window: whole regions go homogeneous at the first
+    query and resolve early, and the effective P falls off close to
+    linearly per zoom-out level:
+
+        P(depth) = max(p_min, p_deep - slope * max(0, -depth))
+
+    The default slope 0.18/level is a fit of the measured per-frame
+    constant-P equivalent ((leaf_count / worst_leaf)^(1/tau)) on seahorse-
+    valley windows from 8x zoomed out to 4096x zoomed in (n=512 smoke
+    config); it tracks the measurement within ~0.03 across that range.
+    It is still an *estimate* that only has to bucket frames sensibly --
+    the overflow-retry path of ``solve_planned`` guarantees correctness
+    whatever the estimate misses.
+    """
+    if slope < 0:
+        raise ValueError(f"slope must be >= 0, got {slope}")
+    return max(p_min, p_deep - slope * max(0.0, -depth))
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameEstimate:
+    """Planner view of one frame: zoom geometry -> expected occupancy."""
+
+    index: int  # position in the input batch
+    width: float  # complex-plane window width
+    depth: float  # zoom_depth(width)
+    p_subdiv: float  # effective_p_subdiv(depth)
+    expected: Tuple[float, ...]  # E_l = g^2 (r^2 P)^l per level 0..tau
+
+
+def estimate_frames(problem, widths: Sequence[float], *,
+                    ref_width: Union[float, None] = None,
+                    p_deep: float = 0.97, slope: float = 0.18,
+                    p_min: float = 0.3) -> Tuple[FrameEstimate, ...]:
+    """Per-frame occupancy estimates for a batch of window widths.
+
+    ``ref_width`` anchors depth 0 (where P saturates at ``p_deep``); it
+    defaults to the problem's own bounds width -- the "boundary fills the
+    frame" view -- or, failing that, the narrowest frame in the batch.
+    """
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    if ref_width is None:
+        bounds = getattr(problem, "bounds", None)
+        if bounds is not None:
+            ref_width = float(bounds[2]) - float(bounds[0])
+        else:
+            ref_width = min(float(w) for w in widths)
+    out = []
+    for i, w in enumerate(widths):
+        d = zoom_depth(float(w), ref_width=ref_width, r=r)
+        p = effective_p_subdiv(d, p_deep=p_deep, slope=slope, p_min=p_min)
+        exp = tuple(expected_level_counts(n, g, r, B, P=p))
+        out.append(FrameEstimate(index=i, width=float(w), depth=d,
+                                 p_subdiv=p, expected=exp))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """One capacity class: the frames it serves and their shared ring."""
+
+    frames: Tuple[int, ...]  # input-batch indices, original order
+    p_subdiv: float  # planning P (max over member frames)
+    capacities: Tuple[int, ...]  # per-level ring-slice capacities
+
+    @property
+    def ring_rows_per_frame(self) -> int:
+        """Rows resident per frame: the double-buffered ring is two
+        buffers of the widest level slice (see ``olt.ring_init``)."""
+        return 2 * max(self.capacities)
+
+    @property
+    def ring_rows(self) -> int:
+        return len(self.frames) * self.ring_rows_per_frame
+
+    @property
+    def ring_bytes(self) -> int:
+        return self.ring_rows * _ROW_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Buckets ascending by capacity, plus the estimates they came from."""
+
+    buckets: Tuple[BucketPlan, ...]
+    estimates: Tuple[FrameEstimate, ...]
+    safety_factor: float
+
+    @property
+    def frames(self) -> int:
+        return sum(len(b.frames) for b in self.buckets)
+
+    @property
+    def ring_rows(self) -> int:
+        """Total OLT-ring rows across all bucket dispatches (the memory
+        the heterogeneous-batch benchmark compares against one uniform
+        ring of F x 2 x max(caps_uniform) rows)."""
+        return sum(b.ring_rows for b in self.buckets)
+
+    @property
+    def ring_bytes(self) -> int:
+        return self.ring_rows * _ROW_BYTES
+
+    def bucket_of(self, frame: int) -> int:
+        for pos, b in enumerate(self.buckets):
+            if frame in b.frames:
+                return pos
+        raise KeyError(f"frame {frame} not in plan")
+
+
+def worst_case_capacities(problem) -> Tuple[int, ...]:
+    """The exhaustive per-level grids (g r^l)^2 -- the sizing that cannot
+    overflow, and the ceiling the retry escalation converges to."""
+    g, r = problem.g, problem.r
+    levels = _num_levels(problem.n, g, r, problem.B)
+    return tuple((g * r ** lv) ** 2 for lv in range(levels + 1))
+
+
+def plan_from_p(problem, frame_ps: Sequence[float], *,
+                num_buckets: int = 4,
+                safety_factor: float = 1.25,
+                estimates: Tuple[FrameEstimate, ...] = (),
+                ) -> CapacityPlan:
+    """Bucket frames by per-frame subdivision probability.
+
+    A bucket's capacities come from ``scan_capacities`` evaluated at its
+    hottest member's P, so its ring cost is ``|bucket| x 2 x
+    max(caps(max P))`` rows. Frames are sorted by P and partitioned into
+    at most ``num_buckets`` contiguous classes by a dynamic program that
+    MINIMISES total ring rows -- one cold frame grouped with a hot one
+    pays the hot ring, which is exactly the uniform-sizing waste the
+    planner exists to remove, so the split points land at the occupancy
+    gaps rather than at fixed quantiles. Buckets whose capacities
+    coincide are merged: identical-occupancy batches collapse to ONE
+    bucket no matter how large ``num_buckets`` is, and ``num_buckets >
+    F`` simply degenerates to one bucket per distinct capacity vector.
+    """
+    if num_buckets < 1:
+        raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+    if not frame_ps:
+        raise ValueError("cannot plan an empty frame batch")
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    order = sorted(range(len(frame_ps)), key=lambda i: float(frame_ps[i]))
+    M = len(order)
+    K = min(num_buckets, M)
+    caps_sorted = [scan_capacities(n, g, r, B,
+                                   p_subdiv=float(frame_ps[i]),
+                                   safety_factor=safety_factor)
+                   for i in order]
+    ring_w = [2 * max(c) for c in caps_sorted]  # rows/frame if bucket ends at j
+
+    # DP over the sorted order: best[k][j] = min ring rows covering frames
+    # 0..j (sorted) with k+1 buckets; interval i..j costs (j-i+1)*ring_w[j]
+    # because the bucket inherits its hottest member's capacities.
+    inf = float("inf")
+    best = [[inf] * M for _ in range(K)]
+    back = [[0] * M for _ in range(K)]
+    for j in range(M):
+        best[0][j] = (j + 1) * ring_w[j]
+    for k in range(1, K):
+        for j in range(M):
+            best[k][j] = best[k - 1][j]  # unused extra bucket
+            back[k][j] = -1  # sentinel: defer to k-1 levels
+            for i in range(j):
+                c = best[k - 1][i] + (j - i) * ring_w[j]
+                if c < best[k][j]:
+                    best[k][j] = c
+                    back[k][j] = i
+
+    # backtrack the K-bucket solution (ties resolve to fewer buckets)
+    groups = []
+    k, j = K - 1, M - 1
+    while j >= 0:
+        while k > 0 and back[k][j] == -1:
+            k -= 1
+        i = back[k][j] if k > 0 else -1
+        groups.append(order[i + 1:j + 1])
+        k, j = k - 1, i
+    groups.reverse()
+
+    buckets = []
+    for idx in groups:
+        p = max(float(frame_ps[i]) for i in idx)
+        caps = scan_capacities(n, g, r, B, p_subdiv=p,
+                               safety_factor=safety_factor)
+        if buckets and buckets[-1].capacities == caps:
+            merged = tuple(sorted(buckets[-1].frames + tuple(idx)))
+            buckets[-1] = BucketPlan(frames=merged,
+                                     p_subdiv=max(buckets[-1].p_subdiv, p),
+                                     capacities=caps)
+        else:
+            buckets.append(BucketPlan(frames=tuple(sorted(int(i) for i in idx)),
+                                      p_subdiv=p, capacities=caps))
+    return CapacityPlan(buckets=tuple(buckets), estimates=tuple(estimates),
+                        safety_factor=safety_factor)
+
+
+def plan_capacities(problem, bounds_batch, *,
+                    num_buckets: int = 4,
+                    safety_factor: float = 1.25,
+                    p_deep: float = 0.97, slope: float = 0.18,
+                    p_min: float = 0.3,
+                    ref_width: Union[float, None] = None,
+                    ) -> CapacityPlan:
+    """Plan a heterogeneous zoom batch from its [F, 4] bounds.
+
+    Frame width re1 - re0 feeds ``zoom_depth`` -> ``effective_p_subdiv``
+    -> ``expected_level_counts``; see ``plan_from_p`` for the bucketing.
+    Problems whose extras are not complex-plane bounds can call
+    ``estimate_frames``/``plan_from_p`` with their own width or P notion.
+    """
+    arr = np.asarray(bounds_batch, np.float64)
+    if arr.ndim != 2 or arr.shape[1] != 4:
+        raise ValueError(f"bounds_batch must be [F, 4], got {arr.shape}")
+    widths = (arr[:, 2] - arr[:, 0]).tolist()
+    ests = estimate_frames(problem, widths, ref_width=ref_width,
+                           p_deep=p_deep, slope=slope, p_min=p_min)
+    return plan_from_p(problem, [e.p_subdiv for e in ests],
+                       num_buckets=num_buckets, safety_factor=safety_factor,
+                       estimates=ests)
+
+
+# ---------------------------------------------------------------------------
+# execution: one compiled program per bucket + overflow-adaptive retry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanReport:
+    """What a planned run actually did (feeds the planner benchmarks)."""
+
+    plan: CapacityPlan
+    frames: int = 0
+    dispatches: int = 0  # bucket programs issued, retries included
+    retries: int = 0  # frame re-plans (a frame can be retried twice)
+    retried_frames: tuple = ()  # indices that overflowed at least once
+    overflow_dropped: int = 0  # final drops (0: every frame converged)
+    leaf_count: int = 0
+    region_counts: tuple = ()  # per-frame tuples, final successful run
+    ring_rows: int = 0  # rows allocated across ALL dispatches, retries incl.
+    wall_s: float = 0.0
+    bucket_stats: tuple = ()  # ASKStats per dispatch, issue order
+
+    @property
+    def ring_bytes(self) -> int:
+        return self.ring_rows * _ROW_BYTES
+
+
+def _take_frames(extras, idx):
+    sel = np.asarray(idx, dtype=np.int64)
+    return jax.tree_util.tree_map(lambda leaf: np.asarray(leaf)[sel], extras)
+
+
+def _run_bucket(problem, extras, caps, mesh):
+    if mesh is None:
+        import jax.numpy as jnp
+        return run_ask_scan_batch(
+            problem, jax.tree_util.tree_map(jnp.asarray, extras),
+            capacities=caps)
+    return run_ask_scan_sharded(problem, extras, mesh=mesh, capacities=caps)
+
+
+def _padded_count(F: int, mesh) -> int:
+    if mesh is None:
+        return F
+    n_dev = int(mesh.devices.size)
+    return -(-F // n_dev) * n_dev
+
+
+def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
+                  mesh=None, num_buckets: int = 4,
+                  safety_factor: float = 1.25,
+                  max_dispatches: int = 64,
+                  **plan_kw) -> Tuple[Any, PlanReport]:
+    """Execute a capacity plan: per-bucket dispatch + overflow retry.
+
+    ``extras`` is the per-frame parameter pytree of the batched engine
+    (for Mandelbrot: [F, 4] bounds). When ``plan`` is None one is built
+    with ``plan_capacities(problem, extras, num_buckets=...,
+    safety_factor=..., **plan_kw)`` (which assumes bounds-shaped extras).
+
+    Buckets run in ascending capacity order, one compiled program each.
+    Any frame whose ``ASKStats.frame_overflow`` entry is nonzero is
+    re-planned: promoted into the next bucket's capacities if one exists,
+    otherwise its capacities are doubled per level (clamped at the
+    exhaustive worst case, which cannot overflow) -- so the loop
+    terminates with ``overflow_dropped == 0`` without any manual
+    ``safety_factor`` tuning. Frames with the same retry target share one
+    dispatch.
+
+    Returns ``(states, PlanReport)`` with ``states`` a host (numpy) pytree
+    whose leading axis is the frame axis in input order.
+    """
+    leaves = jax.tree_util.tree_leaves(extras)
+    if not leaves:
+        raise ValueError("extras must contain at least one array leaf")
+    F = int(np.asarray(leaves[0]).shape[0])
+    if plan is None:
+        plan = plan_capacities(problem, extras, num_buckets=num_buckets,
+                               safety_factor=safety_factor, **plan_kw)
+    elif plan_kw:
+        raise ValueError(
+            f"plan was given, so estimation kwargs {sorted(plan_kw)} would "
+            "be silently ignored -- drop them or drop the prebuilt plan")
+    if plan.frames != F:
+        raise ValueError(f"plan covers {plan.frames} frames, batch has {F}")
+
+    worst = worst_case_capacities(problem)
+    report = PlanReport(plan=plan, frames=F)
+    t0 = time.perf_counter()
+
+    out_leaves = None
+    treedef = None
+    leaf_counts = [0] * F
+    region_counts: list = [()] * F
+    retried: set = set()
+    bucket_stats = []
+
+    # worklist ascending by ring width; (capacities, frame indices,
+    # position in plan.buckets or None once escalated beyond the plan).
+    # Empty buckets dispatch nothing but remain valid promotion targets.
+    work = [(b.capacities, list(b.frames), pos)
+            for pos, b in enumerate(plan.buckets) if b.frames]
+
+    while work:
+        work.sort(key=lambda item: max(item[0]))
+        caps, idx, pos = work.pop(0)
+        if report.dispatches >= max_dispatches:
+            raise RuntimeError(
+                f"planner exceeded max_dispatches={max_dispatches} without "
+                f"converging; frames still pending: {sorted(idx)}")
+        states, st = _run_bucket(problem, _take_frames(extras, idx), caps,
+                                 mesh)
+        report.dispatches += 1
+        report.ring_rows += _padded_count(len(idx), mesh) * 2 * max(caps)
+        bucket_stats.append(st)
+
+        host = jax.tree_util.tree_map(np.asarray, states)
+        flat, td = jax.tree_util.tree_flatten(host)
+        if out_leaves is None:
+            treedef = td
+            out_leaves = [np.zeros((F,) + leaf.shape[1:], leaf.dtype)
+                          for leaf in flat]
+        ok = [j for j in range(len(idx)) if st.frame_overflow[j] == 0]
+        if ok:
+            sel = np.asarray([idx[j] for j in ok])
+            for out_leaf, leaf in zip(out_leaves, flat):
+                out_leaf[sel] = leaf[np.asarray(ok)]
+            for j in ok:
+                leaf_counts[idx[j]] = st.frame_leaf_counts[j]
+                region_counts[idx[j]] = st.region_counts[j]
+
+        failed = [idx[j] for j in range(len(idx))
+                  if st.frame_overflow[j] != 0]
+        if failed:
+            retried.update(failed)
+            report.retries += len(failed)
+            if pos is not None and pos + 1 < len(plan.buckets):
+                tgt_caps = plan.buckets[pos + 1].capacities
+                tgt_pos: Union[int, None] = pos + 1
+            else:
+                if caps == worst:  # worst case cannot drop; defensive only
+                    raise RuntimeError(
+                        f"frames {failed} overflow at worst-case capacities")
+                tgt_caps = tuple(min(2 * c, w) for c, w in zip(caps, worst))
+                tgt_pos = None
+            for item in work:
+                if item[0] == tgt_caps:
+                    item[1].extend(failed)
+                    break
+            else:
+                work.append((tgt_caps, list(failed), tgt_pos))
+
+    report.wall_s = time.perf_counter() - t0
+    report.retried_frames = tuple(sorted(retried))
+    report.leaf_count = sum(int(c) for c in leaf_counts)
+    report.region_counts = tuple(region_counts)
+    report.overflow_dropped = 0  # the loop only exits once every frame fits
+    report.bucket_stats = tuple(bucket_stats)
+    states_out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return states_out, report

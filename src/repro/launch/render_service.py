@@ -1,10 +1,12 @@
 """Sharded frame-rendering service: stream arbitrarily long zoom
-sequences through the single-dispatch sharded ASK engine.
+sequences through the single-dispatch sharded ASK engine, with the host
+I/O of chunk k overlapped against the device compute of chunk k+1.
 
 A zoom trajectory can be millions of frames -- far more than one batch
 should hold -- so the service chunks the stream into fixed-size,
-device-divisible batches and pushes each chunk through
-``mandelbrot.solve_batch(..., mesh=...)``:
+device-divisible batches and pushes each chunk through the sharded scan
+pipeline (``mandelbrot.dispatch_batch`` / ``core.ask.
+dispatch_ask_scan_sharded``):
 
   * chunk size is a multiple of the mesh device count, so every device
     owns ``chunk/devices`` frames and the GSPMD partition is collective-free;
@@ -14,19 +16,31 @@ device-divisible batches and pushes each chunk through
     (``core.ask._PIPELINE_CACHE``): one XLA dispatch per chunk, zero
     retracing for the life of the service;
   * padded frames are masked out of canvases and stats by the engine, so
-    the streamed output is bit-identical to rendering each frame alone.
+    the streamed output is bit-identical to rendering each frame alone;
+  * with ``pipeline_depth >= 2`` (the default is 2: double buffering) the
+    service exploits JAX *async dispatch*: up to ``pipeline_depth``
+    chunks are in flight at once, so while the host blocks on
+    ``finalize()`` of chunk k -- and while the consumer of the stream
+    converts, encodes, or writes chunk k -- the devices are already
+    computing chunks k+1..k+depth-1. ``ChunkStats`` records per-chunk
+    enqueue/fetch times; a pipelined run's ``wall_s`` measured against a
+    synchronous run's ``busy_s`` (its serial per-chunk cost) quantifies
+    the overlap. ``pipeline_depth=1`` restores the fully synchronous
+    PR-2 behaviour (dispatch, block, yield, repeat).
 
 ``python -m repro.launch.render_service --frames 64 --n 256`` runs a
-self-timed trajectory end to end.
+self-timed trajectory end to end and prints both pipelined and
+synchronous wall times.
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import itertools
 import time
-from typing import Iterable, Iterator, Tuple
+from typing import Any, Iterable, Iterator, Tuple
 
 import numpy as np
 
@@ -36,8 +50,48 @@ from repro.launch.mesh import make_frames_mesh
 # chunk size; bigger amortises dispatch overhead, smaller bounds latency
 DEFAULT_FRAMES_PER_DEVICE = 4
 
-__all__ = ["RenderService", "RenderStats", "zoom_bounds",
-           "DEFAULT_FRAMES_PER_DEVICE"]
+# dispatched-but-not-finalised chunks the pipelined stream keeps in
+# flight: 2 == classic double buffering (compute k+1 behind fetch of k)
+DEFAULT_PIPELINE_DEPTH = 2
+
+__all__ = ["RenderService", "RenderStats", "ChunkStats", "ChunkResult",
+           "zoom_bounds", "DEFAULT_FRAMES_PER_DEVICE",
+           "DEFAULT_PIPELINE_DEPTH"]
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    """Per-chunk timing of the streamed pipeline.
+
+    ``dispatch_s`` is the time to *enqueue* the chunk's XLA call (JAX
+    async dispatch returns before the devices finish); ``fetch_s`` is the
+    time the host then spent blocked in ``finalize()`` materialising the
+    chunk. In the synchronous path ``fetch_s`` absorbs the chunk's whole
+    device compute; in the pipelined path chunk k+1's compute runs
+    behind the fetch/host processing of chunk k, so its own ``fetch_s``
+    shrinks by the hidden amount -- comparing a pipelined run's
+    ``RenderStats.wall_s`` against a synchronous run's ``busy_s`` (the
+    sum of per-chunk compute + host-copy costs) measures the overlap.
+    """
+
+    index: int
+    frames: int
+    dispatch_s: float
+    fetch_s: float
+    in_flight: int  # chunks already enqueued when this one was finalised
+
+    @property
+    def busy_s(self) -> float:
+        return self.dispatch_s + self.fetch_s
+
+
+@dataclasses.dataclass
+class ChunkResult:
+    """One finalised chunk: canvases [f, n, n], engine stats, timing."""
+
+    canvases: Any
+    stats: Any  # core.ask.ASKStats for this chunk's dispatch
+    chunk: ChunkStats
 
 
 @dataclasses.dataclass
@@ -50,6 +104,11 @@ class RenderStats:
     leaf_count: int = 0
     overflow_dropped: int = 0
     wall_s: float = 0.0
+    pipeline_depth: int = 1
+    dispatch_s: float = 0.0  # total time spent enqueueing chunks
+    fetch_s: float = 0.0  # total time blocked materialising chunks
+    host_copy_s: float = 0.0  # render() only: device->numpy conversion
+    chunk_stats: tuple = ()  # ChunkStats per chunk, stream order
     # traced signatures of the chunk program AFTER the stream (None when
     # jax doesn't expose the jit cache). 1 == every chunk, ragged tail
     # included, reused ONE compiled program; 2+ means the pad_to plumbing
@@ -59,6 +118,14 @@ class RenderStats:
     @property
     def dispatches_per_chunk(self) -> float:
         return self.dispatches / self.chunks if self.chunks else 0.0
+
+    @property
+    def busy_s(self) -> float:
+        """Sum of per-chunk (enqueue + fetch + host copy/sink) costs. For
+        a synchronous run (pipeline_depth=1) this is the serial cost of
+        the trajectory -- the baseline a pipelined run's ``wall_s`` is
+        measured against: wall(pipelined) < busy(sync) is the overlap."""
+        return self.dispatch_s + self.fetch_s + self.host_copy_s
 
 
 def zoom_bounds(
@@ -82,18 +149,22 @@ class RenderService:
     """Chunked sharded serving of a Mandelbrot frame stream.
 
     ``mesh`` defaults to a 1-D mesh over every visible device
-    (``launch.mesh.make_frames_mesh``); ``chunk_frames`` is rounded up to a
-    multiple of the device count. Engine kwargs (``capacities``,
+    (``launch.mesh.make_frames_mesh``); ``chunk_frames`` is rounded up to
+    a multiple of the device count; ``pipeline_depth`` bounds how many
+    chunks may be in flight at once (1 = synchronous, 2 = double
+    buffering, the default). Engine kwargs (``capacities``,
     ``safety_factor``, ...) pass through to the scan engine unchanged.
     """
 
     def __init__(self, problem, *, mesh=None, chunk_frames: int | None = None,
-                 **engine_kw):
+                 pipeline_depth: int = DEFAULT_PIPELINE_DEPTH, **engine_kw):
         if "pad_to" in engine_kw:
             raise ValueError(
                 "pad_to is owned by the service (pinned to chunk_frames so "
                 "every chunk reuses one compiled program); set chunk_frames "
                 "instead")
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self.problem = problem
         self.mesh = make_frames_mesh() if mesh is None else mesh
         n_dev = int(self.mesh.devices.size)
@@ -102,24 +173,75 @@ class RenderService:
         if want < 1:
             raise ValueError(f"chunk_frames must be >= 1, got {want}")
         self.chunk_frames = -(-want // n_dev) * n_dev  # round up to multiple
+        self.pipeline_depth = int(pipeline_depth)
         self.engine_kw = engine_kw
 
-    def stream(self, bounds_iter: Iterable):
-        """Yield (canvases [f, n, n], ASKStats) per chunk, f <= chunk_frames.
+    # -- dispatch plumbing --------------------------------------------------
+
+    def _dispatch(self, chunk):
+        """Enqueue one chunk; returns (ShardedDispatch, enqueue seconds)."""
+        from repro.mandelbrot import dispatch_batch
+
+        t0 = time.perf_counter()
+        d = dispatch_batch(self.problem, chunk, mesh=self.mesh,
+                           pad_to=self.chunk_frames, **self.engine_kw)
+        return d, time.perf_counter() - t0
+
+    def stream_chunks(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
+        """Yield ``ChunkResult`` per chunk, f <= chunk_frames frames each.
 
         Lazy: pulls ``chunk_frames`` bounds at a time, so the input can be
         an unbounded generator (a million-frame trajectory never
-        materialises host-side).
+        materialises host-side). With ``pipeline_depth >= 2`` up to that
+        many chunks are enqueued ahead of the one being finalised, and
+        the queue is refilled BEFORE each yield -- so the devices compute
+        chunk k+1 while the consumer of the stream is still busy with
+        chunk k. Chunk order (and therefore frame order) is preserved.
         """
-        from repro.mandelbrot import solve_batch
-
         it = iter(bounds_iter)
-        while True:
+        pending: collections.deque = collections.deque()
+        index = 0
+
+        def enqueue() -> bool:
+            nonlocal index
             chunk = list(itertools.islice(it, self.chunk_frames))
             if not chunk:
-                return
-            yield solve_batch(self.problem, chunk, mesh=self.mesh,
-                              pad_to=self.chunk_frames, **self.engine_kw)
+                return False
+            d, secs = self._dispatch(chunk)
+            pending.append((index, len(chunk), d, secs))
+            index += 1
+            return True
+
+        if self.pipeline_depth == 1:  # synchronous: at most one in flight
+            while enqueue():
+                i, f, d, disp_s = pending.popleft()
+                t0 = time.perf_counter()
+                canvases, st = d.finalize()
+                fetch_s = time.perf_counter() - t0
+                yield ChunkResult(canvases, st, ChunkStats(
+                    index=i, frames=f, dispatch_s=disp_s, fetch_s=fetch_s,
+                    in_flight=1))
+            return
+
+        while len(pending) < self.pipeline_depth and enqueue():
+            pass
+        while pending:
+            in_flight = len(pending)
+            i, f, d, disp_s = pending.popleft()
+            t0 = time.perf_counter()
+            canvases, st = d.finalize()  # younger chunks compute behind this
+            fetch_s = time.perf_counter() - t0
+            enqueue()  # refill BEFORE yielding: devices stay busy while the
+            #            consumer processes this chunk
+            yield ChunkResult(canvases, st, ChunkStats(
+                index=i, frames=f, dispatch_s=disp_s, fetch_s=fetch_s,
+                in_flight=in_flight))
+
+    def stream(self, bounds_iter: Iterable):
+        """Yield (canvases [f, n, n], ASKStats) per chunk (the PR-2
+        interface; ``stream_chunks`` adds per-chunk pipeline timing)."""
+        for r in self.stream_chunks(bounds_iter):
+            yield r.canvases, r.stats
 
     def program_traces(self) -> int | None:
         """Traced signatures of this service's chunk program so far.
@@ -140,23 +262,43 @@ class RenderService:
         size = getattr(fn, "_cache_size", None)
         return int(size()) if callable(size) else None
 
-    def render(self, bounds_seq: Iterable):
+    def render(self, bounds_seq: Iterable, *, sink=None):
         """Render a whole (finite) trajectory.
 
         Returns (canvases np [F, n, n], RenderStats). For streams too big
-        to stack host-side, iterate ``stream`` directly.
+        to stack host-side, iterate ``stream_chunks`` directly. The
+        device->numpy conversion of chunk k happens while chunk k+1 is in
+        flight (``pipeline_depth >= 2``), which is exactly the host-I/O /
+        device-compute overlap the pipelined service exists for.
+
+        ``sink(canvases_np, stats)``, if given, is called once per chunk
+        -- the place for the serving-side host I/O (encode frames, write
+        to disk/network). Its cost is counted in ``host_copy_s`` and,
+        like the numpy conversion, overlaps the next chunk's device
+        compute whenever it releases the GIL (compression, file/socket
+        writes, and numpy copies largely do).
         """
         out = []
-        rs = RenderStats()
+        rs = RenderStats(pipeline_depth=self.pipeline_depth)
+        chunk_stats = []
         t0 = time.perf_counter()
-        for canvases, st in self.stream(bounds_seq):
-            out.append(np.asarray(canvases))
-            rs.frames += int(canvases.shape[0])
+        for r in self.stream_chunks(bounds_seq):
+            tc = time.perf_counter()
+            host = np.asarray(r.canvases)
+            out.append(host)
+            if sink is not None:
+                sink(host, r.stats)
+            rs.host_copy_s += time.perf_counter() - tc
+            rs.frames += int(r.canvases.shape[0])
             rs.chunks += 1
-            rs.dispatches += st.kernel_launches
-            rs.leaf_count += st.leaf_count
-            rs.overflow_dropped += st.overflow_dropped
+            rs.dispatches += r.stats.kernel_launches
+            rs.leaf_count += r.stats.leaf_count
+            rs.overflow_dropped += r.stats.overflow_dropped
+            rs.dispatch_s += r.chunk.dispatch_s
+            rs.fetch_s += r.chunk.fetch_s
+            chunk_stats.append(r.chunk)
         rs.wall_s = time.perf_counter() - t0
+        rs.chunk_stats = tuple(chunk_stats)
         rs.program_traces = self.program_traces()
         n = self.problem.n
         stacked = (np.concatenate(out, axis=0) if out
@@ -174,6 +316,9 @@ def main(argv=None):
     ap.add_argument("--max-dwell", type=int, default=128)
     ap.add_argument("--zoom", type=float, default=1.05)
     ap.add_argument("--safety-factor", type=float, default=2.0)
+    ap.add_argument("--pipeline-depth", type=int,
+                    default=DEFAULT_PIPELINE_DEPTH,
+                    help="chunks in flight at once (1 = synchronous)")
     args = ap.parse_args(argv)
 
     from repro.mandelbrot import MandelbrotProblem
@@ -182,6 +327,7 @@ def main(argv=None):
                              max_dwell=args.max_dwell, backend="jnp")
     mesh = make_frames_mesh(args.devices)
     svc = RenderService(prob, mesh=mesh, chunk_frames=args.chunk,
+                        pipeline_depth=args.pipeline_depth,
                         safety_factor=args.safety_factor)
     bounds = zoom_bounds(args.frames, zoom_per_frame=args.zoom)
 
@@ -189,11 +335,13 @@ def main(argv=None):
     next(svc.stream(zoom_bounds(svc.chunk_frames)))
     _, rs = svc.render(bounds)
     print(f"devices={mesh.devices.size} chunk={svc.chunk_frames} "
-          f"frames={rs.frames} chunks={rs.chunks} "
+          f"depth={svc.pipeline_depth} frames={rs.frames} chunks={rs.chunks} "
           f"dispatches_per_chunk={rs.dispatches_per_chunk:.1f} "
           f"program_traces={rs.program_traces}")
     print(f"wall={rs.wall_s * 1e3:.1f} ms  "
           f"{rs.wall_s * 1e3 / max(rs.frames, 1):.2f} ms/frame  "
+          f"busy={rs.busy_s * 1e3:.1f} ms  "
+          f"fetch={rs.fetch_s * 1e3:.1f} ms  "
           f"overflow_dropped={rs.overflow_dropped}")
     return 0
 

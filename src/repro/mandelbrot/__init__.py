@@ -1,6 +1,8 @@
 """The paper's case study: Mandelbrot via Mariani-Silver subdivision."""
 
 from repro.mandelbrot.exhaustive import exhaustive
-from repro.mandelbrot.mariani_silver import MandelbrotProblem, solve, solve_batch
+from repro.mandelbrot.mariani_silver import (MandelbrotProblem, dispatch_batch,
+                                             solve, solve_batch)
 
-__all__ = ["exhaustive", "MandelbrotProblem", "solve", "solve_batch"]
+__all__ = ["exhaustive", "MandelbrotProblem", "solve", "solve_batch",
+           "dispatch_batch"]

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
-__all__ = ["MandelbrotProblem", "solve"]
+__all__ = ["MandelbrotProblem", "solve", "solve_batch", "dispatch_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,15 +145,27 @@ def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
     raise ValueError(f"unknown method {method!r}")
 
 
-def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None, **kw):
+def _bounds_array(bounds_batch) -> jax.Array:
+    bounds_arr = jnp.asarray(bounds_batch, jnp.float32)
+    if bounds_arr.ndim != 2 or bounds_arr.shape[1] != 4:
+        raise ValueError(f"bounds_batch must be [F, 4], got {bounds_arr.shape}")
+    return bounds_arr
+
+
+def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None,
+                plan=None, **kw):
     """Batched frame serving: render F frames in ONE XLA dispatch.
 
     ``bounds_batch`` is [F, 4] (re0, im0, re1, im1) per frame -- a zoom
     sequence or F tenants' viewports. The scan engine is vmapped over the
-    frame axis (see ``core.ask.run_ask_scan_batch``): per-level capacities
-    are shared across frames, overflow accounting is summed. The dwell
-    compute runs the traced-bounds jnp path (identical math, so each frame
-    is bit-identical to a single-frame ``run_ask`` at those bounds).
+    frame axis (see ``core.ask.run_ask_scan_batch``): per-level ring
+    capacities -- sized from the cost model's expected occupancy E_l =
+    g^2 (r^2 P)^l over the tau = log_r(n/(gB)) subdivision levels
+    (``cost_model.expected_level_counts`` / ``tau_levels``) -- are shared
+    across frames, overflow accounting is summed (and broken out per
+    frame in ``ASKStats.frame_overflow``). The dwell compute runs the
+    traced-bounds jnp path (identical math, so each frame is
+    bit-identical to a single-frame ``run_ask`` at those bounds).
 
     ``mesh`` (a 1-D ``jax.sharding.Mesh``, see ``launch.mesh.
     make_frames_mesh``) shards the frame axis across its devices
@@ -162,12 +174,46 @@ def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None, **kw):
     frame stays bit-identical to the unsharded batch. For streaming more
     frames than fit one batch, see ``launch.render_service``.
 
-    Returns (canvases [F, n, n], ASKStats).
+    ``plan`` switches to the occupancy-aware capacity planner
+    (``core.planner``) for heterogeneous batches -- deep-zoom frames get
+    a hotter effective P (hence a bigger ring) than wide frames, and any
+    frame that still overflows is re-planned automatically. Pass an int
+    (the bucket count K), True (default K), or a prebuilt
+    ``planner.CapacityPlan``. The planned path returns (canvases
+    [F, n, n] numpy, ``planner.PlanReport``) and issues one compiled
+    program per bucket instead of one overall; the uniform path returns
+    (canvases [F, n, n], ASKStats).
     """
+    bounds_arr = _bounds_array(bounds_batch)
+    if plan is not None and plan is not False:
+        from repro.core import planner as planner_lib
+        engine_only = {"capacities", "p_subdiv", "pad_to"} & kw.keys()
+        if engine_only:
+            raise ValueError(
+                f"{sorted(engine_only)} belong to the uniform path; the "
+                "planner sizes capacities itself -- tune num_buckets / "
+                "safety_factor / p_deep / slope / p_min / ref_width instead")
+        plan_obj = plan if isinstance(plan, planner_lib.CapacityPlan) else None
+        if plan_obj is None and not isinstance(plan, bool):
+            kw.setdefault("num_buckets", int(plan))
+        return planner_lib.solve_planned(problem, bounds_arr, plan=plan_obj,
+                                         mesh=mesh, **kw)
     from repro.core.ask import run_ask_scan_batch, run_ask_scan_sharded
-    bounds_arr = jnp.asarray(bounds_batch, jnp.float32)
-    if bounds_arr.ndim != 2 or bounds_arr.shape[1] != 4:
-        raise ValueError(f"bounds_batch must be [F, 4], got {bounds_arr.shape}")
     if mesh is None:
         return run_ask_scan_batch(problem, bounds_arr, **kw)
     return run_ask_scan_sharded(problem, bounds_arr, mesh=mesh, **kw)
+
+
+def dispatch_batch(problem: MandelbrotProblem, bounds_batch, *, mesh, **kw):
+    """Enqueue one sharded frame batch WITHOUT blocking (async serving).
+
+    The non-blocking half of ``solve_batch(..., mesh=...)``: returns a
+    ``core.ask.ShardedDispatch`` handle as soon as the XLA call is
+    enqueued; ``.finalize()`` yields the same (canvases, ASKStats). The
+    pipelined render service (``launch.render_service``) uses this to
+    overlap the host copy of chunk k with the device compute of chunk
+    k+1.
+    """
+    from repro.core.ask import dispatch_ask_scan_sharded
+    return dispatch_ask_scan_sharded(problem, _bounds_array(bounds_batch),
+                                     mesh=mesh, **kw)

@@ -1,0 +1,68 @@
+"""The docs cannot rot: extract every fenced ```python example from
+README.md and docs/*.md and execute it.
+
+Contract for doc authors:
+
+* every ```python fence must be self-contained *given the fences above
+  it in the same file* (snippets of one file share a namespace, like a
+  reader typing them into one REPL session top to bottom);
+* keep snippets small (n <= 256, low dwell) -- this suite is a CI gate;
+* illustrative non-runnable fragments go in ```text / ```bash fences,
+  which are not executed;
+* a fence whose first line is ``# docs: no-run`` is skipped (use
+  sparingly, and say why in the surrounding prose).
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_FENCE = re.compile(r"^```python[ \t]*$(.*?)^```[ \t]*$",
+                    re.MULTILINE | re.DOTALL)
+
+
+def _doc_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _snippets(path: Path):
+    text = path.read_text()
+    out = []
+    for m in _FENCE.finditer(text):
+        body = m.group(1)
+        line = text[: m.start()].count("\n") + 2  # first line inside fence
+        out.append((line, body))
+    return out
+
+
+def test_docs_exist_and_have_examples():
+    files = _doc_files()
+    names = {f.name for f in files}
+    assert {"README.md", "architecture.md", "capacity-planning.md",
+            "serving.md"} <= names, names
+    assert sum(len(_snippets(f)) for f in files) >= 8
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=lambda p: str(p.relative_to(ROOT)))
+def test_docs_snippets_execute(path):
+    """Run the file's snippets top to bottom in one shared namespace; a
+    failure reports the markdown file and line of the offending fence."""
+    snippets = _snippets(path)
+    if not snippets:
+        pytest.skip(f"{path.name}: no python fences")
+    ns = {"__name__": f"docsnippet_{path.stem}"}
+    for line, body in snippets:
+        if body.lstrip().startswith("# docs: no-run"):
+            continue
+        code = compile(body, f"{path}:{line}", "exec")
+        try:
+            exec(code, ns)  # noqa: S102 -- executing our own documentation
+        except Exception as e:  # pragma: no cover - failure path
+            pytest.fail(f"{path.relative_to(ROOT)} snippet at line {line} "
+                        f"raised {type(e).__name__}: {e}")

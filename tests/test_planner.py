@@ -1,0 +1,292 @@
+"""Tests for the occupancy-aware capacity planner (core/planner.py):
+zoom-depth -> effective-P model, DP bucketing, bucketed execution, and
+the overflow-adaptive retry path."""
+
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.ask import run_ask_scan, run_ask_scan_batch, scan_capacities
+from repro.launch.mesh import make_frames_mesh
+from repro.mandelbrot import MandelbrotProblem, solve_batch
+
+
+def _window(cx, cy, w):
+    return (cx - w / 2, cy - w / 2, cx + w / 2, cy + w / 2)
+
+
+def _prob(**kw):
+    base = dict(n=128, g=4, r=2, B=16, max_dwell=32, backend="jnp")
+    base.update(kw)
+    return MandelbrotProblem(**base)
+
+
+# ---------------------------------------------------------------------------
+# the occupancy model
+# ---------------------------------------------------------------------------
+
+def test_effective_p_monotone_in_depth():
+    """Deeper zoom => hotter effective P, saturating at p_deep; zoomed out
+    => colder, floored at p_min."""
+    depths = [-8.0, -4.0, -1.0, 0.0, 2.0, 10.0]
+    ps = [planner.effective_p_subdiv(d) for d in depths]
+    assert all(lo <= hi for lo, hi in zip(ps, ps[1:]))
+    assert ps[-1] == planner.effective_p_subdiv(0.0) == 0.97  # saturated
+    assert planner.effective_p_subdiv(-1e9) == 0.3  # p_min floor
+
+
+def test_zoom_depth_sign_convention():
+    assert planner.zoom_depth(1.0, ref_width=2.0, r=2) == pytest.approx(1.0)
+    assert planner.zoom_depth(8.0, ref_width=2.0, r=2) == pytest.approx(-2.0)
+    with pytest.raises(ValueError):
+        planner.zoom_depth(0.0, ref_width=2.0, r=2)
+
+
+def test_estimate_frames_uses_problem_bounds_as_ref():
+    prob = _prob()
+    ests = planner.estimate_frames(prob, [2.0, 8.0, 0.5])
+    assert ests[0].depth == pytest.approx(0.0)  # problem bounds width is 2.0
+    assert ests[1].p_subdiv < ests[0].p_subdiv
+    assert ests[2].p_subdiv == ests[0].p_subdiv  # both saturated
+    levels = len(scan_capacities(128, 4, 2, 16))
+    assert all(len(e.expected) == levels for e in ests)
+
+
+# ---------------------------------------------------------------------------
+# bucketing (plan_from_p / plan_capacities)
+# ---------------------------------------------------------------------------
+
+def test_single_frame_plan():
+    prob = _prob()
+    plan = planner.plan_capacities(prob, [_window(-0.5, 0.0, 3.0)],
+                                   num_buckets=4)
+    assert len(plan.buckets) == 1
+    assert plan.buckets[0].frames == (0,)
+    assert plan.frames == 1
+
+
+def test_identical_frames_collapse_to_one_bucket():
+    """All frames at the same zoom depth share one capacity class no
+    matter how many buckets were requested."""
+    prob = _prob()
+    bounds = [_window(-0.5, 0.0, 3.0)] * 6
+    plan = planner.plan_capacities(prob, bounds, num_buckets=4)
+    assert len(plan.buckets) == 1
+    assert plan.buckets[0].frames == tuple(range(6))
+
+
+def test_more_buckets_than_frames_degenerates():
+    prob = _prob()
+    bounds = [_window(-0.5, 0.0, w) for w in (16.0, 4.0, 1.0)]
+    plan = planner.plan_capacities(prob, bounds, num_buckets=17)
+    assert 1 <= len(plan.buckets) <= 3
+    assert plan.frames == 3
+    covered = sorted(i for b in plan.buckets for i in b.frames)
+    assert covered == [0, 1, 2]
+
+
+def test_buckets_ascend_and_cover_expected_occupancy():
+    prob = _prob(n=512, max_dwell=64)
+    bounds = [_window(-0.5, 0.0, w) for w in (16.0, 8.0, 4.0, 2.0, 1.0, 0.25)]
+    plan = planner.plan_capacities(prob, bounds, num_buckets=3,
+                                   safety_factor=1.25)
+    widths = [2 * max(b.capacities) for b in plan.buckets]
+    assert widths == sorted(widths)
+    # every member frame's raw expected occupancy fits its bucket's
+    # capacities (the bucket is sized at its hottest member, sf >= 1)
+    for b in plan.buckets:
+        for fi in b.frames:
+            est = plan.estimates[fi]
+            for e, cap in zip(est.expected, b.capacities):
+                assert cap >= e - 1e-9, (fi, e, b.capacities)
+
+
+def test_dp_bucketing_ring_monotone_in_k():
+    """More allowed buckets can only tighten the planned ring footprint
+    (the DP minimises total ring rows over contiguous partitions)."""
+    prob = _prob(n=512, max_dwell=64)
+    bounds = ([_window(-0.5, 0.0, w) for w in (16.0, 12.0, 8.0, 6.0, 4.0)]
+              + [_window(-0.7436, 0.1318, 3.0 / 2 ** k) for k in (4, 8, 12)])
+    rings = [planner.plan_capacities(prob, bounds, num_buckets=k).ring_rows
+             for k in (1, 2, 3, 4, 8)]
+    assert all(hi >= lo for hi, lo in zip(rings, rings[1:]))
+    # K=1 degenerates to uniform sizing at the hottest member
+    one = planner.plan_capacities(prob, bounds, num_buckets=1)
+    assert len(one.buckets) == 1
+    assert one.ring_rows == len(bounds) * one.buckets[0].ring_rows_per_frame
+
+
+def test_plan_validation():
+    prob = _prob()
+    with pytest.raises(ValueError):
+        planner.plan_from_p(prob, [], num_buckets=2)
+    with pytest.raises(ValueError):
+        planner.plan_from_p(prob, [0.5], num_buckets=0)
+    with pytest.raises(ValueError):
+        planner.plan_capacities(prob, np.zeros((2, 3)))  # not [F, 4]
+
+
+# ---------------------------------------------------------------------------
+# planned execution + retry
+# ---------------------------------------------------------------------------
+
+def test_solve_planned_single_frame_bit_identical():
+    """F=1: one bucket, one dispatch, canvas identical to the single-frame
+    scan engine at worst-case capacities."""
+    prob = _prob()
+    bounds = [_window(-0.5, 0.0, 2.0)]
+    canv, rep = solve_batch(prob, bounds, plan=4)
+    ref, _ = run_ask_scan(
+        MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                          backend="jnp", bounds=bounds[0]),
+        safety_factor=1e9)
+    assert canv.shape == (1, 128, 128)
+    np.testing.assert_array_equal(canv[0], np.asarray(ref))
+    assert rep.overflow_dropped == 0
+    assert rep.dispatches >= 1
+    assert rep.frames == 1
+
+
+def test_solve_planned_identical_frames_one_dispatch():
+    """Identical-occupancy batch: the planner must not split it -- one
+    bucket, ONE dispatch, bit-identical to the unplanned batch."""
+    prob = _prob()
+    bounds = [_window(-0.5, 0.0, 2.0)] * 5
+    ref, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    canv, rep = solve_batch(prob, bounds, plan=3)
+    assert rep.dispatches == 1
+    assert rep.retries == 0
+    assert rep.overflow_dropped == 0
+    np.testing.assert_array_equal(canv, np.asarray(ref))
+
+
+def test_forced_overflow_recovers_via_retry():
+    """A hand-built plan whose capacities are deliberately too small: the
+    retry path must escalate (doubling toward the worst case), converge
+    with zero drops, and produce the bit-exact canvases -- no manual
+    safety_factor tuning."""
+    prob = _prob()
+    bounds = [(-1.6 + 0.03 * i, -1.1, 0.55, 1.05) for i in range(5)]
+    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    levels = len(scan_capacities(128, 4, 2, 16)) - 1
+    tiny = planner.CapacityPlan(
+        buckets=(planner.BucketPlan(frames=tuple(range(5)), p_subdiv=0.1,
+                                    capacities=(16,) + (8,) * levels),),
+        estimates=(), safety_factor=1.0)
+    canv, rep = planner.solve_planned(prob, np.asarray(bounds, np.float32),
+                                      plan=tiny)
+    assert rep.retries > 0
+    assert rep.retried_frames  # at least one frame was re-planned
+    assert rep.overflow_dropped == 0
+    assert rep.dispatches > 1
+    np.testing.assert_array_equal(canv, np.asarray(exact))
+
+
+def test_retry_promotes_into_next_bucket():
+    """When a larger bucket exists, an overflowing frame is re-planned
+    into IT (not escalated ad hoc): the failing frame's successful run
+    uses exactly the next bucket's capacities."""
+    prob = _prob()
+    bounds = [(-1.6, -1.1, 0.55, 1.05), (-1.55, -1.1, 0.55, 1.05)]
+    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    levels = len(scan_capacities(128, 4, 2, 16)) - 1
+    worst = planner.worst_case_capacities(prob)
+    two = planner.CapacityPlan(
+        buckets=(planner.BucketPlan(frames=(0, 1), p_subdiv=0.1,
+                                    capacities=(16,) + (8,) * levels),
+                 planner.BucketPlan(frames=(), p_subdiv=1.0,
+                                    capacities=worst)),
+        estimates=(), safety_factor=1.0)
+    # plan covers 2 frames; the empty big bucket is the promotion target
+    canv, rep = planner.solve_planned(prob, np.asarray(bounds, np.float32),
+                                      plan=two)
+    assert rep.overflow_dropped == 0
+    assert rep.retried_frames == (0, 1)
+    # tiny bucket (both frames fail) + ONE shared promotion dispatch at
+    # the next bucket's worst-case capacities
+    assert rep.dispatches == 2
+    np.testing.assert_array_equal(canv, np.asarray(exact))
+
+
+def test_heterogeneous_batch_less_ring_than_uniform():
+    """The ISSUE acceptance property at test scale: wide + deep mix,
+    planner converges with overflow_dropped == 0 using strictly less
+    total ring memory than uniform safety_factor=2.0 sizing."""
+    prob = _prob(n=512, max_dwell=64)
+    sparse = [_window(-0.5, 0.0, w) for w in (16.0, 12.0, 10.0, 8.0, 6.0)]
+    dense = [_window(-0.7436447860, 0.1318252536, 3.0 / 2 ** k)
+             for k in (2, 4)]
+    bounds = sparse + dense
+    canv, rep = solve_batch(prob, bounds, plan=3)
+    assert rep.overflow_dropped == 0
+    uniform_caps = scan_capacities(512, 4, 2, 16, safety_factor=2.0)
+    uniform_rows = len(bounds) * 2 * max(uniform_caps)
+    assert rep.ring_rows < uniform_rows, (rep.ring_rows, uniform_rows)
+    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    np.testing.assert_array_equal(canv, np.asarray(exact))
+
+
+def test_solve_planned_sharded_matches_unsharded():
+    """plan= composes with mesh=: same canvases, reports agree."""
+    prob = _prob()
+    bounds = [_window(-0.5 + 0.05 * i, 0.0, 2.0 + i) for i in range(5)]
+    ref, rep_ref = solve_batch(prob, bounds, plan=2)
+    shd, rep_shd = solve_batch(prob, bounds, plan=2,
+                               mesh=make_frames_mesh(1))
+    np.testing.assert_array_equal(shd, ref)
+    assert rep_shd.overflow_dropped == rep_ref.overflow_dropped == 0
+    assert rep_shd.leaf_count == rep_ref.leaf_count
+
+
+def test_plan_report_accounting():
+    """Ring accounting: report.ring_rows is the sum over dispatches of
+    (frames x 2 x max caps); with no retries it equals the plan's."""
+    prob = _prob(n=512, max_dwell=64)
+    bounds = ([_window(-0.5, 0.0, 16.0)] * 3
+              + [_window(-0.7436447860, 0.1318252536, 0.01)] * 2)
+    plan = planner.plan_capacities(prob, bounds, num_buckets=2)
+    canv, rep = planner.solve_planned(prob, np.asarray(bounds, np.float32),
+                                      plan=plan)
+    if rep.retries == 0:
+        assert rep.ring_rows == plan.ring_rows
+        assert rep.leaf_count == sum(st.leaf_count
+                                     for st in rep.bucket_stats)
+    else:
+        assert rep.ring_rows > plan.ring_rows
+    assert rep.ring_bytes == rep.ring_rows * 8
+    assert len(rep.region_counts) == 5
+
+
+def test_plan_path_rejects_conflicting_kwargs():
+    """Uniform-path kwargs on the planned path fail loudly (the planner
+    sizes capacities itself), and estimation kwargs alongside a prebuilt
+    plan fail instead of being silently ignored."""
+    prob = _prob()
+    bounds = [_window(-0.5, 0.0, 2.0)] * 2
+    with pytest.raises(ValueError, match="uniform path"):
+        solve_batch(prob, bounds, plan=2, p_subdiv=0.8)
+    with pytest.raises(ValueError, match="uniform path"):
+        solve_batch(prob, bounds, plan=2, capacities=(4, 4))
+    prebuilt = planner.plan_capacities(prob, bounds, num_buckets=2)
+    with pytest.raises(ValueError, match="ignored"):
+        solve_batch(prob, bounds, plan=prebuilt, ref_width=8.0)
+    # the legitimate combinations still work
+    canv, rep = solve_batch(prob, bounds, plan=2, ref_width=8.0)
+    assert rep.overflow_dropped == 0 and canv.shape == (2, 128, 128)
+
+
+def test_frame_overflow_stats_plumbing():
+    """The per-frame overflow breakdown the retry path keys on: sums to
+    the batch total and is zero exactly where nothing dropped."""
+    prob = _prob(n=128, g=2, B=8)
+    levels = len(scan_capacities(128, 2, 2, 8)) - 1
+    caps = (4,) + (12,) * levels
+    bounds = np.stack([[-1.6 + 0.03 * i, -1.1, 0.55, 1.05]
+                       for i in range(3)]).astype(np.float32)
+    _, st = run_ask_scan_batch(prob, bounds, capacities=caps)
+    assert len(st.frame_overflow) == 3
+    assert len(st.frame_leaf_counts) == 3
+    assert sum(st.frame_overflow) == st.overflow_dropped
+    assert sum(st.frame_leaf_counts) == st.leaf_count
+    _, st_ok = run_ask_scan_batch(prob, bounds, safety_factor=1e9)
+    assert st_ok.frame_overflow == (0, 0, 0)
