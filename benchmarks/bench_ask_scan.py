@@ -330,6 +330,67 @@ def pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8,
     writer("render_pipelined_identical", case, res["identical"])
 
 
+def feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4,
+                     zoom=1.02, width0=6.0, safety_factor=1.1):
+    """Closed-loop occupancy feedback acceptance rows: the feedback-
+    driven render service (``RenderService(feedback=True)``) against the
+    prior-only baseline (same chunking/retry machinery, ``adapt=False``)
+    on a boundary-skimming zoom -- a trajectory that hugs the seahorse-
+    valley boundary while still zoomed OUT, where the real subdivision
+    density runs hotter than the zoom-depth prior.
+
+    Rows record, per policy: total OLT-ring rows allocated (retry
+    dispatches included), regions overflow-dropped (both must be 0 --
+    the in-service retry guarantees it), frame retries, and dispatches.
+    The feedback plan must reach 0 drops with FEWER ring rows and FEWER
+    retries than the prior plan, and its cold-start chunk 0 must
+    reproduce the prior plan exactly (same quantized P, "prior" source).
+    """
+    from repro.core.planner import ROW_BYTES
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService, zoom_bounds
+
+    prob = MandelbrotProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                             backend="jnp")
+    mesh = make_frames_mesh(1)
+    center = (-0.7436447860, 0.1318252536)  # seahorse valley
+
+    def traj():
+        return zoom_bounds(frames, center=center, width0=width0,
+                           zoom_per_frame=zoom)
+
+    case = f"n={n} f={frames} chunk={chunk}"
+    ref, _ = RenderService(prob, mesh=mesh, chunk_frames=chunk,
+                           safety_factor=1e9).render(traj())
+
+    results = {}
+    for adapt, key in ((False, "prior"), (True, "feedback")):
+        svc = RenderService(prob, mesh=mesh, chunk_frames=chunk,
+                            feedback=True, adapt=adapt,
+                            safety_factor=safety_factor)
+        canv, rs = svc.render(traj())
+        results[key] = rs
+        writer(f"ask_scan_{key}_ring_rows", case, rs.ring_rows)
+        writer(f"ask_scan_{key}_ring_bytes", case, rs.ring_rows * ROW_BYTES)
+        writer(f"ask_scan_{key}_overflow", case, rs.overflow_dropped)
+        writer(f"ask_scan_{key}_retries", case, rs.retries)
+        writer(f"ask_scan_{key}_dispatches", case, rs.dispatches)
+        writer(f"ask_scan_{key}_chunks", case, rs.chunks)
+        writer(f"ask_scan_{key}_plan_signatures", case, rs.plan_signatures)
+        writer(f"ask_scan_{key}_wall_ms", case, rs.wall_s * 1e3)
+        writer(f"ask_scan_{key}_identical", case,
+               int(np.array_equal(canv, ref)))
+
+    prior, fb = results["prior"], results["feedback"]
+    writer("ask_scan_feedback_ring_vs_prior", case,
+           fb.ring_rows / prior.ring_rows if prior.ring_rows else 0.0)
+    writer("ask_scan_feedback_cold_start_matches_prior", case,
+           int(fb.chunk_stats[0].p_subdiv == prior.chunk_stats[0].p_subdiv
+               and fb.chunk_stats[0].p_source == "prior"))
+    writer("ask_scan_feedback_measured_chunks", case,
+           sum(1 for c in fb.chunk_stats if c.p_source == "measured"))
+
+
 def run(writer, full=False):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
@@ -337,9 +398,11 @@ def run(writer, full=False):
         sharded_serving(writer, n=256, frames=64, devices=8, chunk=16)
         planner_batch(writer, n=512, dwell=256, n_sparse=12, n_dense=6)
         pipelined_serving(writer, n=256, dwell=128, frames=128, chunk=8)
+        feedback_serving(writer, n=256, dwell=128, frames=96, chunk=8)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
         sharded_serving(writer, n=128, frames=16, devices=8, chunk=8)
         planner_batch(writer, n=512, dwell=128, n_sparse=8, n_dense=4)
         pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8)
+        feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4)

@@ -145,6 +145,19 @@ class ASKStats:
         buffered ring: two buffers of the widest level slice."""
         return 2 * max(self.olt_caps) if self.olt_caps else 0
 
+    def frame_chains(self) -> tuple:
+        """Per-frame ``(region_counts, leaf_count)`` observation chains.
+
+        The raw material of the measured-occupancy feedback loop
+        (``core.feedback``): consecutive entries of a chain are parent /
+        child counts whose ratio is the measured per-level subdivision
+        rate. Batched/sharded stats yield one chain per true frame (in
+        input order); single-frame stats yield one chain.
+        """
+        if self.frame_leaf_counts:
+            return tuple(zip(self.region_counts, self.frame_leaf_counts))
+        return ((self.region_counts, self.leaf_count),)
+
 
 def _num_levels(n: int, g: int, r: int, B: int) -> int:
     """Number of exploration levels (shared definition: cost_model)."""

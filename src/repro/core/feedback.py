@@ -1,0 +1,313 @@
+"""Measured-occupancy feedback: close the loop between what a chunk
+actually subdivided and what the planner assumes the next chunk will.
+
+The capacity planner (``core/planner.py``) seeds each frame's effective
+subdivision probability from a zoom-depth *prior*
+(``planner.effective_p_subdiv``): a fit, not a measurement. A trajectory
+whose density deviates from that fit -- e.g. a zoom path skimming the
+Mandelbrot boundary while still zoomed out -- either overflows into the
+retry path (extra dispatches) or over-provisions ring memory. But every
+finished chunk already carries the ground truth: ``ASKStats.
+region_counts`` records the live-region count entering each level, and
+the ratio of consecutive entries IS the per-level subdivision rate the
+cost model's constant-P assumption (paper Sec. 4.2.1, assumption ii)
+abstracts. This module turns those counts into an empirical
+``p_subdiv`` per zoom depth and feeds it back into planning:
+
+  1. ``measured_p_subdiv`` reduces one frame's observed level counts to
+     a single constant-P equivalent -- the envelope P whose expected-
+     occupancy curve covers every level the frame actually populated;
+  2. ``OccupancyEstimator`` maintains an EWMA of that measurement per
+     zoom-depth bucket, across chunk boundaries. Depths never observed
+     fall back to the prior -- the cold-start chunk of a stream plans
+     exactly as the prior-only planner would;
+  3. ``predict_quantized`` rounds the blended P *up* onto a coarse grid,
+     so the downstream capacity vectors -- and therefore the compiled
+     chunk programs -- take at most O((p_deep - p_min) / p_quantum)
+     distinct signatures for the life of a serving process.
+
+Consumers: ``planner.plan_frames(..., observed=estimator)`` blends the
+measurement into a batch plan; ``launch.render_service.RenderService(
+feedback=...)`` re-plans every chunk of a stream from the estimator
+state. This is runtime aggregation in the sense of the DP-consolidation
+compilers (Wu et al. 2016): the launch configuration of iteration k+1
+is derived from the measured workload of iteration k, not from a static
+model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.planner import (P_DEEP_DEFAULT, P_MIN_DEFAULT,
+                                SLOPE_DEFAULT, effective_p_subdiv)
+
+__all__ = [
+    "measured_p_subdiv",
+    "level_subdivision_rates",
+    "ewma",
+    "OccupancyEstimator",
+]
+
+
+def level_subdivision_rates(region_counts: Sequence[int], leaf_count: int,
+                            *, r: int) -> Tuple[float, ...]:
+    """Per-level measured subdivision rates of one frame.
+
+    ``region_counts`` is the engine's entering-count chain (live regions
+    entering exploration level l, ``ASKStats.region_counts``); appending
+    ``leaf_count`` completes it (regions that reached the last level).
+    A level-l parent spawns r^2 children when it subdivides, so the
+    measured rate at level l is::
+
+        p_hat_l = count[l + 1] / (r^2 * count[l])
+
+    Levels with zero parents contribute no rate (the chain ended).
+    Returns one rate per executed exploration level.
+    """
+    if r < 2:
+        raise ValueError(f"r must be >= 2, got {r}")
+    chain = [int(c) for c in region_counts] + [int(leaf_count)]
+    rates = []
+    for cur, nxt in zip(chain, chain[1:]):
+        if cur <= 0:
+            break
+        rates.append(nxt / (r * r * cur))
+    return tuple(rates)
+
+
+def measured_p_subdiv(region_counts: Sequence[int], leaf_count: int,
+                      *, g: int, r: int) -> Optional[float]:
+    """Envelope constant-P equivalent of one frame's observed counts.
+
+    The ring is sized level by level from the cost model's E_l =
+    g^2 (r^2 P)^l (paper Sec. 4.2.1 assumption ii), so the measurement
+    that matters for CAPACITY is the smallest constant P whose E_l
+    curve dominates every observed level count -- the envelope::
+
+        p_hat = max_{l >= 1} (count[l] / g^2)^(1/l) / r^2
+
+    evaluated over the whole chain (exploration levels plus the leaf
+    level). A work-weighted average of the per-level rates
+    (``level_subdivision_rates``) would under-size whichever level
+    binds: real occupancy profiles are flatter than the geometric
+    model, and the pooled rate is dominated by the deep, populous
+    levels. Counts generated exactly from a constant P recover that P
+    (every level gives the same value), which is the property the
+    regression tier pins.
+
+    Returns None when the frame carries no subdivision information (no
+    exploration levels executed, e.g. an n/g <= B chain) -- callers
+    keep the prior in that case. The estimate is NOT clamped here; the
+    estimator clamps to its [p_min, p_deep] band so the planning P
+    always stays in the band the prior lives in.
+    """
+    if g < 1 or r < 2:
+        raise ValueError(f"need g >= 1 and r >= 2, got g={g} r={r}")
+    chain = [int(c) for c in region_counts] + [int(leaf_count)]
+    best = None
+    for lv, count in enumerate(chain):
+        if lv == 0:
+            continue  # every root is live: level 0 carries no signal
+        p = (count / (g * g)) ** (1.0 / lv) / (r * r)
+        if best is None or p > best:
+            best = p
+    return best
+
+
+def ewma(old: Optional[float], new: float, alpha: float) -> float:
+    """One EWMA step: ``old + alpha * (new - old)``; seeds at ``new``.
+
+    A contraction toward ``new`` with factor (1 - alpha):
+    ``|ewma(old, new, a) - new| == (1 - a) * |old - new|`` -- the
+    property tests pin this, it is what makes the estimator stable
+    under noisy per-chunk measurements.
+    """
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+    if old is None:
+        return new
+    return old + alpha * (new - old)
+
+
+@dataclasses.dataclass
+class OccupancyEstimator:
+    """EWMA of measured subdivision probability per zoom-depth bucket.
+
+    The estimator is the feedback state a serving loop carries across
+    chunk boundaries. Depth (``planner.zoom_depth`` levels, negative =
+    zoomed out) is bucketed at ``depth_quantum`` resolution; each bucket
+    holds an EWMA of the envelope measured P of the frames observed
+    there. Prediction:
+
+    * a depth whose nearest observed bucket lies within
+      ``max_extrapolate`` levels returns that bucket's EWMA (clamped to
+      [p_min, p_deep] -- measurement noise never plans outside the band
+      the prior lives in);
+    * anything further from every observation falls back to the
+      zoom-depth prior (``planner.effective_p_subdiv`` with this
+      estimator's p_deep / slope / p_min), so a cold estimator plans
+      EXACTLY like the prior-only planner -- the cold-start contract
+      the regression tier pins.
+
+    ``predict_quantized`` additionally rounds UP onto a ``p_quantum``
+    grid: rounding up keeps the capacity estimate safe, and the grid
+    bounds how many distinct capacity vectors (hence compiled chunk
+    programs) a feedback-driven stream can ever request.
+    """
+
+    p_deep: float = P_DEEP_DEFAULT
+    slope: float = SLOPE_DEFAULT
+    p_min: float = P_MIN_DEFAULT
+    alpha: float = 0.5  # EWMA weight of the newest chunk's measurement
+    depth_quantum: float = 0.5  # depth-bucket width, in subdivision levels
+    max_extrapolate: float = 2.0  # levels a measurement generalises across
+    p_quantum: float = 0.05  # predict_quantized grid (plan signatures)
+    _ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+    frames_observed: int = 0
+    chunks_observed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        if self.depth_quantum <= 0 or self.p_quantum <= 0:
+            raise ValueError("depth_quantum and p_quantum must be positive")
+        if not 0.0 < self.p_min <= self.p_deep <= 1.0:
+            raise ValueError(
+                f"need 0 < p_min <= p_deep <= 1, got {self.p_min}/{self.p_deep}")
+
+    # -- observation --------------------------------------------------------
+
+    def _bucket(self, depth: float) -> int:
+        return int(round(float(depth) / self.depth_quantum))
+
+    def _clamp(self, p: float) -> float:
+        return min(max(float(p), self.p_min), self.p_deep)
+
+    def observe_value(self, depth: float, p: float) -> float:
+        """Fold one measured P at one depth into the EWMA state.
+
+        Returns the bucket's new EWMA. The raw measurement is clamped
+        into [p_min, p_deep] first, so the state space of the estimator
+        is the band the prior lives in.
+        """
+        b = self._bucket(depth)
+        self._ewma[b] = ewma(self._ewma.get(b), self._clamp(p), self.alpha)
+        self.frames_observed += 1
+        return self._ewma[b]
+
+    def observe_frames(self, depths: Sequence[float],
+                       chains: Sequence[Tuple[Sequence[int], int]],
+                       *, g: int, r: int) -> None:
+        """Observe one finished chunk: per-frame (region_counts,
+        leaf_count) chains at the given zoom depths.
+
+        Within the chunk, frames sharing a depth bucket are reduced by
+        MAX before the EWMA step -- capacity is an envelope problem (the
+        hottest frame of a class binds its ring), so averaging frames
+        inside one chunk would systematically under-size; smoothing
+        belongs ACROSS chunk boundaries, where it damps measurement
+        noise chunk to chunk. Frames whose chain carries no subdivision
+        information (see ``measured_p_subdiv``) are skipped. Counts as
+        one chunk regardless of how many frames it held.
+        """
+        if len(depths) != len(chains):
+            raise ValueError(
+                f"got {len(depths)} depths for {len(chains)} chains")
+        per_bucket: Dict[int, float] = {}
+        for depth, (counts, leaf) in zip(depths, chains):
+            p = measured_p_subdiv(counts, leaf, g=g, r=r)
+            if p is None:
+                continue
+            b = self._bucket(depth)
+            v = self._clamp(p)
+            per_bucket[b] = max(per_bucket.get(b, v), v)
+            self.frames_observed += 1
+        for b, v in per_bucket.items():
+            self._ewma[b] = ewma(self._ewma.get(b), v, self.alpha)
+        self.chunks_observed += 1
+
+    def observe_stats(self, depths: Sequence[float], stats, *,
+                      g: int, r: int) -> None:
+        """Observe a finished batched/sharded dispatch from its
+        ``ASKStats`` (uses ``stats.frame_chains()``)."""
+        self.observe_frames(depths, stats.frame_chains(), g=g, r=r)
+
+    def observe_report(self, report, *, g: int, r: int) -> None:
+        """Observe a finished planned run (``planner.PlanReport``).
+
+        Depths come from the plan's per-frame estimates; reports built
+        from hand-made plans without estimates cannot be observed this
+        way (pass depths to ``observe_frames`` instead).
+        """
+        ests = report.plan.estimates
+        if len(ests) != report.frames:
+            raise ValueError(
+                "plan carries no per-frame estimates; use observe_frames "
+                "with explicit depths")
+        depths = [e.depth for e in ests]
+        chains = list(zip(report.region_counts, report.frame_leaf_counts))
+        self.observe_frames(depths, chains, g=g, r=r)
+
+    # -- prediction ---------------------------------------------------------
+
+    def prior(self, depth: float) -> float:
+        """The zoom-depth prior this estimator falls back to."""
+        return effective_p_subdiv(depth, p_deep=self.p_deep,
+                                  slope=self.slope, p_min=self.p_min)
+
+    def _nearest_bucket(self, depth: float) -> Optional[int]:
+        if not self._ewma:
+            return None
+        b = float(depth) / self.depth_quantum
+        nearest = min(self._ewma, key=lambda k: (abs(k - b), k))
+        if abs(nearest - b) * self.depth_quantum > self.max_extrapolate:
+            return None
+        return nearest
+
+    def measured(self, depth: float) -> Optional[float]:
+        """Nearest observed bucket's EWMA within ``max_extrapolate``
+        levels of ``depth``; None when every observation is too far."""
+        b = self._nearest_bucket(depth)
+        return None if b is None else self._ewma[b]
+
+    def predict(self, depth: float) -> float:
+        """Blended planning P at ``depth``. Always in [p_min, p_deep].
+
+        When a measurement is near enough, the prediction is that
+        bucket's EWMA shifted by the PRIOR's trend between the bucket
+        centre and ``depth`` -- the measurement supplies the level, the
+        prior supplies the depth shape -- so a zooming trajectory whose
+        frames land slightly deeper than every observation so far is
+        not systematically under-predicted. With no measurement in
+        range the prediction IS the prior (the cold-start contract).
+        """
+        b = self._nearest_bucket(depth)
+        if b is None:
+            return self._clamp(self.prior(depth))
+        shift = self.prior(depth) - self.prior(b * self.depth_quantum)
+        return self._clamp(self._ewma[b] + shift)
+
+    def predict_quantized(self, depth: float) -> float:
+        """``predict`` rounded UP onto the ``p_quantum`` grid (then
+        clamped to p_deep). Monotone in the raw prediction and never
+        below it up to the p_deep cap -- rounding up keeps capacity
+        sizing safe while bounding the set of distinct plan signatures
+        a stream can request."""
+        p = self.predict(depth)
+        q = math.ceil(p / self.p_quantum - 1e-12) * self.p_quantum
+        return min(q, self.p_deep)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def is_cold(self) -> bool:
+        """True until the first observation lands: every prediction is
+        the prior, the cold-start contract of the serving loop."""
+        return not self._ewma
+
+    def snapshot(self) -> Dict[float, float]:
+        """Observed state as {bucket centre depth: EWMA P} (a copy)."""
+        return {k * self.depth_quantum: v for k, v in sorted(self._ewma.items())}

@@ -28,8 +28,12 @@ the same consolidation lever the DP-compiler literature pulls (Wu et al.
 the budget is ring rows.
 
 Entry points: ``plan_capacities`` (bounds -> ``CapacityPlan``),
-``solve_planned`` (execute a plan), and ``mandelbrot.solve_batch(...,
-plan=...)`` which wires both behind the familiar front-end.
+``plan_frames`` (the same, optionally blending MEASURED occupancy from a
+``core.feedback.OccupancyEstimator`` via ``observed=``), ``solve_planned``
+(execute a plan), and ``mandelbrot.solve_batch(..., plan=...)`` which
+wires both behind the familiar front-end. The closed feedback loop --
+estimator state carried across chunk boundaries of a stream -- lives in
+``launch.render_service.RenderService(feedback=...)``.
 """
 
 from __future__ import annotations
@@ -47,7 +51,12 @@ from repro.core.ask import (_num_levels, run_ask_scan_batch,
 from repro.core.cost_model import expected_level_counts
 
 __all__ = [
+    "ROW_BYTES",
+    "P_DEEP_DEFAULT",
+    "SLOPE_DEFAULT",
+    "P_MIN_DEFAULT",
     "FrameEstimate",
+    "FramePlan",
     "BucketPlan",
     "CapacityPlan",
     "PlanReport",
@@ -56,12 +65,22 @@ __all__ = [
     "estimate_frames",
     "plan_from_p",
     "plan_capacities",
+    "plan_frames",
     "worst_case_capacities",
+    "escalate_capacities",
     "solve_planned",
 ]
 
-# int32 (cy, cx) coordinates: bytes per OLT row
-_ROW_BYTES = 8
+# int32 (cy, cx) coordinates: bytes per OLT row (public: the benchmarks
+# convert ring rows to bytes with THIS constant, never a literal)
+ROW_BYTES = 8
+
+# the calibrated zoom-depth prior band (fit notes: effective_p_subdiv).
+# Every planning entry point AND core.feedback.OccupancyEstimator default
+# to this one triple, so re-fitting the prior is a one-place change.
+P_DEEP_DEFAULT = 0.97
+SLOPE_DEFAULT = 0.18
+P_MIN_DEFAULT = 0.3
 
 
 # ---------------------------------------------------------------------------
@@ -82,9 +101,9 @@ def zoom_depth(width: float, *, ref_width: float, r: int) -> float:
     return math.log(ref_width / width) / math.log(r)
 
 
-def effective_p_subdiv(depth: float, *, p_deep: float = 0.97,
-                       slope: float = 0.18,
-                       p_min: float = 0.3) -> float:
+def effective_p_subdiv(depth: float, *, p_deep: float = P_DEEP_DEFAULT,
+                       slope: float = SLOPE_DEFAULT,
+                       p_min: float = P_MIN_DEFAULT) -> float:
     """Effective per-level subdivision probability at a given zoom depth.
 
     A self-similar boundary fills a constant *fraction* of the window at
@@ -119,14 +138,39 @@ class FrameEstimate:
     index: int  # position in the input batch
     width: float  # complex-plane window width
     depth: float  # zoom_depth(width)
-    p_subdiv: float  # effective_p_subdiv(depth)
+    p_subdiv: float  # the P the plan uses for this frame
     expected: Tuple[float, ...]  # E_l = g^2 (r^2 P)^l per level 0..tau
+
+
+@dataclasses.dataclass(frozen=True)
+class FramePlan:
+    """Provenance of one frame's planning P: prior vs measured.
+
+    ``p_subdiv`` is what the plan actually used (what sized the frame's
+    bucket); ``p_prior`` is the zoom-depth prior at this frame's depth;
+    ``p_measured`` is the feedback estimator's (EWMA-smoothed, clamped)
+    measurement when one was near enough, else None. The pair feeds the
+    ``PlanReport.frame_p_*`` fields so tests and benchmarks can assert
+    on which signal drove each frame instead of reverse-engineering
+    ring sizes.
+    """
+
+    index: int
+    width: float
+    depth: float
+    p_prior: float
+    p_measured: Union[float, None]  # None: cold start / out of range
+    p_subdiv: float  # the P the plan used (p_measured or p_prior, maybe quantized)
+
+    @property
+    def source(self) -> str:
+        return "prior" if self.p_measured is None else "measured"
 
 
 def estimate_frames(problem, widths: Sequence[float], *,
                     ref_width: Union[float, None] = None,
-                    p_deep: float = 0.97, slope: float = 0.18,
-                    p_min: float = 0.3) -> Tuple[FrameEstimate, ...]:
+                    p_deep: float = P_DEEP_DEFAULT, slope: float = SLOPE_DEFAULT,
+                    p_min: float = P_MIN_DEFAULT) -> Tuple[FrameEstimate, ...]:
     """Per-frame occupancy estimates for a batch of window widths.
 
     ``ref_width`` anchors depth 0 (where P saturates at ``p_deep``); it
@@ -134,12 +178,7 @@ def estimate_frames(problem, widths: Sequence[float], *,
     frame" view -- or, failing that, the narrowest frame in the batch.
     """
     n, g, r, B = problem.n, problem.g, problem.r, problem.B
-    if ref_width is None:
-        bounds = getattr(problem, "bounds", None)
-        if bounds is not None:
-            ref_width = float(bounds[2]) - float(bounds[0])
-        else:
-            ref_width = min(float(w) for w in widths)
+    ref_width = _resolve_ref_width(problem, widths, ref_width)
     out = []
     for i, w in enumerate(widths):
         d = zoom_depth(float(w), ref_width=ref_width, r=r)
@@ -174,16 +213,23 @@ class BucketPlan:
 
     @property
     def ring_bytes(self) -> int:
-        return self.ring_rows * _ROW_BYTES
+        return self.ring_rows * ROW_BYTES
 
 
 @dataclasses.dataclass(frozen=True)
 class CapacityPlan:
-    """Buckets ascending by capacity, plus the estimates they came from."""
+    """Buckets ascending by capacity, plus the estimates they came from.
+
+    ``frame_plans`` (populated by ``plan_frames``) records per frame
+    whether the planning P came from the zoom-depth prior or from a
+    measured-occupancy estimator; plans built by the lower-level
+    ``plan_from_p`` / hand-made plans leave it empty.
+    """
 
     buckets: Tuple[BucketPlan, ...]
     estimates: Tuple[FrameEstimate, ...]
     safety_factor: float
+    frame_plans: Tuple[FramePlan, ...] = ()
 
     @property
     def frames(self) -> int:
@@ -198,7 +244,7 @@ class CapacityPlan:
 
     @property
     def ring_bytes(self) -> int:
-        return self.ring_rows * _ROW_BYTES
+        return self.ring_rows * ROW_BYTES
 
     def bucket_of(self, frame: int) -> int:
         for pos, b in enumerate(self.buckets):
@@ -215,10 +261,23 @@ def worst_case_capacities(problem) -> Tuple[int, ...]:
     return tuple((g * r ** lv) ** 2 for lv in range(levels + 1))
 
 
+def escalate_capacities(caps, worst, frames) -> Tuple[int, ...]:
+    """THE overflow-escalation step, shared by every retry loop
+    (``solve_planned``, the render service's in-chunk retry): double
+    each level's capacity, clamped at the worst case. ``frames`` only
+    labels the defensive error -- the worst case cannot drop, so hitting
+    it with frames still overflowing is a bug, not a sizing problem."""
+    if tuple(caps) == tuple(worst):
+        raise RuntimeError(
+            f"frames {sorted(frames)} overflow at worst-case capacities")
+    return tuple(min(2 * c, w) for c, w in zip(caps, worst))
+
+
 def plan_from_p(problem, frame_ps: Sequence[float], *,
                 num_buckets: int = 4,
                 safety_factor: float = 1.25,
                 estimates: Tuple[FrameEstimate, ...] = (),
+                frame_plans: Tuple[FramePlan, ...] = (),
                 ) -> CapacityPlan:
     """Bucket frames by per-frame subdivision probability.
 
@@ -291,14 +350,15 @@ def plan_from_p(problem, frame_ps: Sequence[float], *,
             buckets.append(BucketPlan(frames=tuple(sorted(int(i) for i in idx)),
                                       p_subdiv=p, capacities=caps))
     return CapacityPlan(buckets=tuple(buckets), estimates=tuple(estimates),
-                        safety_factor=safety_factor)
+                        safety_factor=safety_factor,
+                        frame_plans=tuple(frame_plans))
 
 
 def plan_capacities(problem, bounds_batch, *,
                     num_buckets: int = 4,
                     safety_factor: float = 1.25,
-                    p_deep: float = 0.97, slope: float = 0.18,
-                    p_min: float = 0.3,
+                    p_deep: float = P_DEEP_DEFAULT, slope: float = SLOPE_DEFAULT,
+                    p_min: float = P_MIN_DEFAULT,
                     ref_width: Union[float, None] = None,
                     ) -> CapacityPlan:
     """Plan a heterogeneous zoom batch from its [F, 4] bounds.
@@ -319,6 +379,98 @@ def plan_capacities(problem, bounds_batch, *,
                        estimates=ests)
 
 
+def _resolve_ref_width(problem, widths, ref_width) -> float:
+    """THE depth-0 anchor rule, shared by every planning entry point:
+    explicit ``ref_width`` > the problem's own bounds width (the
+    "boundary fills the frame" view) > the narrowest frame in the
+    batch. One definition, so prior-only and observed plans can never
+    assign different zoom depths to the same bounds."""
+    if ref_width is not None:
+        return float(ref_width)
+    bounds = getattr(problem, "bounds", None)
+    if bounds is not None:
+        return float(bounds[2]) - float(bounds[0])
+    return min(float(w) for w in widths)
+
+
+def _frame_widths(problem, bounds_batch, ref_width):
+    arr = np.asarray(bounds_batch, np.float64)
+    if arr.ndim != 2 or arr.shape[1] != 4:
+        raise ValueError(f"bounds_batch must be [F, 4], got {arr.shape}")
+    widths = (arr[:, 2] - arr[:, 0]).tolist()
+    return widths, _resolve_ref_width(problem, widths, ref_width)
+
+
+def plan_frames(problem, bounds_batch, *, observed=None,
+                num_buckets: int = 4,
+                safety_factor: float = 1.25,
+                quantize: bool = False,
+                p_deep: Union[float, None] = None,
+                slope: Union[float, None] = None,
+                p_min: Union[float, None] = None,
+                ref_width: Union[float, None] = None,
+                ) -> CapacityPlan:
+    """Plan a zoom batch, blending MEASURED occupancy when available.
+
+    Like ``plan_capacities``, but each frame's planning P comes from
+    ``observed`` (a ``core.feedback.OccupancyEstimator``) when the
+    estimator holds a measurement near that frame's zoom depth, and from
+    the zoom-depth prior otherwise. At the default ``quantize=False`` a
+    cold (or absent) estimator therefore reproduces ``plan_capacities``
+    EXACTLY -- the cold-start contract of the feedback serving loop.
+    ``quantize=True`` rounds every prediction (the cold prior included)
+    up onto the estimator's ``p_quantum`` grid, trading that exactness
+    for a bounded set of distinct capacity vectors (compiled-program
+    signatures) over the life of a stream -- cold-start comparisons then
+    hold against a prior-only plan quantized the same way, which is what
+    the render service's prior-only baseline (``adapt=False``) does.
+
+    The per-frame provenance lands in ``CapacityPlan.frame_plans`` and,
+    after execution, in ``PlanReport.frame_p_subdiv`` /
+    ``frame_p_source``. When ``observed`` is given, the estimator's own
+    band (p_deep / slope / p_min) governs its prior fallback, so passing
+    those knobs alongside it raises instead of being silently ignored.
+    """
+    if observed is None:
+        if quantize:
+            raise ValueError(
+                "quantize=True needs observed=: the p_quantum grid lives "
+                "on the OccupancyEstimator, so without one the flag would "
+                "be silently ignored")
+        return plan_capacities(
+            problem, bounds_batch, num_buckets=num_buckets,
+            safety_factor=safety_factor,
+            p_deep=P_DEEP_DEFAULT if p_deep is None else p_deep,
+            slope=SLOPE_DEFAULT if slope is None else slope,
+            p_min=P_MIN_DEFAULT if p_min is None else p_min,
+            ref_width=ref_width)
+    clashing = [k for k, v in
+                (("p_deep", p_deep), ("slope", slope), ("p_min", p_min))
+                if v is not None]
+    if clashing:
+        raise ValueError(
+            f"{clashing} conflict with observed=: the estimator's own "
+            "band governs its prior fallback -- configure the "
+            "OccupancyEstimator instead")
+    widths, ref_w = _frame_widths(problem, bounds_batch, ref_width)
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    ests, fps = [], []
+    for i, w in enumerate(widths):
+        d = zoom_depth(float(w), ref_width=ref_w, r=r)
+        measured = observed.measured(d)
+        p = (observed.predict_quantized(d) if quantize
+             else observed.predict(d))
+        ests.append(FrameEstimate(
+            index=i, width=float(w), depth=d, p_subdiv=p,
+            expected=tuple(expected_level_counts(n, g, r, B, P=p))))
+        fps.append(FramePlan(index=i, width=float(w), depth=d,
+                             p_prior=observed.prior(d), p_measured=measured,
+                             p_subdiv=p))
+    return plan_from_p(problem, [e.p_subdiv for e in ests],
+                       num_buckets=num_buckets, safety_factor=safety_factor,
+                       estimates=tuple(ests), frame_plans=tuple(fps))
+
+
 # ---------------------------------------------------------------------------
 # execution: one compiled program per bucket + overflow-adaptive retry
 # ---------------------------------------------------------------------------
@@ -335,13 +487,20 @@ class PlanReport:
     overflow_dropped: int = 0  # final drops (0: every frame converged)
     leaf_count: int = 0
     region_counts: tuple = ()  # per-frame tuples, final successful run
+    frame_leaf_counts: tuple = ()  # per-frame leaf counts, final run
+    # the P that sized each frame's SUCCESSFUL dispatch (retries update
+    # it to the bucket the frame converged in), and whether the plan got
+    # it from the zoom-depth prior or a measured-occupancy estimator --
+    # so tests/benchmarks assert on the signal, not on ring sizes
+    frame_p_subdiv: tuple = ()
+    frame_p_source: tuple = ()  # "prior" | "measured" per frame
     ring_rows: int = 0  # rows allocated across ALL dispatches, retries incl.
     wall_s: float = 0.0
     bucket_stats: tuple = ()  # ASKStats per dispatch, issue order
 
     @property
     def ring_bytes(self) -> int:
-        return self.ring_rows * _ROW_BYTES
+        return self.ring_rows * ROW_BYTES
 
 
 def _take_frames(extras, idx):
@@ -374,8 +533,10 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
 
     ``extras`` is the per-frame parameter pytree of the batched engine
     (for Mandelbrot: [F, 4] bounds). When ``plan`` is None one is built
-    with ``plan_capacities(problem, extras, num_buckets=...,
-    safety_factor=..., **plan_kw)`` (which assumes bounds-shaped extras).
+    with ``plan_frames(problem, extras, num_buckets=...,
+    safety_factor=..., **plan_kw)`` (which assumes bounds-shaped
+    extras); pass ``observed=`` there to blend measured occupancy from a
+    ``core.feedback.OccupancyEstimator`` into the plan.
 
     Buckets run in ascending capacity order, one compiled program each.
     Any frame whose ``ASKStats.frame_overflow`` entry is nonzero is
@@ -394,8 +555,8 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
         raise ValueError("extras must contain at least one array leaf")
     F = int(np.asarray(leaves[0]).shape[0])
     if plan is None:
-        plan = plan_capacities(problem, extras, num_buckets=num_buckets,
-                               safety_factor=safety_factor, **plan_kw)
+        plan = plan_frames(problem, extras, num_buckets=num_buckets,
+                           safety_factor=safety_factor, **plan_kw)
     elif plan_kw:
         raise ValueError(
             f"plan was given, so estimation kwargs {sorted(plan_kw)} would "
@@ -411,18 +572,22 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
     treedef = None
     leaf_counts = [0] * F
     region_counts: list = [()] * F
+    frame_p: list = [float("nan")] * F
     retried: set = set()
     bucket_stats = []
 
     # worklist ascending by ring width; (capacities, frame indices,
-    # position in plan.buckets or None once escalated beyond the plan).
-    # Empty buckets dispatch nothing but remain valid promotion targets.
-    work = [(b.capacities, list(b.frames), pos)
+    # position in plan.buckets or None once escalated beyond the plan,
+    # the planning P that sized these capacities -- escalated-past-the-
+    # plan entries keep the last bucket's P, the doubled caps speak for
+    # themselves). Empty buckets dispatch nothing but remain valid
+    # promotion targets.
+    work = [(b.capacities, list(b.frames), pos, b.p_subdiv)
             for pos, b in enumerate(plan.buckets) if b.frames]
 
     while work:
         work.sort(key=lambda item: max(item[0]))
-        caps, idx, pos = work.pop(0)
+        caps, idx, pos, p_used = work.pop(0)
         if report.dispatches >= max_dispatches:
             raise RuntimeError(
                 f"planner exceeded max_dispatches={max_dispatches} without "
@@ -447,6 +612,7 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
             for j in ok:
                 leaf_counts[idx[j]] = st.frame_leaf_counts[j]
                 region_counts[idx[j]] = st.region_counts[j]
+                frame_p[idx[j]] = p_used
 
         failed = [idx[j] for j in range(len(idx))
                   if st.frame_overflow[j] != 0]
@@ -456,23 +622,26 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
             if pos is not None and pos + 1 < len(plan.buckets):
                 tgt_caps = plan.buckets[pos + 1].capacities
                 tgt_pos: Union[int, None] = pos + 1
+                tgt_p = plan.buckets[pos + 1].p_subdiv
             else:
-                if caps == worst:  # worst case cannot drop; defensive only
-                    raise RuntimeError(
-                        f"frames {failed} overflow at worst-case capacities")
-                tgt_caps = tuple(min(2 * c, w) for c, w in zip(caps, worst))
+                tgt_caps = escalate_capacities(caps, worst, failed)
                 tgt_pos = None
+                tgt_p = p_used
             for item in work:
                 if item[0] == tgt_caps:
                     item[1].extend(failed)
                     break
             else:
-                work.append((tgt_caps, list(failed), tgt_pos))
+                work.append((tgt_caps, list(failed), tgt_pos, tgt_p))
 
     report.wall_s = time.perf_counter() - t0
     report.retried_frames = tuple(sorted(retried))
     report.leaf_count = sum(int(c) for c in leaf_counts)
     report.region_counts = tuple(region_counts)
+    report.frame_leaf_counts = tuple(int(c) for c in leaf_counts)
+    report.frame_p_subdiv = tuple(frame_p)
+    report.frame_p_source = (tuple(fp.source for fp in plan.frame_plans)
+                             if plan.frame_plans else ("prior",) * F)
     report.overflow_dropped = 0  # the loop only exits once every frame fits
     report.bucket_stats = tuple(bucket_stats)
     states_out = jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -26,11 +26,28 @@ dispatch_ask_scan_sharded``):
     enqueue/fetch times; a pipelined run's ``wall_s`` measured against a
     synchronous run's ``busy_s`` (its serial per-chunk cost) quantifies
     the overlap. ``pipeline_depth=1`` restores the fully synchronous
-    PR-2 behaviour (dispatch, block, yield, repeat).
+    PR-2 behaviour (dispatch, block, yield, repeat);
+
+  * with ``feedback=`` set, the service closes the occupancy loop
+    (planner-aware chunking): each chunk's ring capacities are re-planned
+    from a ``core.feedback.OccupancyEstimator`` BEFORE dispatch -- the
+    zoom-depth prior on the cold-start chunk, the EWMA of the previous
+    chunks' measured ``region_counts`` afterwards -- and a boundary-aware
+    chunker cuts a chunk early when the predicted capacity class jumps,
+    so a trajectory's deep tail gets its own (hotter) compiled program
+    instead of inflating every frame's ring. Predictions are quantized
+    onto the estimator's ``p_quantum`` grid and dispatch widths are
+    power-of-two bucketed (``_pad_width``), so the compiled-program
+    cache stays keyed on (chunk width, capacity signature) with both
+    factors bounded for the life of the service.
+    Frames that still overflow are retried at doubled capacities (clamped
+    at the worst case) before the chunk is yielded: ``overflow_dropped ==
+    0`` holds chunk by chunk, and the measured counts that come back --
+    retries included -- are what the estimator folds in.
 
 ``python -m repro.launch.render_service --frames 64 --n 256`` runs a
 self-timed trajectory end to end and prints both pipelined and
-synchronous wall times.
+synchronous wall times (``--feedback`` switches on the closed loop).
 """
 
 from __future__ import annotations
@@ -44,6 +61,7 @@ from typing import Any, Iterable, Iterator, Tuple
 
 import numpy as np
 
+from repro.core.feedback import OccupancyEstimator
 from repro.launch.mesh import make_frames_mesh
 
 # frames each device renders per dispatch when the caller doesn't pin a
@@ -79,6 +97,11 @@ class ChunkStats:
     dispatch_s: float
     fetch_s: float
     in_flight: int  # chunks already enqueued when this one was finalised
+    # feedback (planner-aware) serving only:
+    p_subdiv: float | None = None  # quantized planning P that sized the chunk
+    p_source: str = ""  # "prior" | "measured" | "mixed" (cold start = prior)
+    retries: int = 0  # frame re-dispatches after overflow
+    ring_rows: int = 0  # OLT-ring rows allocated, retry dispatches included
 
     @property
     def busy_s(self) -> float:
@@ -110,10 +133,18 @@ class RenderStats:
     host_copy_s: float = 0.0  # render() only: device->numpy conversion
     chunk_stats: tuple = ()  # ChunkStats per chunk, stream order
     # traced signatures of the chunk program AFTER the stream (None when
-    # jax doesn't expose the jit cache). 1 == every chunk, ragged tail
-    # included, reused ONE compiled program; 2+ means the pad_to plumbing
-    # regressed and the tail retraced.
+    # jax doesn't expose the jit cache). Uniform serving: 1 == every
+    # chunk, ragged tail included, reused ONE compiled program; 2+ means
+    # the pad_to plumbing regressed and the tail retraced. Feedback
+    # serving: the sum across capacity signatures, whose regression
+    # target is ``plan_signatures`` (each signature traced exactly once).
     program_traces: int | None = None
+    # feedback serving only: frame re-dispatches after overflow, total
+    # OLT-ring rows allocated (retries included), and how many distinct
+    # capacity signatures (compiled chunk programs) the stream requested
+    retries: int = 0
+    ring_rows: int = 0
+    plan_signatures: int | None = None
 
     @property
     def dispatches_per_chunk(self) -> float:
@@ -154,10 +185,28 @@ class RenderService:
     chunks may be in flight at once (1 = synchronous, 2 = double
     buffering, the default). Engine kwargs (``capacities``,
     ``safety_factor``, ...) pass through to the scan engine unchanged.
+
+    ``feedback`` (True or a ``core.feedback.OccupancyEstimator``) turns
+    on closed-loop planner-aware chunking: every chunk's ring
+    capacities come from the estimator's (quantized) prediction at the
+    chunk's zoom depths -- the zoom-depth prior while the estimator is
+    cold, the previous chunks' measured occupancy afterwards -- the
+    chunker splits a chunk early when the predicted capacity class
+    jumps, overflowing frames are retried at doubled capacities before
+    the chunk is yielded, and the finished chunk's measured
+    ``region_counts`` are folded back into the estimator.
+    ``adapt=False`` keeps the same chunking/retry machinery but never
+    feeds measurements back -- the prior-only baseline the feedback
+    benchmark rows compare against. With ``pipeline_depth >= 2`` the
+    feedback lags by the chunks in flight: chunk k is planned from the
+    chunks finalised before it was enqueued, which is what keeps the
+    re-plan loop compatible with the async overlap.
     """
 
     def __init__(self, problem, *, mesh=None, chunk_frames: int | None = None,
-                 pipeline_depth: int = DEFAULT_PIPELINE_DEPTH, **engine_kw):
+                 pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
+                 feedback: OccupancyEstimator | bool | None = None,
+                 adapt: bool = True, **engine_kw):
         if "pad_to" in engine_kw:
             raise ValueError(
                 "pad_to is owned by the service (pinned to chunk_frames so "
@@ -174,18 +223,258 @@ class RenderService:
             raise ValueError(f"chunk_frames must be >= 1, got {want}")
         self.chunk_frames = -(-want // n_dev) * n_dev  # round up to multiple
         self.pipeline_depth = int(pipeline_depth)
+        if feedback:
+            clash = {"capacities", "p_subdiv"} & engine_kw.keys()
+            if clash:
+                raise ValueError(
+                    f"{sorted(clash)} conflict with feedback=: the service "
+                    "re-plans each chunk's capacities from the estimator; "
+                    "tune safety_factor / the OccupancyEstimator instead")
+            self.estimator = (feedback if isinstance(feedback, OccupancyEstimator)
+                              else OccupancyEstimator())
+            bounds = getattr(problem, "bounds", None)
+            if bounds is None:
+                raise ValueError(
+                    "feedback= needs problem.bounds to anchor zoom depth")
+            self._ref_width = float(bounds[2]) - float(bounds[0])
+        else:
+            if not adapt:
+                raise ValueError(
+                    "adapt=False is the prior-only FEEDBACK baseline (same "
+                    "chunking/retry machinery, no estimator updates) -- it "
+                    "needs feedback= set; without it the service runs the "
+                    "uniform path and the flag would be silently ignored")
+            self.estimator = None
+            self._ref_width = None
+        self.adapt = bool(adapt)
         self.engine_kw = engine_kw
+        self._caps_cache: dict = {}  # quantized P -> capacity vector
+        self._used_sigs: set = set()  # (pad width, capacities) dispatched
 
     # -- dispatch plumbing --------------------------------------------------
 
-    def _dispatch(self, chunk):
-        """Enqueue one chunk; returns (ShardedDispatch, enqueue seconds)."""
+    def _dispatch(self, chunk, caps=None):
+        """Enqueue one chunk; returns (ShardedDispatch, enqueue seconds).
+
+        ``caps`` (feedback path) overrides the engine kwargs' sizing with
+        a per-chunk capacity vector and pads to the pow2-bucketed width
+        (``_pad_width``); the uniform path keeps the width pinned to
+        ``chunk_frames``. Either way compiled programs are keyed on
+        (chunk width, capacity signature) and nothing retraces across
+        chunks that share a signature.
+        """
         from repro.mandelbrot import dispatch_batch
 
+        kw = dict(self.engine_kw)
+        pad = self.chunk_frames
+        if caps is not None:
+            kw["capacities"] = caps
+            pad = self._pad_width(len(chunk))
+            self._used_sigs.add((pad, tuple(caps)))
         t0 = time.perf_counter()
         d = dispatch_batch(self.problem, chunk, mesh=self.mesh,
-                           pad_to=self.chunk_frames, **self.engine_kw)
+                           pad_to=pad, **kw)
         return d, time.perf_counter() - t0
+
+    def _pad_width(self, f: int) -> int:
+        """Padding width of a feedback-path dispatch: the next power-of-
+        two multiple of the device count, capped at ``chunk_frames``.
+
+        Early-split chunks and small retry batches would waste most of a
+        full-width dispatch's ring (padding frames trace real compute),
+        but letting every length be its own width would trace a program
+        per length; power-of-two bucketing bounds the widths at
+        O(log(chunk_frames / devices)) -- so the compiled-program cache
+        stays keyed on (chunk width, capacity signature) with both
+        factors small, the discipline the uniform path pins with its
+        single width.
+        """
+        n_dev = int(self.mesh.devices.size)
+        w = n_dev
+        while w < f:
+            w *= 2
+        return min(w, self.chunk_frames)
+
+    # -- feedback (planner-aware) serving -----------------------------------
+
+    def _depth(self, bounds) -> float:
+        from repro.core.planner import zoom_depth
+
+        return zoom_depth(float(bounds[2]) - float(bounds[0]),
+                          ref_width=self._ref_width, r=self.problem.r)
+
+    def _caps_for(self, p: float):
+        """Capacity vector for one quantized planning P (memoised: the
+        p_quantum grid keeps this cache -- and the compiled-program
+        signature set -- small for the life of the service)."""
+        key = round(float(p), 6)
+        caps = self._caps_cache.get(key)
+        if caps is None:
+            from repro.core.ask import scan_capacities
+
+            prob = self.problem
+            caps = scan_capacities(
+                prob.n, prob.g, prob.r, prob.B, p_subdiv=key,
+                safety_factor=self.engine_kw.get("safety_factor", 2.0))
+            self._caps_cache[key] = caps
+        return caps
+
+    def _adaptive_chunks(self, it: Iterator):
+        """Boundary-aware chunker: yields (bounds, depths, p, caps,
+        source) with every frame of a chunk in ONE predicted capacity
+        class. A class jump cuts the chunk early -- deep-tail frames get
+        their own (hotter) program instead of inflating the whole
+        chunk's ring. Lazy: predictions are made as frames are pulled,
+        so re-planning naturally picks up whatever the estimator has
+        observed by then.
+        """
+        est = self.estimator
+        buf: list = []
+        depths: list = []
+        sources: list = []
+        cls = None  # (quantized P, capacity vector) of the open chunk
+
+        def flush():
+            src = (sources[0] if len(set(sources)) == 1 else "mixed")
+            return list(buf), list(depths), cls[0], cls[1], src
+
+        for b in it:
+            d = self._depth(b)
+            p = est.predict_quantized(d)
+            caps = self._caps_for(p)
+            if buf and (p, caps) != cls:
+                yield flush()
+                buf, depths, sources = [], [], []
+                # the estimator may have observed the flushed chunk while
+                # this generator was suspended in that yield: re-predict
+                # the held-over frame so the new chunk's class and
+                # provenance both reflect the post-observation state
+                p = est.predict_quantized(d)
+                caps = self._caps_for(p)
+            cls = (p, caps)
+            buf.append(b)
+            depths.append(d)
+            sources.append("measured" if est.measured(d) is not None
+                           else "prior")
+            if len(buf) == self.chunk_frames:
+                yield flush()
+                buf, depths, sources, cls = [], [], [], None
+        if buf:
+            yield flush()
+
+    def _resolve_overflow(self, bounds, caps, canvases, st):
+        """Retry overflowing frames at doubled capacities until every
+        frame fits, then merge canvases/stats. Returns (canvases np,
+        merged ASKStats, frame re-dispatch count, retry ring rows).
+
+        The merged stats' ``olt_caps`` are the LARGEST capacities any of
+        the chunk's frames ran at (the escalated vector when retries
+        happened), so ``ASKStats.ring_rows`` never under-reports the
+        per-frame residency of a hot chunk; the per-dispatch total incl.
+        padding lives in ``ChunkStats.ring_rows``."""
+        from repro.core.ask import ASKStats
+        from repro.core.planner import (escalate_capacities,
+                                        worst_case_capacities)
+
+        f = len(bounds)
+        chains = list(st.frame_chains())
+        launches = st.kernel_launches
+        wall = st.wall_s
+        retries = 0
+        retry_rows = 0
+        cur = tuple(caps)
+        pending = [j for j, o in enumerate(st.frame_overflow) if o]
+        canv = np.asarray(canvases)
+        if pending:
+            canv = np.array(canv)  # writable copy for the row merges
+            worst = worst_case_capacities(self.problem)
+        while pending:
+            cur = escalate_capacities(cur, worst, pending)
+            d, _ = self._dispatch([bounds[j] for j in pending], caps=cur)
+            rc, rst = d.finalize()
+            retry_rows += self._pad_width(len(pending)) * 2 * max(cur)
+            retries += len(pending)
+            launches += rst.kernel_launches
+            wall += rst.wall_s
+            rc = np.asarray(rc)
+            still = []
+            for k, j in enumerate(pending):
+                if rst.frame_overflow[k] == 0:
+                    canv[j] = rc[k]
+                    chains[j] = (rst.region_counts[k],
+                                 rst.frame_leaf_counts[k])
+                else:
+                    still.append(j)
+            pending = still
+        merged = ASKStats(
+            levels=max((len(c) for c, _ in chains), default=0),
+            kernel_launches=launches,
+            region_counts=tuple(c for c, _ in chains),
+            leaf_count=sum(leaf for _, leaf in chains),
+            overflow_dropped=0,  # the loop only exits once every frame fits
+            wall_s=wall,
+            olt_caps=cur,  # == caps when nothing retried
+            frame_overflow=(0,) * f,
+            frame_leaf_counts=tuple(leaf for _, leaf in chains),
+        )
+        return canv, merged, retries, retry_rows
+
+    def _finalize_feedback(self, item, in_flight: int) -> ChunkResult:
+        """Block on one in-flight feedback chunk: finalize, retry any
+        overflow, fold the measured counts into the estimator."""
+        i, bounds, depths, p, caps, src, d, disp_s = item
+        t0 = time.perf_counter()
+        canvases, st = d.finalize()
+        canv, merged, retries, retry_rows = self._resolve_overflow(
+            bounds, caps, canvases, st)
+        fetch_s = time.perf_counter() - t0  # retry dispatches included
+        if self.adapt:
+            self.estimator.observe_stats(depths, merged, g=self.problem.g,
+                                         r=self.problem.r)
+        return ChunkResult(canv, merged, ChunkStats(
+            index=i, frames=len(bounds), dispatch_s=disp_s,
+            fetch_s=fetch_s, in_flight=in_flight, p_subdiv=p,
+            p_source=src, retries=retries,
+            ring_rows=self._pad_width(len(bounds)) * 2 * max(caps)
+            + retry_rows))
+
+    def _stream_feedback(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
+        """The closed loop: re-plan, dispatch, retry, observe, refill."""
+        chunks = self._adaptive_chunks(iter(bounds_iter))
+        pending: collections.deque = collections.deque()
+        index = 0
+
+        def enqueue() -> bool:
+            nonlocal index
+            item = next(chunks, None)
+            if item is None:
+                return False
+            bounds, depths, p, caps, src = item
+            d, secs = self._dispatch(bounds, caps=caps)
+            pending.append((index, bounds, depths, p, caps, src, d, secs))
+            index += 1
+            return True
+
+        if self.pipeline_depth == 1:  # synchronous: at most one in flight,
+            # and the next chunk is planned AND dispatched only after the
+            # consumer returns (the uniform path's depth-1 contract) --
+            # which also means it always plans from the freshest state
+            while enqueue():
+                yield self._finalize_feedback(pending.popleft(), in_flight=1)
+            return
+
+        while len(pending) < self.pipeline_depth and enqueue():
+            pass
+        while pending:
+            in_flight = len(pending)
+            item = pending.popleft()
+            result = self._finalize_feedback(item, in_flight)
+            # refill AFTER observing (inside _finalize_feedback) and
+            # BEFORE yielding: the next chunk is planned from the
+            # freshest finalised state while the devices stay busy
+            # behind the consumer
+            enqueue()
+            yield result
 
     def stream_chunks(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
         """Yield ``ChunkResult`` per chunk, f <= chunk_frames frames each.
@@ -197,7 +486,15 @@ class RenderService:
         the queue is refilled BEFORE each yield -- so the devices compute
         chunk k+1 while the consumer of the stream is still busy with
         chunk k. Chunk order (and therefore frame order) is preserved.
+
+        With ``feedback=`` set the stream re-plans each chunk's
+        capacities from the estimator state before dispatch (see
+        ``_stream_feedback``); chunks may then be SHORTER than
+        ``chunk_frames`` where the predicted capacity class jumps.
         """
+        if self.estimator is not None:
+            yield from self._stream_feedback(bounds_iter)
+            return
         it = iter(bounds_iter)
         pending: collections.deque = collections.deque()
         index = 0
@@ -244,15 +541,29 @@ class RenderService:
             yield r.canvases, r.stats
 
     def program_traces(self) -> int | None:
-        """Traced signatures of this service's chunk program so far.
+        """Traced signatures of this service's chunk program(s) so far.
 
         Measured off the jitted pipeline in ``core.ask``'s cache (the
         exact object every chunk dispatches through), so it is a real
         regression signal: pinning ``pad_to`` to the chunk width must keep
-        this at 1 no matter how ragged the trajectory tail is.
+        this at 1 no matter how ragged the trajectory tail is. On the
+        feedback path the count is summed across the capacity signatures
+        the stream dispatched; its regression target is
+        ``RenderStats.plan_signatures`` -- each signature compiled once,
+        every chunk sharing a signature reusing that program.
         """
         from repro.core import ask as ask_lib
 
+        if self.estimator is not None:
+            total = 0
+            for caps in {sig[1] for sig in self._used_sigs}:
+                fn = ask_lib._jitted_pipeline(self.problem, caps,
+                                              batched=True, mesh=self.mesh)
+                size = getattr(fn, "_cache_size", None)
+                if not callable(size):
+                    return None
+                total += int(size())
+            return total
         caps = ask_lib._resolve_capacities(
             self.problem, self.engine_kw.get("capacities"),
             self.engine_kw.get("p_subdiv", 0.7),
@@ -296,10 +607,14 @@ class RenderService:
             rs.overflow_dropped += r.stats.overflow_dropped
             rs.dispatch_s += r.chunk.dispatch_s
             rs.fetch_s += r.chunk.fetch_s
+            rs.retries += r.chunk.retries
+            rs.ring_rows += r.chunk.ring_rows
             chunk_stats.append(r.chunk)
         rs.wall_s = time.perf_counter() - t0
         rs.chunk_stats = tuple(chunk_stats)
         rs.program_traces = self.program_traces()
+        if self.estimator is not None:
+            rs.plan_signatures = len(self._used_sigs)
         n = self.problem.n
         stacked = (np.concatenate(out, axis=0) if out
                    else np.zeros((0, n, n), np.int32))
@@ -319,6 +634,9 @@ def main(argv=None):
     ap.add_argument("--pipeline-depth", type=int,
                     default=DEFAULT_PIPELINE_DEPTH,
                     help="chunks in flight at once (1 = synchronous)")
+    ap.add_argument("--feedback", action="store_true",
+                    help="closed-loop occupancy feedback: re-plan each "
+                         "chunk's ring from measured region_counts")
     args = ap.parse_args(argv)
 
     from repro.mandelbrot import MandelbrotProblem
@@ -328,6 +646,7 @@ def main(argv=None):
     mesh = make_frames_mesh(args.devices)
     svc = RenderService(prob, mesh=mesh, chunk_frames=args.chunk,
                         pipeline_depth=args.pipeline_depth,
+                        feedback=args.feedback,
                         safety_factor=args.safety_factor)
     bounds = zoom_bounds(args.frames, zoom_per_frame=args.zoom)
 
@@ -343,6 +662,10 @@ def main(argv=None):
           f"busy={rs.busy_s * 1e3:.1f} ms  "
           f"fetch={rs.fetch_s * 1e3:.1f} ms  "
           f"overflow_dropped={rs.overflow_dropped}")
+    if args.feedback:
+        print(f"feedback: retries={rs.retries} ring_rows={rs.ring_rows} "
+              f"plan_signatures={rs.plan_signatures} "
+              f"sources={[c.p_source for c in rs.chunk_stats]}")
     return 0
 
 

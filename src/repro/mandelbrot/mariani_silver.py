@@ -179,8 +179,13 @@ def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None,
     a hotter effective P (hence a bigger ring) than wide frames, and any
     frame that still overflows is re-planned automatically. Pass an int
     (the bucket count K), True (default K), or a prebuilt
-    ``planner.CapacityPlan``. The planned path returns (canvases
-    [F, n, n] numpy, ``planner.PlanReport``) and issues one compiled
+    ``planner.CapacityPlan``. With ``observed=`` (a ``core.feedback.
+    OccupancyEstimator``) the plan blends MEASURED occupancy from
+    previous runs into the per-frame P instead of relying on the
+    zoom-depth prior alone (``planner.plan_frames``). The planned path
+    returns (canvases [F, n, n] numpy, ``planner.PlanReport``) -- whose
+    ``frame_p_subdiv`` / ``frame_p_source`` record the P that actually
+    sized each frame and where it came from -- and issues one compiled
     program per bucket instead of one overall; the uniform path returns
     (canvases [F, n, n], ASKStats).
     """

@@ -26,12 +26,12 @@ def test_all_methods_agree(backend, g, r, B):
     assert st_scan.kernel_launches == 1
 
 
-def test_dp_agrees_and_launch_counts():
+def test_dp_agrees_and_launch_counts(ask_reference):
     """ASK launches one kernel per level (+leaf); DP launches one per tree
     node -- the paper's structural claim about lambda overhead."""
     prob = MandelbrotProblem(n=128, g=2, r=2, B=16, max_dwell=32,
                              backend="jnp")
-    ask, st_ask = solve(prob, "ask")
+    ask, st_ask = ask_reference(prob)
     dp, st_dp = solve(prob, "dp")
     np.testing.assert_array_equal(np.asarray(dp), np.asarray(ask))
     levels = _num_levels(128, 2, 2, 16)
@@ -41,14 +41,14 @@ def test_dp_agrees_and_launch_counts():
     assert all(c > 0 for c in st_ask.region_counts)
 
 
-def test_dp_region_counts_match_ask():
+def test_dp_region_counts_match_ask(ask_reference):
     """Regression: run_dp must report per-level live-region counts, and
     they must equal run_ask's (the DP tree visits exactly the ASK live
     set, one node at a time)."""
     for g, r, B in ((2, 2, 16), (4, 2, 8)):
         prob = MandelbrotProblem(n=128, g=g, r=r, B=B, max_dwell=32,
                                  backend="jnp")
-        _, st_ask = solve(prob, "ask")
+        _, st_ask = ask_reference(prob)
         _, st_dp = solve(prob, "dp")
         assert st_dp.region_counts == st_ask.region_counts
         assert any(c > 0 for c in st_dp.region_counts)

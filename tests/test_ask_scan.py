@@ -17,13 +17,13 @@ from repro.mandelbrot import MandelbrotProblem, solve_batch
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 
-def test_acceptance_config_identical_and_bounded():
+def test_acceptance_config_identical_and_bounded(ask_reference):
     """The ISSUE acceptance case: n=1024 g=4 r=2 B=32 -- canvas identical
     to run_ask, ONE dispatch, and every level-l capacity (l > 1) strictly
     below run_ask_fused's worst case (g r^l)^2."""
     prob = MandelbrotProblem(n=1024, g=4, r=2, B=32, max_dwell=128,
                              backend="jnp")
-    ask, st_ask = run_ask(prob)
+    ask, st_ask = ask_reference(prob)
     scan, st_scan = run_ask_scan(prob)
     np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
     assert st_scan.kernel_launches == 1
@@ -112,13 +112,13 @@ def test_overflow_dropped_exact_when_undersized():
     np.testing.assert_array_equal(np.asarray(scan), np.asarray(ref))
 
 
-def test_hot_window_overflow_reported_and_recoverable():
+def test_hot_window_overflow_reported_and_recoverable(ask_reference):
     """A config where the constant-P default sizing runs hot (n=512 g=2
     B=32, dwell 256): the engine must REPORT the drops, and the documented
     fallback (worst-case capacities) must restore bit-exactness."""
     prob = MandelbrotProblem(n=512, g=2, r=2, B=32, max_dwell=256,
                              backend="jnp")
-    ask, _ = run_ask(prob)
+    ask, _ = ask_reference(prob)
     _, st_default = run_ask_scan(prob)
     if st_default.overflow_dropped:  # the documented contract
         scan, st = run_ask_scan(prob, safety_factor=1e9)
@@ -146,7 +146,7 @@ def test_scan_capacities_monotone_and_clamped():
     assert worst == tuple((4 * 2 ** lv) ** 2 for lv in range(len(caps)))
 
 
-def test_solve_batch_matches_single_frame():
+def test_solve_batch_matches_single_frame(ask_reference):
     """Each frame of the vmapped batch must be bit-identical to a single-
     frame run_ask at that frame's bounds, with ONE dispatch overall."""
     prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
@@ -161,9 +161,8 @@ def test_solve_batch_matches_single_frame():
     assert st.kernel_launches == 1
     assert st.overflow_dropped == 0
     for i, b in enumerate(frames):
-        single, st_single = run_ask(dataclasses.replace(prob, bounds=b))
-        np.testing.assert_array_equal(np.asarray(canvases[i]),
-                                      np.asarray(single))
+        single, st_single = ask_reference(dataclasses.replace(prob, bounds=b))
+        np.testing.assert_array_equal(np.asarray(canvases[i]), single)
         assert st.region_counts[i] == st_single.region_counts
 
 
@@ -190,13 +189,13 @@ def _frames(f):
                     ).astype(np.float32)
 
 
-def test_sharded_single_frame_padded():
+def test_sharded_single_frame_padded(exact_batch_reference):
     """F=1 padded up to 4: the three padding frames must be invisible --
     canvas, leaf count, and region counts all match the unsharded batch."""
     prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
                              backend="jnp")
     b = _frames(1)
-    ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b), safety_factor=1e9)
+    ref, st_ref = exact_batch_reference(prob, b)
     shd, st = solve_batch(prob, b, mesh=make_frames_mesh(1), pad_to=4,
                           safety_factor=1e9)
     assert shd.shape == (1, 128, 128)
@@ -207,13 +206,13 @@ def test_sharded_single_frame_padded():
     assert st.region_counts == st_ref.region_counts
 
 
-def test_sharded_padding_indivisible():
+def test_sharded_padding_indivisible(exact_batch_reference):
     """F=7 against a padding multiple of 4 (7 -> 8): every true frame
     bit-identical, padded tail sliced off."""
     prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
                              backend="jnp")
     b = _frames(7)
-    ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b), safety_factor=1e9)
+    ref, st_ref = exact_batch_reference(prob, b)
     shd, st = solve_batch(prob, b, mesh=make_frames_mesh(1), pad_to=4,
                           safety_factor=1e9)
     assert shd.shape == (7, 128, 128)
@@ -300,12 +299,12 @@ def test_resolve_capacities_properties(uniform, sf):
         _resolve_capacities(prob, list(default) + [1], 0.7, sf)
 
 
-def test_levels_zero_chain():
+def test_levels_zero_chain(ask_reference):
     """n/g <= B: no exploration levels, the scan engine is just the leaf
     kernel over the root OLT."""
     prob = MandelbrotProblem(n=64, g=2, r=2, B=64, max_dwell=16,
                              backend="jnp")
-    ask, _ = run_ask(prob)
+    ask, _ = ask_reference(prob)
     scan, st = run_ask_scan(prob)
     np.testing.assert_array_equal(np.asarray(scan), np.asarray(ask))
     assert st.kernel_launches == 1

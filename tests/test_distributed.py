@@ -130,6 +130,44 @@ def test_render_service_pipelined_sharded():
     assert "OK" in out
 
 
+def test_render_service_feedback_sharded():
+    """The closed-loop feedback path on an 8-device mesh: per-chunk
+    re-planned capacities compose with frame-axis sharding -- canvases
+    stay bit-identical to the unsharded worst-case batch, chunk 0 plans
+    from the prior, later chunks from measurement, zero drops, and
+    every dispatch width stays a multiple of the device count."""
+    out = _run("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core.ask import run_ask_scan_batch
+        from repro.launch.mesh import make_frames_mesh
+        from repro.launch.render_service import RenderService, zoom_bounds
+        from repro.mandelbrot import MandelbrotProblem
+
+        prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                                 backend="jnp")
+        mesh = make_frames_mesh()
+        assert int(mesh.devices.size) == 8
+        bounds = list(zoom_bounds(24, center=(-0.7436447860, 0.1318252536),
+                                  width0=6.0, zoom_per_frame=1.02))
+        svc = RenderService(prob, mesh=mesh, chunk_frames=8, feedback=True,
+                            safety_factor=1.1)
+        canvases, rs = svc.render(bounds)
+        assert canvases.shape == (24, 128, 128)
+        assert rs.overflow_dropped == 0
+        assert rs.chunk_stats[0].p_source == "prior"
+        assert any(c.p_source == "measured" for c in rs.chunk_stats[1:])
+        for width, caps in svc._used_sigs:
+            assert width % 8 == 0, (width, caps)
+        ref, _ = run_ask_scan_batch(
+            prob, jnp.asarray(np.asarray(bounds, np.float32)),
+            safety_factor=1e9)
+        np.testing.assert_array_equal(canvases, np.asarray(ref))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_small_mesh_dryrun_train_and_decode():
     """run_cell compiles a reduced arch on a 2x4 mesh for train + decode,
     exercising sharding rules end to end (incl. MoE/EP + MLA)."""

@@ -1,0 +1,275 @@
+"""Property and integration tests for the measured-occupancy feedback
+estimator (core/feedback.py): band containment, EWMA contraction,
+known-P recovery, cold-start prior fallback, and the stats plumbing from
+a real engine run."""
+
+import numpy as np
+import pytest
+
+from repro.core import feedback
+from repro.core.ask import run_ask_scan_batch
+from repro.core.planner import effective_p_subdiv, zoom_depth
+from repro.mandelbrot import MandelbrotProblem
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+
+def _chain_from_p(p, *, g, r, levels):
+    """Entering-count chain generated FROM a constant P: the expected
+    occupancy E_l = g^2 (r^2 p)^l rounded to ints, split into the
+    (region_counts, leaf_count) shape the engines report."""
+    chain = [round(g * g * (r * r * p) ** lv) for lv in range(levels + 1)]
+    return tuple(chain[:-1]), chain[-1]
+
+
+# ---------------------------------------------------------------------------
+# measured_p_subdiv / level_subdivision_rates
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.floats(0.1, 1.0), g=st.sampled_from([2, 4, 8]),
+       r=st.sampled_from([2, 4]), levels=st.integers(1, 5))
+def test_known_p_is_recovered(p, g, r, levels):
+    """Counts generated from a constant P recover that P within the
+    tolerance set by integer rounding of the level counts."""
+    counts, leaf = _chain_from_p(p, g=g, r=r, levels=levels)
+    if min(counts + (leaf,)) < 1:
+        return  # the chain died to rounding: no signal to recover
+    est = feedback.measured_p_subdiv(counts, leaf, g=g, r=r)
+    assert est is not None
+    # rounding a count at level l perturbs the level's P estimate by at
+    # most a factor (1 +- 1/count)^(1/l) / 1
+    tol = max(0.5 / min(counts + (leaf,)), 1e-9)
+    assert est == pytest.approx(p, rel=tol + 1e-6), (counts, leaf)
+
+
+def test_measured_p_is_the_envelope_not_the_average():
+    """A flat occupancy profile (hot mid level, cold tail) must be
+    summarised by the level that BINDS capacity, not averaged away."""
+    g, r = 4, 2
+    # level 1 entered by 56 of 64 possible children (p=0.875); leaf
+    # entered by only 90 of r^2*56 (p~0.4)
+    counts, leaf = (16, 56), 90
+    p = feedback.measured_p_subdiv(counts, leaf, g=g, r=r)
+    assert p == pytest.approx(56 / 16 / 4)  # level 1 binds
+    rates = feedback.level_subdivision_rates(counts, leaf, r=r)
+    assert rates[0] == pytest.approx(56 / 64)
+    assert rates[1] == pytest.approx(90 / (4 * 56))
+    assert p > sum(rates) / len(rates) - 0.2  # and is >= the binding rate
+
+
+def test_no_signal_returns_none():
+    assert feedback.measured_p_subdiv((), 4, g=2, r=2) is None
+    assert feedback.level_subdivision_rates((), 0, r=2) == ()
+    with pytest.raises(ValueError):
+        feedback.measured_p_subdiv((4,), 4, g=2, r=1)
+
+
+# ---------------------------------------------------------------------------
+# ewma
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(old=st.floats(0.0, 1.0), new=st.floats(0.0, 1.0),
+       alpha=st.floats(0.05, 1.0))
+def test_ewma_is_a_contraction(old, new, alpha):
+    """|ewma(old, new, a) - new| == (1 - a) |old - new|: every step
+    shrinks the distance to the newest observation by the same factor."""
+    out = feedback.ewma(old, new, alpha)
+    assert abs(out - new) == pytest.approx((1 - alpha) * abs(old - new))
+    lo, hi = min(old, new), max(old, new)
+    assert lo - 1e-12 <= out <= hi + 1e-12  # never overshoots
+    assert feedback.ewma(None, new, alpha) == new  # seeds at the value
+
+
+def test_ewma_validates_alpha():
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            feedback.ewma(0.5, 0.5, bad)
+
+
+# ---------------------------------------------------------------------------
+# OccupancyEstimator
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(depths=st.lists(st.floats(-6.0, 6.0), min_size=0, max_size=8),
+       ps=st.lists(st.floats(-0.5, 1.5), min_size=8, max_size=8),
+       query=st.floats(-8.0, 8.0))
+def test_estimator_output_always_in_band(depths, ps, query):
+    """predict / predict_quantized always land in [p_min, p_deep], no
+    matter how wild the raw observations are."""
+    est = feedback.OccupancyEstimator()
+    for d, p in zip(depths, ps):
+        est.observe_value(d, p)
+    for value in (est.predict(query), est.predict_quantized(query)):
+        assert est.p_min - 1e-12 <= value <= est.p_deep + 1e-12
+    m = est.measured(query)
+    if m is not None:
+        assert est.p_min <= m <= est.p_deep  # observations clamp on entry
+
+
+def test_cold_estimator_predicts_the_prior_exactly():
+    est = feedback.OccupancyEstimator()
+    assert est.is_cold
+    for d in (-5.0, -1.3, 0.0, 2.0, 7.5):
+        assert est.predict(d) == effective_p_subdiv(d)
+        assert est.measured(d) is None
+
+
+def test_observation_beyond_max_extrapolate_falls_back_to_prior():
+    est = feedback.OccupancyEstimator(max_extrapolate=2.0)
+    est.observe_value(0.0, 0.5)
+    assert est.measured(1.9) is not None
+    assert est.measured(2.6) is None
+    assert est.predict(2.6) == effective_p_subdiv(2.6)
+
+
+def test_prediction_shifts_by_the_prior_trend():
+    """Extrapolating a measurement to a deeper depth adds the prior's
+    slope between the two depths -- a zooming trajectory is not
+    systematically under-predicted from its shallower observations."""
+    est = feedback.OccupancyEstimator(slope=0.18)
+    est.observe_value(-3.0, 0.5)
+    away = est.predict(-2.0)  # one level deeper than the observation
+    assert away == pytest.approx(0.5 + 0.18, abs=1e-9)
+    assert est.predict(-3.0) == pytest.approx(0.5)
+
+
+def test_chunk_observation_takes_the_bucket_max():
+    """Within one chunk, frames sharing a depth bucket reduce by MAX
+    before the EWMA: capacity is an envelope problem."""
+    g, r, levels = 4, 2, 3
+    est = feedback.OccupancyEstimator(alpha=0.5)
+    chains = [_chain_from_p(p, g=g, r=r, levels=levels)
+              for p in (0.4, 0.8, 0.6)]
+    est.observe_frames([0.0, 0.1, -0.1], chains, g=g, r=r)
+    seeded = est.measured(0.0)
+    assert seeded == pytest.approx(
+        feedback.measured_p_subdiv(*chains[1], g=g, r=r), abs=0.02)
+    assert est.chunks_observed == 1 and est.frames_observed == 3
+    # the NEXT chunk EWMA-smooths against that seed
+    est.observe_frames([0.0], [_chain_from_p(0.4, g=g, r=r, levels=levels)],
+                       g=g, r=r)
+    stepped = est.measured(0.0)
+    assert stepped == pytest.approx(
+        0.5 * seeded + 0.5 * feedback.measured_p_subdiv(
+            *_chain_from_p(0.4, g=g, r=r, levels=levels), g=g, r=r),
+        abs=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.floats(0.35, 0.95))
+def test_repeated_observation_converges_to_the_measurement(p):
+    """Feeding the estimator counts generated FROM a known P converges
+    its prediction to that P (recovery property, estimator level)."""
+    g, r, levels = 8, 2, 4
+    est = feedback.OccupancyEstimator(alpha=0.5)
+    chain = _chain_from_p(p, g=g, r=r, levels=levels)
+    target = feedback.measured_p_subdiv(*chain, g=g, r=r)
+    for _ in range(8):
+        est.observe_frames([0.0], [chain], g=g, r=r)
+    assert est.predict(0.0) == pytest.approx(min(target, est.p_deep),
+                                             abs=1e-2)
+    # and the measurement-level recovery: target ~ p up to count rounding
+    assert target == pytest.approx(p, abs=0.05)
+
+
+def test_quantized_prediction_rounds_up_on_grid():
+    est = feedback.OccupancyEstimator(p_quantum=0.05)
+    est.observe_value(0.0, 0.52)
+    assert est.predict_quantized(0.0) == pytest.approx(0.55)
+    est2 = feedback.OccupancyEstimator(p_quantum=0.05)
+    est2.observe_value(0.0, 0.9501)
+    assert est2.predict_quantized(0.0) == pytest.approx(est2.p_deep)
+    # grid values are fixed points
+    est3 = feedback.OccupancyEstimator(p_quantum=0.05)
+    est3.observe_value(0.0, 0.6)
+    assert est3.predict_quantized(0.0) == pytest.approx(0.6)
+
+
+def test_estimator_validation():
+    with pytest.raises(ValueError):
+        feedback.OccupancyEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        feedback.OccupancyEstimator(p_quantum=0.0)
+    with pytest.raises(ValueError):
+        feedback.OccupancyEstimator(p_min=0.8, p_deep=0.5)
+    est = feedback.OccupancyEstimator()
+    with pytest.raises(ValueError):
+        est.observe_frames([0.0], [], g=4, r=2)
+
+
+# ---------------------------------------------------------------------------
+# stats plumbing: a real engine run feeds the estimator
+# ---------------------------------------------------------------------------
+
+def test_observe_stats_from_real_run():
+    """End to end: render a batch, observe its ASKStats, and check the
+    estimator's measurement matches recomputing the envelope by hand
+    from the per-frame chains."""
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    bounds = np.asarray([(-1.5, -1.0, 0.5, 1.0),
+                         (-8.0, -8.0, 8.0, 8.0)], np.float32)
+    _, stats = run_ask_scan_batch(prob, bounds, safety_factor=1e9)
+    chains = stats.frame_chains()
+    assert len(chains) == 2
+    assert chains[0] == (stats.region_counts[0], stats.frame_leaf_counts[0])
+
+    ref_w = prob.bounds[2] - prob.bounds[0]
+    depths = [zoom_depth(float(b[2] - b[0]), ref_width=ref_w, r=prob.r)
+              for b in bounds]
+    est = feedback.OccupancyEstimator()
+    est.observe_stats(depths, stats, g=prob.g, r=prob.r)
+    assert not est.is_cold and est.frames_observed == 2
+    for d, chain in zip(depths, chains):
+        by_hand = feedback.measured_p_subdiv(*chain, g=prob.g, r=prob.r)
+        clamped = min(max(by_hand, est.p_min), est.p_deep)
+        assert est.measured(d) == pytest.approx(clamped)
+
+
+def test_observe_report_closes_the_batch_loop():
+    """The planned-batch feedback hook: a PlanReport built by
+    plan_frames carries per-frame depths + final chains, so
+    observe_report alone warms the estimator -- and a report from a
+    hand-made plan (no estimates) refuses instead of mis-attributing
+    depths."""
+    from repro.core import planner
+    from repro.mandelbrot import solve_batch
+
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    bounds = [(-1.5, -1.0, 0.5, 1.0), (-5.0, -4.0, 3.0, 4.0)]
+    est = feedback.OccupancyEstimator()
+    _, rep = solve_batch(prob, bounds, plan=2, observed=est)
+    est.observe_report(rep, g=prob.g, r=prob.r)
+    assert est.chunks_observed == 1 and not est.is_cold
+    # snapshot keys are bucket-centre depths of the two frames
+    snap = est.snapshot()
+    depths = [e.depth for e in rep.plan.estimates]
+    for d in depths:
+        b = round(d / est.depth_quantum) * est.depth_quantum
+        assert b in snap and est.p_min <= snap[b] <= est.p_deep
+    # second batch over the same windows now plans from measurement
+    _, rep2 = solve_batch(prob, bounds, plan=2, observed=est)
+    assert set(rep2.frame_p_source) == {"measured"}
+
+    handmade = planner.CapacityPlan(
+        buckets=(planner.BucketPlan(
+            frames=(0, 1), p_subdiv=0.9,
+            capacities=planner.worst_case_capacities(prob)),),
+        estimates=(), safety_factor=1.0)
+    _, rep3 = planner.solve_planned(prob, np.asarray(bounds, np.float32),
+                                    plan=handmade)
+    with pytest.raises(ValueError, match="estimates"):
+        est.observe_report(rep3, g=prob.g, r=prob.r)
+
+
+def test_single_frame_stats_chain():
+    from repro.core.ask import run_ask_scan
+
+    prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                             backend="jnp")
+    _, st_one = run_ask_scan(prob, safety_factor=1e9)
+    (chain,) = st_one.frame_chains()
+    assert chain == (st_one.region_counts, st_one.leaf_count)

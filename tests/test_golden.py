@@ -1,0 +1,157 @@
+"""Golden-image regression tests: every engine renders the paper's
+Mandelbrot viewport bit-identically to ONE checked-in reference canvas.
+
+The reference (``tests/golden/mandelbrot_256.pgm``) is a raw (P5) PGM of
+the dwell canvas itself -- maxval equals ``max_dwell`` and every stored
+byte IS a dwell value, so decoding is exact and "bit-identical" means
+the int32 canvas, not a rescaled rendering. The adaptive machinery
+(capacity planner, overflow retry, measured-occupancy feedback) resizes
+rings and reshuffles dispatches but may NEVER change pixels; these tests
+are the tripwire.
+
+Regenerate after an intentional change to the canonical config with::
+
+    PYTHONPATH=src python tests/test_golden.py
+
+which writes the reference from the paper-faithful serial engine
+(``run_ask``) and prints its checksum. The diff then shows up in review
+as a binary-file change -- silent drift cannot.
+"""
+
+import sys
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+GOLDEN = Path(__file__).resolve().parent / "golden" / "mandelbrot_256.pgm"
+
+# the canonical config: the paper's benchmark viewport (DEFAULT_BOUNDS,
+# the full upper-half view of the set) at the checked-in reference size
+N = 256
+MAX_DWELL = 128
+
+
+def _problem():
+    from repro.mandelbrot import MandelbrotProblem
+
+    return MandelbrotProblem(n=N, g=4, r=2, B=16, max_dwell=MAX_DWELL,
+                             backend="jnp")
+
+
+def read_golden() -> np.ndarray:
+    """Decode the checked-in reference into the int32 dwell canvas."""
+    raw = GOLDEN.read_bytes()
+    header, pixels = raw.split(b"\n", 1)
+    magic, w, h, maxval = header.split()
+    assert magic == b"P5" and int(maxval) == MAX_DWELL, header
+    img = np.frombuffer(pixels, dtype=np.uint8).reshape(int(h), int(w))
+    return img.astype(np.int32)
+
+
+def write_golden() -> np.ndarray:
+    """Render the reference with the paper-faithful engine and write it."""
+    from repro.core.ask import run_ask
+
+    canvas, stats = run_ask(_problem())
+    img = np.asarray(canvas)
+    assert img.max() <= MAX_DWELL <= 255  # bytes store dwells exactly
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    with open(GOLDEN, "wb") as f:
+        f.write(f"P5 {img.shape[1]} {img.shape[0]} {MAX_DWELL}\n".encode())
+        f.write(img.astype(np.uint8).tobytes())
+    return img
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert GOLDEN.exists(), (
+        f"{GOLDEN} missing -- regenerate with "
+        "`PYTHONPATH=src python tests/test_golden.py`")
+    return read_golden()
+
+
+def test_golden_file_is_self_consistent(golden):
+    assert golden.shape == (N, N)
+    assert golden.dtype == np.int32
+    assert 0 < golden.max() <= MAX_DWELL
+    # interior pixels hit the dwell cap in this viewport
+    assert (golden == MAX_DWELL).any()
+
+
+def _assert_matches(canvas, golden, engine):
+    canvas = np.asarray(canvas)
+    if not np.array_equal(canvas, golden):
+        diff = int(np.count_nonzero(canvas != golden))
+        pytest.fail(f"{engine}: {diff} pixels differ from the golden "
+                    f"reference (crc {zlib.crc32(canvas.tobytes()):#x} vs "
+                    f"{zlib.crc32(golden.tobytes()):#x})")
+
+
+def test_exhaustive_matches_golden(golden):
+    from repro.mandelbrot import solve
+
+    canvas, _ = solve(_problem(), "ex")
+    _assert_matches(canvas, golden, "exhaustive")
+
+
+def test_dp_emul_matches_golden(golden):
+    from repro.mandelbrot import solve
+
+    canvas, st = solve(_problem(), "dp")
+    _assert_matches(canvas, golden, "dp")
+    assert st.kernel_launches > 1  # really the per-node DP driver
+
+
+def test_ask_matches_golden(golden):
+    from repro.mandelbrot import solve
+
+    canvas, _ = solve(_problem(), "ask")
+    _assert_matches(canvas, golden, "ask")
+
+
+def test_ask_scan_matches_golden(golden):
+    from repro.mandelbrot import solve
+
+    canvas, st = solve(_problem(), "ask_scan", safety_factor=1e9)
+    _assert_matches(canvas, golden, "ask_scan")
+    assert st.overflow_dropped == 0 and st.kernel_launches == 1
+
+
+def test_planned_matches_golden(golden):
+    """The capacity-planned batch path: planning may resize rings and
+    retry, never change pixels."""
+    from repro.mandelbrot import solve_batch
+
+    prob = _problem()
+    canvases, rep = solve_batch(prob, [prob.bounds], plan=2)
+    assert rep.overflow_dropped == 0
+    _assert_matches(canvases[0], golden, "planned")
+
+
+def test_feedback_matches_golden(golden):
+    """The closed-loop feedback path: chunk 0 plans from the prior,
+    chunk 1 from chunk 0's measured region_counts -- BOTH must render
+    the viewport bit-identically to the reference."""
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService
+
+    prob = _problem()
+    svc = RenderService(prob, mesh=make_frames_mesh(1), chunk_frames=2,
+                        pipeline_depth=1, feedback=True, safety_factor=1.1)
+    canvases, rs = svc.render([prob.bounds] * 4)
+    assert rs.chunks >= 2  # the measured re-plan really ran
+    assert {c.p_source for c in rs.chunk_stats[1:]} == {"measured"}
+    assert rs.overflow_dropped == 0
+    for i in range(4):
+        _assert_matches(canvases[i], golden, f"feedback[frame {i}]")
+
+
+if __name__ == "__main__":
+    # bare-python regeneration: repro is imported lazily inside the
+    # helpers, so inserting src/ here is sufficient without PYTHONPATH
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    img = write_golden()
+    print(f"wrote {GOLDEN} (crc {zlib.crc32(img.tobytes()):#x}, "
+          f"max dwell {int(img.max())})")

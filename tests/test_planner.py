@@ -1,14 +1,17 @@
 """Tests for the occupancy-aware capacity planner (core/planner.py):
-zoom-depth -> effective-P model, DP bucketing, bucketed execution, and
-the overflow-adaptive retry path."""
+zoom-depth -> effective-P model, DP bucketing, bucketed execution, the
+overflow-adaptive retry path, and the measured-occupancy blend
+(plan_frames(..., observed=...))."""
 
 import numpy as np
 import pytest
 
 from repro.core import planner
 from repro.core.ask import run_ask_scan, run_ask_scan_batch, scan_capacities
+from repro.core.feedback import OccupancyEstimator
 from repro.launch.mesh import make_frames_mesh
 from repro.mandelbrot import MandelbrotProblem, solve_batch
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 
 def _window(cx, cy, w):
@@ -147,12 +150,12 @@ def test_solve_planned_single_frame_bit_identical():
     assert rep.frames == 1
 
 
-def test_solve_planned_identical_frames_one_dispatch():
+def test_solve_planned_identical_frames_one_dispatch(exact_batch_reference):
     """Identical-occupancy batch: the planner must not split it -- one
     bucket, ONE dispatch, bit-identical to the unplanned batch."""
     prob = _prob()
     bounds = [_window(-0.5, 0.0, 2.0)] * 5
-    ref, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    ref, _ = exact_batch_reference(prob, bounds)
     canv, rep = solve_batch(prob, bounds, plan=3)
     assert rep.dispatches == 1
     assert rep.retries == 0
@@ -160,14 +163,14 @@ def test_solve_planned_identical_frames_one_dispatch():
     np.testing.assert_array_equal(canv, np.asarray(ref))
 
 
-def test_forced_overflow_recovers_via_retry():
+def test_forced_overflow_recovers_via_retry(exact_batch_reference):
     """A hand-built plan whose capacities are deliberately too small: the
     retry path must escalate (doubling toward the worst case), converge
     with zero drops, and produce the bit-exact canvases -- no manual
     safety_factor tuning."""
     prob = _prob()
     bounds = [(-1.6 + 0.03 * i, -1.1, 0.55, 1.05) for i in range(5)]
-    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    exact, _ = exact_batch_reference(prob, bounds)
     levels = len(scan_capacities(128, 4, 2, 16)) - 1
     tiny = planner.CapacityPlan(
         buckets=(planner.BucketPlan(frames=tuple(range(5)), p_subdiv=0.1,
@@ -182,13 +185,13 @@ def test_forced_overflow_recovers_via_retry():
     np.testing.assert_array_equal(canv, np.asarray(exact))
 
 
-def test_retry_promotes_into_next_bucket():
+def test_retry_promotes_into_next_bucket(exact_batch_reference):
     """When a larger bucket exists, an overflowing frame is re-planned
     into IT (not escalated ad hoc): the failing frame's successful run
     uses exactly the next bucket's capacities."""
     prob = _prob()
     bounds = [(-1.6, -1.1, 0.55, 1.05), (-1.55, -1.1, 0.55, 1.05)]
-    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    exact, _ = exact_batch_reference(prob, bounds)
     levels = len(scan_capacities(128, 4, 2, 16)) - 1
     worst = planner.worst_case_capacities(prob)
     two = planner.CapacityPlan(
@@ -208,7 +211,7 @@ def test_retry_promotes_into_next_bucket():
     np.testing.assert_array_equal(canv, np.asarray(exact))
 
 
-def test_heterogeneous_batch_less_ring_than_uniform():
+def test_heterogeneous_batch_less_ring_than_uniform(exact_batch_reference):
     """The ISSUE acceptance property at test scale: wide + deep mix,
     planner converges with overflow_dropped == 0 using strictly less
     total ring memory than uniform safety_factor=2.0 sizing."""
@@ -222,7 +225,7 @@ def test_heterogeneous_batch_less_ring_than_uniform():
     uniform_caps = scan_capacities(512, 4, 2, 16, safety_factor=2.0)
     uniform_rows = len(bounds) * 2 * max(uniform_caps)
     assert rep.ring_rows < uniform_rows, (rep.ring_rows, uniform_rows)
-    exact, _ = solve_batch(prob, bounds, safety_factor=1e9)
+    exact, _ = exact_batch_reference(prob, bounds)
     np.testing.assert_array_equal(canv, np.asarray(exact))
 
 
@@ -273,6 +276,132 @@ def test_plan_path_rejects_conflicting_kwargs():
     # the legitimate combinations still work
     canv, rep = solve_batch(prob, bounds, plan=2, ref_width=8.0)
     assert rep.overflow_dropped == 0 and canv.shape == (2, 128, 128)
+
+
+# ---------------------------------------------------------------------------
+# measured-occupancy blend (plan_frames(..., observed=...))
+# ---------------------------------------------------------------------------
+
+_BLEND_BOUNDS = [_window(-0.5, 0.0, w) for w in (16.0, 8.0, 4.0, 2.0, 1.0)]
+
+
+def test_plan_frames_cold_estimator_reproduces_prior_plan():
+    """The cold-start contract: an estimator with no observations (and
+    observed=None) both reproduce plan_capacities bucket for bucket."""
+    prob = _prob()
+    base = planner.plan_capacities(prob, _BLEND_BOUNDS, num_buckets=3)
+    for observed in (None, OccupancyEstimator()):
+        plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=observed,
+                                   num_buckets=3)
+        assert [b.capacities for b in plan.buckets] == \
+            [b.capacities for b in base.buckets]
+        assert [b.frames for b in plan.buckets] == \
+            [b.frames for b in base.buckets]
+    cold = planner.plan_frames(prob, _BLEND_BOUNDS,
+                               observed=OccupancyEstimator(), num_buckets=3)
+    assert all(fp.source == "prior" for fp in cold.frame_plans)
+    assert [fp.p_subdiv for fp in cold.frame_plans] == \
+        [e.p_subdiv for e in base.estimates]
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_observed_blend_ring_monotone_in_measured_density(data):
+    """The ISSUE property: more measured density => never fewer ring
+    rows. Two estimators whose observations are elementwise ordered
+    produce plans whose total ring footprint is ordered the same way."""
+    prob = _prob()
+    lo_est, hi_est = OccupancyEstimator(), OccupancyEstimator()
+    depths = [planner.zoom_depth(w, ref_width=2.0, r=2)
+              for w in (16.0, 8.0, 4.0, 2.0, 1.0)]
+    for d in depths:
+        lo = data.draw(st.floats(0.05, 1.0))
+        hi = min(1.0, lo + data.draw(st.floats(0.0, 0.5)))
+        lo_est.observe_value(d, lo)
+        hi_est.observe_value(d, hi)
+    k = data.draw(st.integers(1, 4))
+    lo_plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=lo_est,
+                                  num_buckets=k)
+    hi_plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=hi_est,
+                                  num_buckets=k)
+    assert hi_plan.ring_rows >= lo_plan.ring_rows
+    for lo_fp, hi_fp in zip(lo_plan.frame_plans, hi_plan.frame_plans):
+        assert hi_fp.p_subdiv >= lo_fp.p_subdiv - 1e-12
+
+
+def test_plan_frames_provenance_and_conflicts():
+    """frame_plans records prior vs measured per frame; estimator-band
+    kwargs alongside observed= fail loudly."""
+    prob = _prob()
+    est = OccupancyEstimator()
+    # observe only the deepest frame's depth (width 1.0 => depth 1.0),
+    # beyond max_extrapolate of the wide frames
+    est.observe_value(1.0, 0.5)
+    est.max_extrapolate = 0.75
+    plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=est,
+                               num_buckets=3)
+    sources = [fp.source for fp in plan.frame_plans]
+    assert sources == ["prior", "prior", "prior", "prior", "measured"]
+    measured = [fp for fp in plan.frame_plans if fp.source == "measured"]
+    assert all(fp.p_measured == pytest.approx(0.5) for fp in measured)
+    assert all(fp.p_prior == pytest.approx(0.97) for fp in measured)
+    with pytest.raises(ValueError, match="estimator's own band"):
+        planner.plan_frames(prob, _BLEND_BOUNDS, observed=est, p_deep=0.9)
+    with pytest.raises(ValueError, match="quantize"):
+        planner.plan_frames(prob, _BLEND_BOUNDS, quantize=True)  # no observer
+
+
+def test_plan_frames_quantize_bounds_signatures():
+    """quantize=True snaps planning Ps onto the estimator's grid (never
+    below the raw prediction until the p_deep cap)."""
+    prob = _prob()
+    est = OccupancyEstimator(p_quantum=0.1)
+    for d, p in ((0.0, 0.512), (-2.0, 0.43)):
+        est.observe_value(d, p)
+    plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=est,
+                               num_buckets=4, quantize=True)
+    for fp in plan.frame_plans:
+        raw = est.predict(fp.depth)
+        assert fp.p_subdiv == pytest.approx(min(est.p_deep,
+                                                np.ceil(raw / 0.1 - 1e-12) * 0.1))
+
+
+def test_report_frame_p_tracks_retry_promotion():
+    """PlanReport.frame_p_subdiv reflects the bucket each frame actually
+    converged in: a promoted frame reports the BIGGER bucket's P."""
+    prob = _prob()
+    bounds = [(-1.6, -1.1, 0.55, 1.05), (-1.55, -1.1, 0.55, 1.05)]
+    levels = len(scan_capacities(128, 4, 2, 16)) - 1
+    worst = planner.worst_case_capacities(prob)
+    two = planner.CapacityPlan(
+        buckets=(planner.BucketPlan(frames=(0, 1), p_subdiv=0.1,
+                                    capacities=(16,) + (8,) * levels),
+                 planner.BucketPlan(frames=(), p_subdiv=1.0,
+                                    capacities=worst)),
+        estimates=(), safety_factor=1.0)
+    _, rep = planner.solve_planned(prob, np.asarray(bounds, np.float32),
+                                   plan=two)
+    assert rep.retried_frames == (0, 1)
+    assert rep.frame_p_subdiv == (1.0, 1.0)  # converged in the big bucket
+    assert rep.frame_p_source == ("prior", "prior")  # hand plan: no blend
+    assert len(rep.frame_leaf_counts) == 2
+    assert sum(rep.frame_leaf_counts) == rep.leaf_count
+
+
+def test_report_frame_p_matches_plan_without_retries(exact_batch_reference):
+    prob = _prob()
+    est = OccupancyEstimator()
+    est.observe_value(0.0, 0.9)
+    canv, rep = solve_batch(prob, _BLEND_BOUNDS, plan=3, observed=est)
+    assert rep.overflow_dropped == 0
+    assert len(rep.frame_p_subdiv) == len(_BLEND_BOUNDS)
+    plan = rep.plan
+    if not rep.retries:
+        for fi, p in enumerate(rep.frame_p_subdiv):
+            assert p == plan.buckets[plan.bucket_of(fi)].p_subdiv
+    assert set(rep.frame_p_source) <= {"prior", "measured"}
+    exact, _ = exact_batch_reference(prob, _BLEND_BOUNDS)
+    np.testing.assert_array_equal(canv, np.asarray(exact))
 
 
 def test_frame_overflow_stats_plumbing():

@@ -1,6 +1,7 @@
 """Tests for the async double-buffered render service: bit-identity of
-the pipelined stream, the bounded in-flight queue, per-chunk stats, and
-the measured compute / host-I/O overlap."""
+the pipelined stream, the bounded in-flight queue, per-chunk stats, the
+measured compute / host-I/O overlap, and the closed-loop occupancy
+feedback path (planner-aware chunking)."""
 
 import time
 
@@ -9,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.ask import run_ask_scan_batch
+from repro.core.feedback import OccupancyEstimator
 from repro.launch.mesh import make_frames_mesh
 from repro.launch.render_service import (DEFAULT_PIPELINE_DEPTH,
                                          RenderService, zoom_bounds)
@@ -146,3 +148,140 @@ def test_pipeline_overlaps_io_latency():
         f"no overlap: sync busy {sync_rs.busy_s:.3f}s, "
         f"pipelined wall {pipe_rs.wall_s:.3f}s, saved {saved:.3f}s, "
         f"per-chunk ceiling {per_chunk:.3f}s")
+
+
+# ---------------------------------------------------------------------------
+# closed-loop occupancy feedback (planner-aware chunking)
+# ---------------------------------------------------------------------------
+# A boundary-skimming zoom: the window hugs the seahorse-valley boundary
+# while still zoomed OUT, so the real subdivision density runs HOTTER
+# than the zoom-depth prior -- the regime the feedback loop exists for.
+_SKIM_CENTER = (-0.7436447860, 0.1318252536)
+
+
+def _skim_bounds(frames=32):
+    return zoom_bounds(frames, center=_SKIM_CENTER, width0=6.0,
+                       zoom_per_frame=1.02)
+
+
+def _fb_svc(prob, **kw):
+    kw.setdefault("mesh", make_frames_mesh(1))
+    kw.setdefault("chunk_frames", 4)
+    kw.setdefault("feedback", True)
+    kw.setdefault("safety_factor", 1.1)
+    return RenderService(prob, **kw)
+
+
+def test_feedback_acceptance_on_boundary_skimming_trajectory():
+    """The ISSUE acceptance property at test scale: on a boundary-
+    skimming zoom the feedback-driven plan reaches overflow_dropped == 0
+    with FEWER total ring rows and FEWER retry dispatches than the
+    zoom-depth-prior plan, chunk 0 (cold start) reproduces the prior
+    plan exactly, and every canvas stays bit-identical."""
+    prob = _prob(dwell=40)  # dwell unique to this module's feedback tests
+    ref, _ = _svc(prob).render(_skim_bounds())
+
+    runs = {}
+    for adapt in (False, True):
+        svc = _fb_svc(prob, adapt=adapt)
+        canv, rs = svc.render(_skim_bounds())
+        np.testing.assert_array_equal(canv, ref)
+        assert rs.overflow_dropped == 0
+        assert rs.frames == 32
+        runs[adapt] = rs
+
+    prior, fb = runs[False], runs[True]
+    assert fb.retries < prior.retries, (fb.retries, prior.retries)
+    assert fb.ring_rows < prior.ring_rows, (fb.ring_rows, prior.ring_rows)
+    assert fb.dispatches < prior.dispatches
+    # chunk 0 is cold on both sides: same planning P, same prior source
+    assert fb.chunk_stats[0].p_subdiv == prior.chunk_stats[0].p_subdiv
+    assert fb.chunk_stats[0].p_source == prior.chunk_stats[0].p_source == "prior"
+    # ... and the later chunks really switched to the measured signal
+    assert any(c.p_source == "measured" for c in fb.chunk_stats)
+    assert all(c.p_source == "prior" for c in prior.chunk_stats)
+
+
+def test_feedback_pipelined_matches_sync_and_bounds_queue():
+    """The closed loop composes with async double buffering: same
+    canvases at depth 1 and 3, in-flight never exceeds the depth, and
+    the estimator still converges (later chunks plan from measurement).
+    """
+    prob = _prob(dwell=44)
+    results = {}
+    for depth in (1, 3):
+        svc = _fb_svc(prob, pipeline_depth=depth)
+        chunks = list(svc.stream_chunks(_skim_bounds(24)))
+        assert max(c.chunk.in_flight for c in chunks) <= depth
+        results[depth] = (np.concatenate([np.asarray(c.canvases)
+                                          for c in chunks]), chunks)
+    sync_c, sync_chunks = results[1]
+    pipe_c, pipe_chunks = results[3]
+    np.testing.assert_array_equal(pipe_c, sync_c)
+    for chunks in (sync_chunks, pipe_chunks):
+        assert sum(c.chunk.frames for c in chunks) == 24
+        assert any(c.chunk.p_source == "measured" for c in chunks)
+        assert all(c.stats.overflow_dropped == 0 for c in chunks)
+
+
+def test_feedback_splits_chunk_on_capacity_class_jump():
+    """Boundary-aware chunking: a stream whose density jumps mid-chunk
+    is cut at the jump -- the cold prefix keeps its small ring and the
+    deep tail gets its own hotter program -- and the compiled-program
+    count stays pinned to the (width, signature) pairs actually used."""
+    prob = _prob(dwell=52)  # dedicated config: clean trace counting
+    wide = (-0.5 - 8.0, 0.0 - 8.0, -0.5 + 8.0, 0.0 + 8.0)  # sparse
+    deep = (_SKIM_CENTER[0] - 0.005, _SKIM_CENTER[1] - 0.005,
+            _SKIM_CENTER[0] + 0.005, _SKIM_CENTER[1] + 0.005)  # saturated
+    bounds = [wide] * 3 + [deep] * 5
+    svc = _fb_svc(prob, adapt=False)  # prior-driven classes: deterministic
+    chunks = list(svc.stream_chunks(bounds))
+    # [wide x3] cut early at the class jump, then [deep x4], [deep x1]
+    assert [c.chunk.frames for c in chunks] == [3, 4, 1]
+    ps = [c.chunk.p_subdiv for c in chunks]
+    assert ps[0] < ps[1] and ps[1] == ps[2]
+    rs_sigs = {(svc._pad_width(c.chunk.frames)) for c in chunks}
+    assert rs_sigs <= {1, 2, 4}  # power-of-two width bucketing
+    assert svc.program_traces() == len(svc._used_sigs)
+    # bit-identity against the uniform worst-case service
+    ref, _ = _svc(prob).render(bounds)
+    got = np.concatenate([np.asarray(c.canvases) for c in chunks])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_feedback_retry_converges_with_zero_drops():
+    """A deliberately hostile safety factor: chunks overflow, the
+    in-service retry doubles capacities until every frame fits, and the
+    yielded chunks still report overflow_dropped == 0 bit-identically."""
+    prob = _prob(dwell=60)
+    svc = _fb_svc(prob, safety_factor=0.4)
+    canv, rs = svc.render(_skim_bounds(8))
+    assert rs.overflow_dropped == 0
+    assert rs.retries > 0
+    assert rs.dispatches > rs.chunks  # the retries really dispatched
+    ref, _ = _svc(prob).render(_skim_bounds(8))
+    np.testing.assert_array_equal(canv, ref)
+
+
+def test_feedback_estimator_state_carries_across_renders():
+    """The estimator is service state: a second trajectory over the same
+    depths plans from measurement starting at chunk 0 -- the cold-start
+    retry tax is paid once per estimator, not once per render call."""
+    prob = _prob(dwell=36)
+    est = OccupancyEstimator()
+    svc = _fb_svc(prob, feedback=est)
+    _, rs1 = svc.render(_skim_bounds(8))
+    assert rs1.chunk_stats[0].p_source == "prior"
+    _, rs2 = svc.render(_skim_bounds(8))
+    assert rs2.chunk_stats[0].p_source == "measured"
+    assert est.chunks_observed == rs1.chunks + rs2.chunks
+
+
+def test_feedback_rejects_conflicting_engine_kwargs():
+    prob = _prob()
+    with pytest.raises(ValueError, match="feedback"):
+        _fb_svc(prob, capacities=(8, 8, 8))
+    with pytest.raises(ValueError, match="feedback"):
+        _fb_svc(prob, p_subdiv=0.8)
+    with pytest.raises(ValueError, match="feedback"):
+        _svc(prob, adapt=False)  # prior-only baseline needs feedback= set
