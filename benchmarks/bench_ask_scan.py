@@ -391,6 +391,78 @@ def feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4,
            sum(1 for c in fb.chunk_stats if c.p_source == "measured"))
 
 
+def workload_serving(writer, n=256, dwell=64, frames=24, chunk=4,
+                     zoom=1.05, safety_factor=1.15):
+    """Beyond-Mandelbrot scenario rows: the planned batch path and the
+    prior/feedback serving loop on a julia zoom and a burning-ship zoom
+    (each toward a boundary target of its own set), so the BENCH
+    trajectories cover more than one workload.
+
+    Per workload, rows record: the planned heterogeneous batch
+    (buckets/dispatches/ring rows/0 drops, bit-identical to the exact
+    batch) and the closed-loop serving comparison (prior-only vs
+    feedback ring rows and retries -- both 0-drop, feedback planning
+    from each workload's OWN measured occupancy). The priors come from
+    the per-workload bands on the ``WorkloadSpec``, not the Mandelbrot
+    constants.
+    """
+    from repro.core.planner import ROW_BYTES
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService, zoom_bounds
+    from repro.workloads import FrameProblem
+
+    # (workload, zoom target on its boundary, starting width)
+    targets = (("julia", (0.0, 0.0), 3.2),
+               ("burning_ship", (-1.7548, -0.0281), 4.0))
+    mesh = make_frames_mesh(1)
+    for wl, center, width0 in targets:
+        prob = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                            backend="jnp", workload=wl)
+        case = f"wl={wl} n={n} f={frames}"
+
+        def traj():
+            return zoom_bounds(frames, center=center, width0=width0,
+                               zoom_per_frame=zoom)
+
+        # planned batch: wide establishing shots + the deep tail, one
+        # compiled program per capacity bucket, each frame's P from the
+        # workload's own zoom-depth prior
+        batch = list(zoom_bounds(8, center=center, width0=width0 * 8,
+                                 zoom_per_frame=2.0))
+        canv, rep = solve_batch(prob, batch, plan=3)
+        exact, _ = solve_batch(prob, batch, safety_factor=1e9)
+        writer("ask_scan_wl_planned_buckets", case, len(rep.plan.buckets))
+        writer("ask_scan_wl_planned_dispatches", case, rep.dispatches)
+        writer("ask_scan_wl_planned_overflow", case, rep.overflow_dropped)
+        writer("ask_scan_wl_planned_ring_rows", case, rep.ring_rows)
+        writer("ask_scan_wl_planned_identical", case,
+               int(np.array_equal(canv, np.asarray(exact))))
+
+        # closed-loop serving: prior-only baseline vs feedback
+        ref, _ = RenderService(prob, mesh=mesh, chunk_frames=chunk,
+                               safety_factor=1e9).render(traj())
+        results = {}
+        for adapt, key in ((False, "prior"), (True, "feedback")):
+            svc = RenderService(prob, mesh=mesh, chunk_frames=chunk,
+                                feedback=True, adapt=adapt,
+                                safety_factor=safety_factor)
+            canv, rs = svc.render(traj())
+            results[key] = rs
+            writer(f"ask_scan_wl_{key}_ring_rows", case, rs.ring_rows)
+            writer(f"ask_scan_wl_{key}_ring_bytes", case,
+                   rs.ring_rows * ROW_BYTES)
+            writer(f"ask_scan_wl_{key}_overflow", case, rs.overflow_dropped)
+            writer(f"ask_scan_wl_{key}_retries", case, rs.retries)
+            writer(f"ask_scan_wl_{key}_dispatches", case, rs.dispatches)
+            writer(f"ask_scan_wl_{key}_identical", case,
+                   int(np.array_equal(canv, ref)))
+        prior, fb = results["prior"], results["feedback"]
+        writer("ask_scan_wl_feedback_ring_vs_prior", case,
+               fb.ring_rows / prior.ring_rows if prior.ring_rows else 0.0)
+        writer("ask_scan_wl_feedback_measured_chunks", case,
+               sum(1 for c in fb.chunk_stats if c.p_source == "measured"))
+
+
 def run(writer, full=False):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
@@ -399,6 +471,7 @@ def run(writer, full=False):
         planner_batch(writer, n=512, dwell=256, n_sparse=12, n_dense=6)
         pipelined_serving(writer, n=256, dwell=128, frames=128, chunk=8)
         feedback_serving(writer, n=256, dwell=128, frames=96, chunk=8)
+        workload_serving(writer, n=512, dwell=128, frames=48, chunk=8)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
@@ -406,3 +479,4 @@ def run(writer, full=False):
         planner_batch(writer, n=512, dwell=128, n_sparse=8, n_dense=4)
         pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8)
         feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4)
+        workload_serving(writer, n=256, dwell=64, frames=24, chunk=4)

@@ -134,28 +134,42 @@ def ewma(old: Optional[float], new: float, alpha: float) -> float:
 
 @dataclasses.dataclass
 class OccupancyEstimator:
-    """EWMA of measured subdivision probability per zoom-depth bucket.
+    """EWMA of measured subdivision probability per (workload,
+    zoom-depth-bucket) key.
 
     The estimator is the feedback state a serving loop carries across
     chunk boundaries. Depth (``planner.zoom_depth`` levels, negative =
     zoomed out) is bucketed at ``depth_quantum`` resolution; each bucket
     holds an EWMA of the envelope measured P of the frames observed
-    there. Prediction:
+    there. Every observation/prediction method takes an optional
+    ``workload`` (a ``repro.workloads.WorkloadSpec`` or its registry
+    name): measurements are filed under that workload's namespace and
+    its prior band governs clamping and fallback, so ONE estimator can
+    back a mixed-workload render service without julia measurements
+    contaminating mandelbrot plans. ``workload=None`` is the default
+    namespace, whose band is this estimator's own ``p_deep`` / ``slope``
+    / ``p_min`` fields -- the pre-workload behaviour. Prediction:
 
-    * a depth whose nearest observed bucket lies within
+    * a depth whose nearest observed bucket (same workload) lies within
       ``max_extrapolate`` levels returns that bucket's EWMA (clamped to
-      [p_min, p_deep] -- measurement noise never plans outside the band
-      the prior lives in);
+      the band -- measurement noise never plans outside the band the
+      prior lives in);
     * anything further from every observation falls back to the
-      zoom-depth prior (``planner.effective_p_subdiv`` with this
-      estimator's p_deep / slope / p_min), so a cold estimator plans
-      EXACTLY like the prior-only planner -- the cold-start contract
-      the regression tier pins.
+      zoom-depth prior (``planner.effective_p_subdiv`` with the
+      workload's band), so a cold estimator plans EXACTLY like the
+      prior-only planner -- the cold-start contract the regression tier
+      pins.
 
     ``predict_quantized`` additionally rounds UP onto a ``p_quantum``
     grid: rounding up keeps the capacity estimate safe, and the grid
     bounds how many distinct capacity vectors (hence compiled chunk
     programs) a feedback-driven stream can ever request.
+
+    ``snapshot()`` / ``OccupancyEstimator.restore()`` round-trip the
+    whole state (config, per-workload bands, EWMA buckets, counters)
+    through a JSON-able dict, so a restarted service resumes from the
+    warm plan instead of the cold prior
+    (``launch.render_service.RenderService(feedback_state=...)``).
     """
 
     p_deep: float = P_DEEP_DEFAULT
@@ -165,7 +179,11 @@ class OccupancyEstimator:
     depth_quantum: float = 0.5  # depth-bucket width, in subdivision levels
     max_extrapolate: float = 2.0  # levels a measurement generalises across
     p_quantum: float = 0.05  # predict_quantized grid (plan signatures)
-    _ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # (workload key, depth bucket) -> EWMA of the envelope measured P
+    _ewma: Dict[Tuple[str, int], float] = dataclasses.field(default_factory=dict)
+    # workload key -> (p_deep, slope, p_min); "" uses the fields above
+    _bands: Dict[str, Tuple[float, float, float]] = dataclasses.field(
+        default_factory=dict)
     frames_observed: int = 0
     chunks_observed: int = 0
 
@@ -178,29 +196,59 @@ class OccupancyEstimator:
             raise ValueError(
                 f"need 0 < p_min <= p_deep <= 1, got {self.p_min}/{self.p_deep}")
 
+    # -- workload namespaces ------------------------------------------------
+
+    def _key(self, workload) -> str:
+        """Resolve a workload argument to its namespace key, learning
+        its prior band on the way (a spec argument registers its band;
+        a bare registry name resolves it lazily so restored snapshots
+        and name-only callers agree with spec callers)."""
+        if workload is None:
+            return ""
+        if isinstance(workload, str):
+            name = workload
+            if name and name not in self._bands:
+                try:
+                    from repro.workloads.registry import get_workload
+                    self._bands[name] = tuple(get_workload(name).prior_band)
+                except KeyError:
+                    pass  # unregistered name: fall back to the default band
+            return name
+        name = workload.name
+        if name not in self._bands:
+            self._bands[name] = tuple(float(b) for b in workload.prior_band)
+        return name
+
+    def _band(self, key: str) -> Tuple[float, float, float]:
+        return self._bands.get(key, (self.p_deep, self.slope, self.p_min))
+
     # -- observation --------------------------------------------------------
 
     def _bucket(self, depth: float) -> int:
         return int(round(float(depth) / self.depth_quantum))
 
-    def _clamp(self, p: float) -> float:
-        return min(max(float(p), self.p_min), self.p_deep)
+    def _clamp(self, p: float, key: str = "") -> float:
+        deep, _, p_min = self._band(key)
+        return min(max(float(p), p_min), deep)
 
-    def observe_value(self, depth: float, p: float) -> float:
+    def observe_value(self, depth: float, p: float, *,
+                      workload=None) -> float:
         """Fold one measured P at one depth into the EWMA state.
 
         Returns the bucket's new EWMA. The raw measurement is clamped
-        into [p_min, p_deep] first, so the state space of the estimator
-        is the band the prior lives in.
+        into the workload's [p_min, p_deep] band first, so the state
+        space of the estimator is the band the prior lives in.
         """
-        b = self._bucket(depth)
-        self._ewma[b] = ewma(self._ewma.get(b), self._clamp(p), self.alpha)
+        key = self._key(workload)
+        b = (key, self._bucket(depth))
+        self._ewma[b] = ewma(self._ewma.get(b), self._clamp(p, key),
+                             self.alpha)
         self.frames_observed += 1
         return self._ewma[b]
 
     def observe_frames(self, depths: Sequence[float],
                        chains: Sequence[Tuple[Sequence[int], int]],
-                       *, g: int, r: int) -> None:
+                       *, g: int, r: int, workload=None) -> None:
         """Observe one finished chunk: per-frame (region_counts,
         leaf_count) chains at the given zoom depths.
 
@@ -216,65 +264,83 @@ class OccupancyEstimator:
         if len(depths) != len(chains):
             raise ValueError(
                 f"got {len(depths)} depths for {len(chains)} chains")
+        key = self._key(workload)
         per_bucket: Dict[int, float] = {}
         for depth, (counts, leaf) in zip(depths, chains):
             p = measured_p_subdiv(counts, leaf, g=g, r=r)
             if p is None:
                 continue
             b = self._bucket(depth)
-            v = self._clamp(p)
+            v = self._clamp(p, key)
             per_bucket[b] = max(per_bucket.get(b, v), v)
             self.frames_observed += 1
         for b, v in per_bucket.items():
-            self._ewma[b] = ewma(self._ewma.get(b), v, self.alpha)
+            self._ewma[(key, b)] = ewma(self._ewma.get((key, b)), v,
+                                        self.alpha)
         self.chunks_observed += 1
 
     def observe_stats(self, depths: Sequence[float], stats, *,
-                      g: int, r: int) -> None:
+                      g: int, r: int, workload=None) -> None:
         """Observe a finished batched/sharded dispatch from its
         ``ASKStats`` (uses ``stats.frame_chains()``)."""
-        self.observe_frames(depths, stats.frame_chains(), g=g, r=r)
+        self.observe_frames(depths, stats.frame_chains(), g=g, r=r,
+                            workload=workload)
 
     def observe_report(self, report, *, g: int, r: int) -> None:
         """Observe a finished planned run (``planner.PlanReport``).
 
-        Depths come from the plan's per-frame estimates; reports built
-        from hand-made plans without estimates cannot be observed this
-        way (pass depths to ``observe_frames`` instead).
+        Depths come from the plan's per-frame estimates and the
+        namespace from the plan's stamped workload, so the measurements
+        land where the next ``plan_frames(..., observed=...)`` for the
+        same problem will look. Reports built from hand-made plans
+        without estimates cannot be observed this way (pass depths to
+        ``observe_frames`` instead).
         """
         ests = report.plan.estimates
         if len(ests) != report.frames:
             raise ValueError(
                 "plan carries no per-frame estimates; use observe_frames "
                 "with explicit depths")
+        name = report.plan.workload
+        band = getattr(report.plan, "workload_band", None)
+        if name and band is not None:
+            # learn the band from the plan stamp, so parametric workload
+            # instances whose names are not registry keys (e.g.
+            # "multibrot(m=4)") still clamp against their OWN band
+            self._bands.setdefault(name, tuple(float(b) for b in band))
         depths = [e.depth for e in ests]
         chains = list(zip(report.region_counts, report.frame_leaf_counts))
-        self.observe_frames(depths, chains, g=g, r=r)
+        self.observe_frames(depths, chains, g=g, r=r, workload=name or None)
 
     # -- prediction ---------------------------------------------------------
 
-    def prior(self, depth: float) -> float:
-        """The zoom-depth prior this estimator falls back to."""
-        return effective_p_subdiv(depth, p_deep=self.p_deep,
-                                  slope=self.slope, p_min=self.p_min)
+    def prior(self, depth: float, *, workload=None) -> float:
+        """The zoom-depth prior this estimator falls back to (the
+        workload's own band when one is given)."""
+        deep, slope, p_min = self._band(self._key(workload))
+        return effective_p_subdiv(depth, p_deep=deep, slope=slope,
+                                  p_min=p_min)
 
-    def _nearest_bucket(self, depth: float) -> Optional[int]:
-        if not self._ewma:
+    def _nearest_bucket(self, depth: float, key: str) -> Optional[int]:
+        buckets = [b for (k, b) in self._ewma if k == key]
+        if not buckets:
             return None
         b = float(depth) / self.depth_quantum
-        nearest = min(self._ewma, key=lambda k: (abs(k - b), k))
+        nearest = min(buckets, key=lambda k: (abs(k - b), k))
         if abs(nearest - b) * self.depth_quantum > self.max_extrapolate:
             return None
         return nearest
 
-    def measured(self, depth: float) -> Optional[float]:
+    def measured(self, depth: float, *, workload=None) -> Optional[float]:
         """Nearest observed bucket's EWMA within ``max_extrapolate``
-        levels of ``depth``; None when every observation is too far."""
-        b = self._nearest_bucket(depth)
-        return None if b is None else self._ewma[b]
+        levels of ``depth`` (same workload namespace); None when every
+        observation is too far."""
+        key = self._key(workload)
+        b = self._nearest_bucket(depth, key)
+        return None if b is None else self._ewma[(key, b)]
 
-    def predict(self, depth: float) -> float:
-        """Blended planning P at ``depth``. Always in [p_min, p_deep].
+    def predict(self, depth: float, *, workload=None) -> float:
+        """Blended planning P at ``depth``. Always inside the band.
 
         When a measurement is near enough, the prediction is that
         bucket's EWMA shifted by the PRIOR's trend between the bucket
@@ -284,23 +350,26 @@ class OccupancyEstimator:
         not systematically under-predicted. With no measurement in
         range the prediction IS the prior (the cold-start contract).
         """
-        b = self._nearest_bucket(depth)
+        key = self._key(workload)
+        b = self._nearest_bucket(depth, key)
         if b is None:
-            return self._clamp(self.prior(depth))
-        shift = self.prior(depth) - self.prior(b * self.depth_quantum)
-        return self._clamp(self._ewma[b] + shift)
+            return self._clamp(self.prior(depth, workload=workload), key)
+        shift = (self.prior(depth, workload=workload)
+                 - self.prior(b * self.depth_quantum, workload=workload))
+        return self._clamp(self._ewma[(key, b)] + shift, key)
 
-    def predict_quantized(self, depth: float) -> float:
+    def predict_quantized(self, depth: float, *, workload=None) -> float:
         """``predict`` rounded UP onto the ``p_quantum`` grid (then
-        clamped to p_deep). Monotone in the raw prediction and never
-        below it up to the p_deep cap -- rounding up keeps capacity
-        sizing safe while bounding the set of distinct plan signatures
-        a stream can request."""
-        p = self.predict(depth)
+        clamped to the band's p_deep). Monotone in the raw prediction
+        and never below it up to the p_deep cap -- rounding up keeps
+        capacity sizing safe while bounding the set of distinct plan
+        signatures a stream can request."""
+        p = self.predict(depth, workload=workload)
         q = math.ceil(p / self.p_quantum - 1e-12) * self.p_quantum
-        return min(q, self.p_deep)
+        deep, _, _ = self._band(self._key(workload))
+        return min(q, deep)
 
-    # -- introspection ------------------------------------------------------
+    # -- introspection / persistence ----------------------------------------
 
     @property
     def is_cold(self) -> bool:
@@ -308,6 +377,51 @@ class OccupancyEstimator:
         the prior, the cold-start contract of the serving loop."""
         return not self._ewma
 
-    def snapshot(self) -> Dict[float, float]:
-        """Observed state as {bucket centre depth: EWMA P} (a copy)."""
-        return {k * self.depth_quantum: v for k, v in sorted(self._ewma.items())}
+    def buckets(self, workload=None) -> Dict[float, float]:
+        """One namespace's observed state as {bucket centre depth:
+        EWMA P} (a copy; the pre-workload ``snapshot()`` view)."""
+        key = self._key(workload)
+        return {b * self.depth_quantum: v
+                for (k, b), v in sorted(self._ewma.items()) if k == key}
+
+    def workloads_observed(self) -> Tuple[str, ...]:
+        """Namespace keys holding at least one observation ("" is the
+        default namespace)."""
+        return tuple(sorted({k for (k, _) in self._ewma}))
+
+    def snapshot(self) -> dict:
+        """Full state as a JSON-able dict (``json.dumps`` clean).
+
+        The inverse is ``OccupancyEstimator.restore``; the round-trip is
+        exact up to float64 repr, so a service restarted from a saved
+        snapshot plans every chunk exactly as the warm original would.
+        """
+        return {
+            "version": 1,
+            "config": {
+                "p_deep": self.p_deep, "slope": self.slope,
+                "p_min": self.p_min, "alpha": self.alpha,
+                "depth_quantum": self.depth_quantum,
+                "max_extrapolate": self.max_extrapolate,
+                "p_quantum": self.p_quantum,
+            },
+            "bands": {k: list(v) for k, v in sorted(self._bands.items())},
+            "ewma": [[k, b, v] for (k, b), v in sorted(self._ewma.items())],
+            "frames_observed": self.frames_observed,
+            "chunks_observed": self.chunks_observed,
+        }
+
+    @classmethod
+    def restore(cls, state: dict) -> "OccupancyEstimator":
+        """Rebuild an estimator from ``snapshot()`` output (parsed JSON)."""
+        version = state.get("version")
+        if version != 1:
+            raise ValueError(f"unknown estimator snapshot version {version!r}")
+        est = cls(**state["config"])
+        est._bands = {k: tuple(float(x) for x in v)
+                      for k, v in state.get("bands", {}).items()}
+        est._ewma = {(str(k), int(b)): float(v)
+                     for k, b, v in state.get("ewma", [])}
+        est.frames_observed = int(state.get("frames_observed", 0))
+        est.chunks_observed = int(state.get("chunks_observed", 0))
+        return est

@@ -55,6 +55,8 @@ __all__ = [
     "P_DEEP_DEFAULT",
     "SLOPE_DEFAULT",
     "P_MIN_DEFAULT",
+    "prior_band_for",
+    "workload_name",
     "FrameEstimate",
     "FramePlan",
     "BucketPlan",
@@ -75,12 +77,28 @@ __all__ = [
 # convert ring rows to bytes with THIS constant, never a literal)
 ROW_BYTES = 8
 
-# the calibrated zoom-depth prior band (fit notes: effective_p_subdiv).
-# Every planning entry point AND core.feedback.OccupancyEstimator default
-# to this one triple, so re-fitting the prior is a one-place change.
+# the calibrated MANDELBROT zoom-depth prior band (fit notes:
+# effective_p_subdiv). Problems built on a ``repro.workloads`` spec carry
+# their own band (``WorkloadSpec.prior_band``, resolved by
+# ``prior_band_for``); this triple is the fallback for spec-less problems
+# and the ``core.feedback.OccupancyEstimator`` default namespace, so
+# re-fitting the seed prior stays a one-place change.
 P_DEEP_DEFAULT = 0.97
 SLOPE_DEFAULT = 0.18
 P_MIN_DEFAULT = 0.3
+
+
+def prior_band_for(problem) -> Tuple[float, float, float]:
+    """(p_deep, slope, p_min) for one problem: the workload's own prior
+    band when the problem carries a ``WorkloadSpec`` (the workload-
+    parametric stack always does), else the calibrated Mandelbrot
+    defaults. THE band-resolution rule every planning entry point
+    shares, so two layers can never plan the same frame from different
+    priors."""
+    band = getattr(getattr(problem, "workload", None), "prior_band", None)
+    if band is None:
+        return (P_DEEP_DEFAULT, SLOPE_DEFAULT, P_MIN_DEFAULT)
+    return tuple(float(b) for b in band)
 
 
 # ---------------------------------------------------------------------------
@@ -169,15 +187,24 @@ class FramePlan:
 
 def estimate_frames(problem, widths: Sequence[float], *,
                     ref_width: Union[float, None] = None,
-                    p_deep: float = P_DEEP_DEFAULT, slope: float = SLOPE_DEFAULT,
-                    p_min: float = P_MIN_DEFAULT) -> Tuple[FrameEstimate, ...]:
+                    p_deep: Union[float, None] = None,
+                    slope: Union[float, None] = None,
+                    p_min: Union[float, None] = None,
+                    ) -> Tuple[FrameEstimate, ...]:
     """Per-frame occupancy estimates for a batch of window widths.
 
     ``ref_width`` anchors depth 0 (where P saturates at ``p_deep``); it
     defaults to the problem's own bounds width -- the "boundary fills the
     frame" view -- or, failing that, the narrowest frame in the batch.
+    The band knobs default to the problem's workload prior
+    (``prior_band_for``), so a julia batch falls off along julia's own
+    fit; explicit values override per knob.
     """
     n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    band_deep, band_slope, band_min = prior_band_for(problem)
+    p_deep = band_deep if p_deep is None else p_deep
+    slope = band_slope if slope is None else slope
+    p_min = band_min if p_min is None else p_min
     ref_width = _resolve_ref_width(problem, widths, ref_width)
     out = []
     for i, w in enumerate(widths):
@@ -223,13 +250,21 @@ class CapacityPlan:
     ``frame_plans`` (populated by ``plan_frames``) records per frame
     whether the planning P came from the zoom-depth prior or from a
     measured-occupancy estimator; plans built by the lower-level
-    ``plan_from_p`` / hand-made plans leave it empty.
+    ``plan_from_p`` / hand-made plans leave it empty. ``workload`` names
+    the workload the plan was built for ("" for spec-less problems) and
+    ``workload_band`` carries its (p_deep, slope, p_min) prior --
+    ``feedback.OccupancyEstimator.observe_report`` uses the pair to file
+    the measurements in the right per-workload namespace with the right
+    clamping band, even for parametric workload instances whose names
+    are not in the registry (e.g. ``multibrot(m=4)``).
     """
 
     buckets: Tuple[BucketPlan, ...]
     estimates: Tuple[FrameEstimate, ...]
     safety_factor: float
     frame_plans: Tuple[FramePlan, ...] = ()
+    workload: str = ""
+    workload_band: Union[Tuple[float, float, float], None] = None
 
     @property
     def frames(self) -> int:
@@ -271,6 +306,11 @@ def escalate_capacities(caps, worst, frames) -> Tuple[int, ...]:
         raise RuntimeError(
             f"frames {sorted(frames)} overflow at worst-case capacities")
     return tuple(min(2 * c, w) for c, w in zip(caps, worst))
+
+
+def workload_name(problem) -> str:
+    """Registry name of the problem's workload ("" when spec-less)."""
+    return getattr(getattr(problem, "workload", None), "name", "")
 
 
 def plan_from_p(problem, frame_ps: Sequence[float], *,
@@ -349,23 +389,28 @@ def plan_from_p(problem, frame_ps: Sequence[float], *,
         else:
             buckets.append(BucketPlan(frames=tuple(sorted(int(i) for i in idx)),
                                       p_subdiv=p, capacities=caps))
+    name = workload_name(problem)
     return CapacityPlan(buckets=tuple(buckets), estimates=tuple(estimates),
                         safety_factor=safety_factor,
-                        frame_plans=tuple(frame_plans))
+                        frame_plans=tuple(frame_plans),
+                        workload=name,
+                        workload_band=prior_band_for(problem) if name else None)
 
 
 def plan_capacities(problem, bounds_batch, *,
                     num_buckets: int = 4,
                     safety_factor: float = 1.25,
-                    p_deep: float = P_DEEP_DEFAULT, slope: float = SLOPE_DEFAULT,
-                    p_min: float = P_MIN_DEFAULT,
+                    p_deep: Union[float, None] = None,
+                    slope: Union[float, None] = None,
+                    p_min: Union[float, None] = None,
                     ref_width: Union[float, None] = None,
                     ) -> CapacityPlan:
     """Plan a heterogeneous zoom batch from its [F, 4] bounds.
 
     Frame width re1 - re0 feeds ``zoom_depth`` -> ``effective_p_subdiv``
     -> ``expected_level_counts``; see ``plan_from_p`` for the bucketing.
-    Problems whose extras are not complex-plane bounds can call
+    The prior band defaults to the problem's workload (``prior_band_
+    for``). Problems whose extras are not plane bounds can call
     ``estimate_frames``/``plan_from_p`` with their own width or P notion.
     """
     arr = np.asarray(bounds_batch, np.float64)
@@ -439,11 +484,8 @@ def plan_frames(problem, bounds_batch, *, observed=None,
                 "be silently ignored")
         return plan_capacities(
             problem, bounds_batch, num_buckets=num_buckets,
-            safety_factor=safety_factor,
-            p_deep=P_DEEP_DEFAULT if p_deep is None else p_deep,
-            slope=SLOPE_DEFAULT if slope is None else slope,
-            p_min=P_MIN_DEFAULT if p_min is None else p_min,
-            ref_width=ref_width)
+            safety_factor=safety_factor, p_deep=p_deep, slope=slope,
+            p_min=p_min, ref_width=ref_width)
     clashing = [k for k, v in
                 (("p_deep", p_deep), ("slope", slope), ("p_min", p_min))
                 if v is not None]
@@ -451,21 +493,25 @@ def plan_frames(problem, bounds_batch, *, observed=None,
         raise ValueError(
             f"{clashing} conflict with observed=: the estimator's own "
             "band governs its prior fallback -- configure the "
-            "OccupancyEstimator instead")
+            "OccupancyEstimator (or the WorkloadSpec band) instead")
+    # measurements and prior fallback both live in the workload's own
+    # estimator namespace: a mixed-workload service sharing one estimator
+    # can never plan julia frames from mandelbrot measurements
+    wl = getattr(problem, "workload", None)
     widths, ref_w = _frame_widths(problem, bounds_batch, ref_width)
     n, g, r, B = problem.n, problem.g, problem.r, problem.B
     ests, fps = [], []
     for i, w in enumerate(widths):
         d = zoom_depth(float(w), ref_width=ref_w, r=r)
-        measured = observed.measured(d)
-        p = (observed.predict_quantized(d) if quantize
-             else observed.predict(d))
+        measured = observed.measured(d, workload=wl)
+        p = (observed.predict_quantized(d, workload=wl) if quantize
+             else observed.predict(d, workload=wl))
         ests.append(FrameEstimate(
             index=i, width=float(w), depth=d, p_subdiv=p,
             expected=tuple(expected_level_counts(n, g, r, B, P=p))))
         fps.append(FramePlan(index=i, width=float(w), depth=d,
-                             p_prior=observed.prior(d), p_measured=measured,
-                             p_subdiv=p))
+                             p_prior=observed.prior(d, workload=wl),
+                             p_measured=measured, p_subdiv=p))
     return plan_from_p(problem, [e.p_subdiv for e in ests],
                        num_buckets=num_buckets, safety_factor=safety_factor,
                        estimates=tuple(ests), frame_plans=tuple(fps))

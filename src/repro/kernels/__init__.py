@@ -2,9 +2,13 @@
 
 Each kernel module pairs with the pure-jnp oracle in ref.py and the jitted
 public wrappers in ops.py; tests/test_kernels.py sweeps shapes and asserts
-interpret-mode equality with the oracles.
+interpret-mode equality with the oracles. The point-value kernels are
+workload-parametric: a static ``workload`` argument (a ``repro.workloads.
+WorkloadSpec``) swaps the per-point function inside the ONE shared kernel
+body, so every registered escape-time workload runs the same Pallas code
+bit-identically to its oracle (None keeps the seed Mandelbrot iteration).
 
-  mandelbrot_dwell   flat exhaustive dwell (the Ex baseline)
+  mandelbrot_dwell   flat exhaustive point values (the Ex baseline)
   perimeter_query    Mariani-Silver border query Q (OLT scalar prefetch)
   region_fill        terminal work T (OLT-driven BlockSpec index_map)
   region_dwell       last-level application work A (SBR/MBR grids)

@@ -24,7 +24,8 @@ from jax.experimental import pallas as pl
 from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
-def _kernel(o_ref, *, by: int, bx: int, n: int, bounds, max_dwell: int):
+def _kernel(o_ref, *, by: int, bx: int, n: int, bounds, max_dwell: int,
+            workload):
     pi = pl.program_id(0)
     pj = pl.program_id(1)
     ys = (pi * by).astype(jnp.float32) + jax.lax.broadcasted_iota(
@@ -32,24 +33,29 @@ def _kernel(o_ref, *, by: int, bx: int, n: int, bounds, max_dwell: int):
     xs = (pj * bx).astype(jnp.float32) + jax.lax.broadcasted_iota(
         jnp.float32, (by, bx), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    o_ref[...] = dwell_compute(cr, ci, max_dwell)
+    o_ref[...] = dwell_compute(cr, ci, max_dwell, workload=workload)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "bounds", "max_dwell", "block", "interpret"))
+    jax.jit, static_argnames=("n", "bounds", "max_dwell", "block", "interpret",
+                              "workload"))
 def mandelbrot_dwell(
     n: int,
     bounds=DEFAULT_BOUNDS,
     max_dwell: int = 512,
     block: tuple[int, int] = (256, 256),
     interpret: bool = True,
+    workload=None,
 ) -> jax.Array:
+    """``workload`` (an escape-time ``WorkloadSpec``) swaps the per-point
+    function inside the SAME kernel body; None keeps classic Mandelbrot."""
     by = min(block[0], n)
     bx = min(block[1], n)
     if n % by or n % bx:
         raise ValueError(f"n={n} must be divisible by block {by}x{bx}")
     kernel = functools.partial(
-        _kernel, by=by, bx=bx, n=n, bounds=bounds, max_dwell=max_dwell)
+        _kernel, by=by, bx=bx, n=n, bounds=bounds, max_dwell=max_dwell,
+        workload=workload)
     return pl.pallas_call(
         kernel,
         grid=(n // by, n // bx),

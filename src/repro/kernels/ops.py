@@ -35,33 +35,46 @@ def _interpret() -> bool:
     return not _on_tpu()
 
 
+def _grid_workload(workload) -> bool:
+    """Grid workloads (per-point value = gather from a generated field)
+    always run the jnp oracle path: the field lives in device memory as
+    a gathered constant, which the scalar-prefetch Pallas bodies do not
+    stage through VMEM. Escape-time workloads (pure arithmetic) flow
+    into the Pallas kernel bodies unchanged."""
+    return workload is not None and getattr(workload, "kind", "") == "grid"
+
+
 def mandelbrot(n, *, bounds=ref.DEFAULT_BOUNDS, max_dwell=512,
-               block=(256, 256), backend="pallas"):
-    """Exhaustive n x n dwell image (the paper's Ex baseline)."""
-    if backend == "jnp":
-        return ref.mandelbrot_ref(n, bounds, max_dwell)
+               block=(256, 256), backend="pallas", workload=None):
+    """Exhaustive n x n value image (the paper's Ex baseline; named for
+    the seed workload, ``workload=`` makes it serve any)."""
+    if backend == "jnp" or _grid_workload(workload):
+        return ref.mandelbrot_ref(n, bounds, max_dwell, workload=workload)
     blk = (min(block[0], n), min(block[1], n))
-    return _mandelbrot_pallas(n, bounds, max_dwell, blk, _interpret())
+    return _mandelbrot_pallas(n, bounds, max_dwell, blk, _interpret(),
+                              workload=workload)
 
 
 def _bounds_traced(bounds) -> bool:
     """Per-frame bounds arrive as a traced [4] array from the batched
-    serving path (mandelbrot.solve_batch); static tuples stay jit-static."""
+    serving path (workloads.solve_batch); static tuples stay jit-static."""
     return isinstance(bounds, jax.Array)
 
 
 def perimeter_query(coords, *, side, n, bounds=ref.DEFAULT_BOUNDS,
-                    max_dwell=512, backend="pallas"):
+                    max_dwell=512, backend="pallas", workload=None):
     """Border query Q: (homog [N] bool, common [N] int32)."""
     if _bounds_traced(bounds):
         return ref.perimeter_query_dyn(
-            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
-    if backend == "jnp":
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
+            workload=workload)
+    if backend == "jnp" or _grid_workload(workload):
         return ref.perimeter_query_ref(
-            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
+            workload=workload)
     return _perimeter_pallas(
         coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-        interpret=_interpret())
+        interpret=_interpret(), workload=workload)
 
 
 def region_fill(canvas, coords, values, nonempty, *, side, n,
@@ -85,14 +98,15 @@ def region_fill(canvas, coords, values, nonempty, *, side, n,
 
 def region_dwell(canvas, coords, nonempty, *, side, n,
                  bounds=ref.DEFAULT_BOUNDS, max_dwell=512, scheme="sbr",
-                 tile=256, backend="pallas"):
-    """Last-level work A: interior dwell of the (duplicate-padded) leaf-OLT."""
-    if backend == "jnp" or _bounds_traced(bounds):
+                 tile=256, backend="pallas", workload=None):
+    """Last-level work A: interior values of the (duplicate-padded) leaf-OLT."""
+    if backend == "jnp" or _bounds_traced(bounds) or _grid_workload(workload):
         N = coords.shape[0]
         interior = (ref.region_interior_dyn if _bounds_traced(bounds)
                     else ref.region_interior_ref)
         tiles = interior(
-            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+            coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
+            workload=workload)
         iy = jnp.arange(side)
         ys = coords[:, 0:1, None] * side + iy[None, :, None]
         xs = coords[:, 1:2, None] * side + iy[None, None, :]
@@ -102,7 +116,8 @@ def region_dwell(canvas, coords, nonempty, *, side, n,
         return canvas.at[ys.ravel(), xs.ravel()].set(tiles.ravel(), mode="drop")
     return _region_dwell_pallas(
         canvas, coords, nonempty, side=side, n=n, bounds=bounds,
-        max_dwell=max_dwell, scheme=scheme, tile=tile, interpret=_interpret())
+        max_dwell=max_dwell, scheme=scheme, tile=tile, interpret=_interpret(),
+        workload=workload)
 
 
 def compact_ranks(flags, *, backend="pallas"):

@@ -27,7 +27,7 @@ from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
 def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
-            bounds, max_dwell: int):
+            bounds, max_dwell: int, workload):
     i = pl.program_id(0)
     py = (cy_ref[i] * side).astype(jnp.float32)
     px = (cx_ref[i] * side).astype(jnp.float32)
@@ -40,14 +40,17 @@ def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
          jnp.where(row == 1, px + j,
          jnp.where(row == 2, px, px + last)))
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell)
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload)
     first = dw[0, 0]
-    homog_ref[0] = jnp.all(dw == first).astype(jnp.int32)
+    eq = (dw == first if workload is None
+          else workload.region_equal(dw, first))
+    homog_ref[0] = jnp.all(eq).astype(jnp.int32)
     common_ref[0] = first
 
 
 @functools.partial(
-    jax.jit, static_argnames=("side", "n", "bounds", "max_dwell", "interpret"))
+    jax.jit, static_argnames=("side", "n", "bounds", "max_dwell", "interpret",
+                              "workload"))
 def perimeter_query(
     coords: jax.Array,
     *,
@@ -56,11 +59,14 @@ def perimeter_query(
     bounds=DEFAULT_BOUNDS,
     max_dwell: int = 512,
     interpret: bool = True,
+    workload=None,
 ):
-    """coords: [N, 2] int32 (cy, cx). Returns (homog [N] bool, common [N])."""
+    """coords: [N, 2] int32 (cy, cx). Returns (homog [N] bool, common [N]).
+    ``workload`` (escape-time spec) swaps the per-point function."""
     N = coords.shape[0]
     kernel = functools.partial(
-        _kernel, side=side, n=n, bounds=bounds, max_dwell=max_dwell)
+        _kernel, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
+        workload=workload)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(N,),

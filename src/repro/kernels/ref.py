@@ -1,13 +1,18 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
-The dwell iteration (``dwell_compute``) is THE single definition shared by
-oracles and kernels: Pallas kernel bodies import and call it on values read
-from refs, so CPU-interpret results are bit-identical to the oracle
-(identical op order in f32).
+The point-value computation (``dwell_compute``) is THE single definition
+shared by oracles and kernels: Pallas kernel bodies import and call it on
+values read from refs, so CPU-interpret results are bit-identical to the
+oracle (identical op order in f32). It is workload-parametric: the
+``workload`` argument (a ``repro.workloads.WorkloadSpec``, or None for the
+classic Mandelbrot iteration) supplies the per-point function, so ONE
+kernel body serves every registered escape-time workload.
 
-Semantics follow Adinetz's reference CUDA implementation (the paper's DP
-baseline): z0 = c; while dwell < max_dwell and |z|^2 < 4: z = z^2 + c.
-Interior points therefore carry dwell == max_dwell.
+Default (workload=None) semantics follow Adinetz's reference CUDA
+implementation (the paper's DP baseline): z0 = c; while dwell < max_dwell
+and |z|^2 < 4: z = z^2 + c. Interior points therefore carry dwell ==
+max_dwell. The registry's "mandelbrot" spec reuses ``mandelbrot_init`` /
+``mandelbrot_step`` below, so the two spellings are the same compute.
 """
 
 from __future__ import annotations
@@ -25,24 +30,46 @@ DEFAULT_BOUNDS: Tuple[float, float, float, float] = (-1.5, -1.0, 0.5, 1.0)
 
 def map_coords(xs: jax.Array, ys: jax.Array, n: int,
                bounds: Tuple[float, float, float, float] = DEFAULT_BOUNDS):
-    """Pixel (x, y) -> complex-plane (re, im). xs/ys are f32 pixel indices."""
+    """Pixel (x, y) -> workload-plane (re, im). xs/ys are f32 pixel indices."""
     re0, im0, re1, im1 = bounds
     cr = re0 + xs * ((re1 - re0) / n)
     ci = im0 + ys * ((im1 - im0) / n)
     return cr, ci
 
 
-def dwell_compute(cr: jax.Array, ci: jax.Array, max_dwell: int) -> jax.Array:
-    """Escape-time iteration, vectorised, fixed trip count with masked
-    updates (uniform control flow -- the TPU/VPU-idiomatic form)."""
-    zr, zi = cr, ci
+def mandelbrot_init(cr: jax.Array, ci: jax.Array):
+    """z0 = c (Adinetz's reference semantics; dwell counts from z0)."""
+    return cr, ci
+
+
+def mandelbrot_step(zr: jax.Array, zi: jax.Array,
+                    cr: jax.Array, ci: jax.Array):
+    """One z -> z^2 + c step, spelled exactly as the seed kernel did --
+    every escape-time workload whose step matches these ops elementwise
+    is bit-identical to the pre-refactor canvases."""
+    return zr * zr - zi * zi + cr, 2.0 * zr * zi + ci
+
+
+def escape_time(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
+                init=mandelbrot_init, step=mandelbrot_step,
+                escape_radius2: float = 4.0) -> jax.Array:
+    """Generic escape-time iteration, vectorised, fixed trip count with
+    masked updates (uniform control flow -- the TPU/VPU-idiomatic form).
+
+    ``init(cr, ci) -> (zr0, zi0)`` seeds the orbit from the mapped plane
+    point; ``step(zr, zi, cr, ci) -> (zr', zi')`` advances it (the plane
+    point rides along so parameter-plane workloads like Mandelbrot see c
+    while dynamic-plane workloads like Julia ignore it). The loop
+    structure -- escape test BEFORE the step, masked updates -- is the
+    single definition every engine and kernel backend shares.
+    """
+    zr, zi = init(cr, ci)
     dw = jnp.zeros(cr.shape, dtype=jnp.int32)
 
     def body(_, carry):
         zr, zi, dw = carry
-        active = (zr * zr + zi * zi) < 4.0
-        nzr = zr * zr - zi * zi + cr
-        nzi = 2.0 * zr * zi + ci
+        active = (zr * zr + zi * zi) < escape_radius2
+        nzr, nzi = step(zr, zi, cr, ci)
         zr = jnp.where(active, nzr, zr)
         zi = jnp.where(active, nzi, zi)
         dw = jnp.where(active, dw + 1, dw)
@@ -52,13 +79,31 @@ def dwell_compute(cr: jax.Array, ci: jax.Array, max_dwell: int) -> jax.Array:
     return dw
 
 
-@functools.partial(jax.jit, static_argnames=("n", "bounds", "max_dwell"))
-def mandelbrot_ref(n: int, bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
-    """Oracle for the exhaustive flat kernel: full n x n dwell image."""
+def dwell_compute(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
+                  workload=None) -> jax.Array:
+    """Per-point values at the mapped plane coordinates.
+
+    ``workload`` is a ``repro.workloads.WorkloadSpec`` (duck-typed: only
+    ``.values(cr, ci, max_dwell)`` is called, so this module never
+    imports the workloads package); None keeps the classic Mandelbrot
+    iteration -- the back-compat spelling every pre-workload caller
+    relies on.
+    """
+    if workload is None:
+        return escape_time(cr, ci, max_dwell)
+    return workload.values(cr, ci, max_dwell)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "bounds", "max_dwell", "workload"))
+def mandelbrot_ref(n: int, bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
+                   workload=None) -> jax.Array:
+    """Oracle for the exhaustive flat kernel: full n x n value image.
+    (Named for the seed workload; ``workload=`` makes it serve any.)"""
     ys = jax.lax.broadcasted_iota(jnp.float32, (n, n), 0)
     xs = jax.lax.broadcasted_iota(jnp.float32, (n, n), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    return dwell_compute(cr, ci, max_dwell)
+    return dwell_compute(cr, ci, max_dwell, workload=workload)
 
 
 def perimeter_coords(coords: jax.Array, side: int):
@@ -85,32 +130,39 @@ def perimeter_coords(coords: jax.Array, side: int):
 
 
 def perimeter_query_dyn(coords: jax.Array, *, side: int, n: int,
-                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512):
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
+                        workload=None):
     """Un-jitted border query Q: same math as ``perimeter_query_ref`` but
     ``bounds`` may be a traced [4] array -- the batched frame-serving path
-    vmaps over it (one complex-plane window per frame)."""
+    vmaps over it (one plane window per frame)."""
     ys, xs = perimeter_coords(coords, side)
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell)  # [N, 4, side]
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload)  # [N, 4, side]
     first = dw[:, 0, 0]
-    homog = jnp.all(dw == first[:, None, None], axis=(1, 2))
+    eq = (dw == first[:, None, None] if workload is None
+          else workload.region_equal(dw, first[:, None, None]))
+    homog = jnp.all(eq, axis=(1, 2))
     return homog, first
 
 
-@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
+@functools.partial(jax.jit,
+                   static_argnames=("side", "n", "bounds", "max_dwell",
+                                    "workload"))
 def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
-                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512):
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
+                        workload=None):
     """Oracle for the Mariani-Silver border query Q (paper Sec. 4.2.1).
 
     Returns (homog [N] bool, common [N] int32): whether all 4*side border
-    dwells agree, and the shared value (row (0,0) -- junk if not homog).
+    values agree, and the shared value (row (0,0) -- junk if not homog).
     """
     return perimeter_query_dyn(coords, side=side, n=n, bounds=bounds,
-                               max_dwell=max_dwell)
+                               max_dwell=max_dwell, workload=workload)
 
 
 def region_interior_dyn(coords: jax.Array, *, side: int, n: int,
-                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
+                        workload=None) -> jax.Array:
     """Un-jitted last-level work A (traced-bounds variant, see
     ``perimeter_query_dyn``)."""
     py = (coords[:, 0] * side).astype(jnp.float32)
@@ -121,16 +173,19 @@ def region_interior_dyn(coords: jax.Array, *, side: int, n: int,
     ys = jnp.broadcast_to(ys, (coords.shape[0], side, side))
     xs = jnp.broadcast_to(xs, (coords.shape[0], side, side))
     cr, ci = map_coords(xs, ys, n, bounds)
-    return dwell_compute(cr, ci, max_dwell)
+    return dwell_compute(cr, ci, max_dwell, workload=workload)
 
 
-@functools.partial(jax.jit, static_argnames=("side", "n", "bounds", "max_dwell"))
+@functools.partial(jax.jit,
+                   static_argnames=("side", "n", "bounds", "max_dwell",
+                                    "workload"))
 def region_interior_ref(coords: jax.Array, *, side: int, n: int,
-                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512) -> jax.Array:
-    """Oracle for the last-level application work A: [N, side, side] dwell
+                        bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
+                        workload=None) -> jax.Array:
+    """Oracle for the last-level application work A: [N, side, side] value
     tiles for each region."""
     return region_interior_dyn(coords, side=side, n=n, bounds=bounds,
-                               max_dwell=max_dwell)
+                               max_dwell=max_dwell, workload=workload)
 
 
 def compact_ranks_ref(flags):

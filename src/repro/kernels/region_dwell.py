@@ -28,7 +28,7 @@ from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 def _kernel(cy_ref, cx_ref, nonempty_ref, canvas_ref, out_ref, *,
             by: int, bx: int, tiles: int, side: int, n: int, bounds,
-            max_dwell: int):
+            max_dwell: int, workload):
     i = pl.program_id(0)
     if tiles == 1:
         ty = tx = 0
@@ -40,12 +40,13 @@ def _kernel(cy_ref, cx_ref, nonempty_ref, canvas_ref, out_ref, *,
     ys = y0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 0)
     xs = x0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell)
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload)
     out_ref[...] = jnp.where(nonempty_ref[0] > 0, dw, canvas_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "side", "n", "bounds", "max_dwell", "scheme", "tile", "interpret"))
+    "side", "n", "bounds", "max_dwell", "scheme", "tile", "interpret",
+    "workload"))
 def region_dwell(
     canvas: jax.Array,
     coords: jax.Array,
@@ -58,8 +59,10 @@ def region_dwell(
     scheme: str = "sbr",
     tile: int = 256,
     interpret: bool = True,
+    workload=None,
 ) -> jax.Array:
-    """coords: [N,2] leaf-OLT (duplicate-padded); returns updated canvas."""
+    """coords: [N,2] leaf-OLT (duplicate-padded); returns updated canvas.
+    ``workload`` (escape-time spec) swaps the per-point function."""
     N = coords.shape[0]
     cy = coords[:, 0].astype(jnp.int32)
     cx = coords[:, 1].astype(jnp.int32)
@@ -85,7 +88,7 @@ def region_dwell(
 
     kernel = functools.partial(
         _kernel, by=by, bx=bx, tiles=t, side=side, n=n, bounds=bounds,
-        max_dwell=max_dwell)
+        max_dwell=max_dwell, workload=workload)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,

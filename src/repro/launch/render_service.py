@@ -56,8 +56,11 @@ import argparse
 import collections
 import dataclasses
 import itertools
+import json
+import os
 import time
-from typing import Any, Iterable, Iterator, Tuple
+from pathlib import Path
+from typing import Any, Iterable, Iterator, Mapping, Tuple, Union
 
 import numpy as np
 
@@ -102,6 +105,7 @@ class ChunkStats:
     p_source: str = ""  # "prior" | "measured" | "mixed" (cold start = prior)
     retries: int = 0  # frame re-dispatches after overflow
     ring_rows: int = 0  # OLT-ring rows allocated, retry dispatches included
+    workload: str = ""  # mixed-workload serving: problem key of this chunk
 
     @property
     def busy_s(self) -> float:
@@ -177,8 +181,12 @@ def zoom_bounds(
 
 
 class RenderService:
-    """Chunked sharded serving of a Mandelbrot frame stream.
+    """Chunked sharded serving of a workload frame stream.
 
+    ``problem`` is a ``workloads.FrameProblem`` (any registered
+    workload), or -- mixed-workload serving -- a mapping {key:
+    FrameProblem} whose problems share one canvas size; stream items
+    are then ``(key, bounds)`` pairs instead of bare bounds tuples.
     ``mesh`` defaults to a 1-D mesh over every visible device
     (``launch.mesh.make_frames_mesh``); ``chunk_frames`` is rounded up to
     a multiple of the device count; ``pipeline_depth`` bounds how many
@@ -189,24 +197,36 @@ class RenderService:
     ``feedback`` (True or a ``core.feedback.OccupancyEstimator``) turns
     on closed-loop planner-aware chunking: every chunk's ring
     capacities come from the estimator's (quantized) prediction at the
-    chunk's zoom depths -- the zoom-depth prior while the estimator is
-    cold, the previous chunks' measured occupancy afterwards -- the
-    chunker splits a chunk early when the predicted capacity class
-    jumps, overflowing frames are retried at doubled capacities before
-    the chunk is yielded, and the finished chunk's measured
-    ``region_counts`` are folded back into the estimator.
-    ``adapt=False`` keeps the same chunking/retry machinery but never
-    feeds measurements back -- the prior-only baseline the feedback
-    benchmark rows compare against. With ``pipeline_depth >= 2`` the
-    feedback lags by the chunks in flight: chunk k is planned from the
-    chunks finalised before it was enqueued, which is what keeps the
-    re-plan loop compatible with the async overlap.
+    chunk's zoom depths -- the WORKLOAD's zoom-depth prior while the
+    estimator is cold, the previous chunks' measured occupancy
+    afterwards -- the chunker splits a chunk early when the predicted
+    capacity class (or the workload) jumps, overflowing frames are
+    retried at doubled capacities before the chunk is yielded, and the
+    finished chunk's measured ``region_counts`` are folded back into
+    the estimator under the chunk's workload namespace (so a mixed
+    mandelbrot+julia stream never plans one workload from the other's
+    measurements). Mixed-workload serving requires the feedback path
+    (it IS the planner-aware chunker). ``adapt=False`` keeps the same
+    chunking/retry machinery but never feeds measurements back -- the
+    prior-only baseline the feedback benchmark rows compare against.
+    With ``pipeline_depth >= 2`` the feedback lags by the chunks in
+    flight: chunk k is planned from the chunks finalised before it was
+    enqueued, which is what keeps the re-plan loop compatible with the
+    async overlap.
+
+    ``feedback_state`` (a JSON path) persists the estimator across
+    service restarts: an existing file is loaded at construction (so
+    the first chunk plans from the previous process's measurements
+    instead of the cold prior), and ``render()`` saves back on
+    completion (``save_feedback_state()`` for streaming callers).
     """
 
     def __init__(self, problem, *, mesh=None, chunk_frames: int | None = None,
                  pipeline_depth: int = DEFAULT_PIPELINE_DEPTH,
                  feedback: OccupancyEstimator | bool | None = None,
-                 adapt: bool = True, **engine_kw):
+                 adapt: bool = True,
+                 feedback_state: Union[str, Path, None] = None,
+                 **engine_kw):
         if "pad_to" in engine_kw:
             raise ValueError(
                 "pad_to is owned by the service (pinned to chunk_frames so "
@@ -214,7 +234,31 @@ class RenderService:
                 "instead")
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
-        self.problem = problem
+        if isinstance(problem, Mapping):
+            if not problem:
+                raise ValueError("problem mapping must not be empty")
+            self._problems = {str(k): p for k, p in problem.items()}
+            self._mixed = True
+            self.problem = None  # no single canonical problem in mixed mode
+        else:
+            self._problems = {"": problem}
+            self._mixed = False
+            self.problem = problem
+        sizes = {p.n for p in self._problems.values()}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"mixed-workload problems must share one canvas size n, "
+                f"got {sorted(sizes)}")
+        self._n = sizes.pop()
+        dtypes = {np.dtype(getattr(getattr(p, "workload", None), "dtype",
+                                   np.int32))
+                  for p in self._problems.values()}
+        if len(dtypes) != 1:
+            raise ValueError(
+                "mixed-workload problems must share one canvas dtype "
+                f"(render() stacks chunks into one array), got "
+                f"{sorted(d.name for d in dtypes)}")
+        self._dtype = dtypes.pop()
         self.mesh = make_frames_mesh() if mesh is None else mesh
         n_dev = int(self.mesh.devices.size)
         want = (n_dev * DEFAULT_FRAMES_PER_DEVICE if chunk_frames is None
@@ -223,6 +267,10 @@ class RenderService:
             raise ValueError(f"chunk_frames must be >= 1, got {want}")
         self.chunk_frames = -(-want // n_dev) * n_dev  # round up to multiple
         self.pipeline_depth = int(pipeline_depth)
+        self._state_path = (None if feedback_state is None
+                            else Path(feedback_state))
+        if self._state_path is not None and not feedback:
+            feedback = True  # a state path IS a request for the closed loop
         if feedback:
             clash = {"capacities", "p_subdiv"} & engine_kw.keys()
             if clash:
@@ -230,14 +278,32 @@ class RenderService:
                     f"{sorted(clash)} conflict with feedback=: the service "
                     "re-plans each chunk's capacities from the estimator; "
                     "tune safety_factor / the OccupancyEstimator instead")
-            self.estimator = (feedback if isinstance(feedback, OccupancyEstimator)
-                              else OccupancyEstimator())
-            bounds = getattr(problem, "bounds", None)
-            if bounds is None:
+            if (self._state_path is not None
+                    and isinstance(feedback, OccupancyEstimator)):
                 raise ValueError(
-                    "feedback= needs problem.bounds to anchor zoom depth")
-            self._ref_width = float(bounds[2]) - float(bounds[0])
+                    "pass feedback_state= OR a prebuilt OccupancyEstimator, "
+                    "not both -- restoring the file would discard the "
+                    "estimator you handed in")
+            if self._state_path is not None and self._state_path.exists():
+                self.estimator = OccupancyEstimator.restore(
+                    json.loads(self._state_path.read_text()))
+            else:
+                self.estimator = (feedback
+                                  if isinstance(feedback, OccupancyEstimator)
+                                  else OccupancyEstimator())
+            self._ref_widths = {}
+            for key, prob in self._problems.items():
+                bounds = getattr(prob, "bounds", None)
+                if bounds is None:
+                    raise ValueError(
+                        "feedback= needs problem.bounds to anchor zoom depth")
+                self._ref_widths[key] = float(bounds[2]) - float(bounds[0])
         else:
+            if self._mixed:
+                raise ValueError(
+                    "mixed-workload serving needs feedback= (the planner-"
+                    "aware chunker is what routes each frame to its "
+                    "workload's compiled program and prior)")
             if not adapt:
                 raise ValueError(
                     "adapt=False is the prior-only FEEDBACK baseline (same "
@@ -245,34 +311,35 @@ class RenderService:
                     "needs feedback= set; without it the service runs the "
                     "uniform path and the flag would be silently ignored")
             self.estimator = None
-            self._ref_width = None
+            self._ref_widths = None
         self.adapt = bool(adapt)
         self.engine_kw = engine_kw
-        self._caps_cache: dict = {}  # quantized P -> capacity vector
-        self._used_sigs: set = set()  # (pad width, capacities) dispatched
+        self._caps_cache: dict = {}  # (problem key, quantized P) -> capacities
+        self._used_sigs: set = set()  # (problem key, pad width, caps) dispatched
 
     # -- dispatch plumbing --------------------------------------------------
 
-    def _dispatch(self, chunk, caps=None):
+    def _dispatch(self, chunk, caps=None, key: str = ""):
         """Enqueue one chunk; returns (ShardedDispatch, enqueue seconds).
 
         ``caps`` (feedback path) overrides the engine kwargs' sizing with
         a per-chunk capacity vector and pads to the pow2-bucketed width
         (``_pad_width``); the uniform path keeps the width pinned to
-        ``chunk_frames``. Either way compiled programs are keyed on
-        (chunk width, capacity signature) and nothing retraces across
-        chunks that share a signature.
+        ``chunk_frames``. ``key`` selects the problem in mixed-workload
+        mode. Either way compiled programs are keyed on (problem, chunk
+        width, capacity signature) and nothing retraces across chunks
+        that share a signature.
         """
-        from repro.mandelbrot import dispatch_batch
+        from repro.workloads import dispatch_batch
 
         kw = dict(self.engine_kw)
         pad = self.chunk_frames
         if caps is not None:
             kw["capacities"] = caps
             pad = self._pad_width(len(chunk))
-            self._used_sigs.add((pad, tuple(caps)))
+            self._used_sigs.add((key, pad, tuple(caps)))
         t0 = time.perf_counter()
-        d = dispatch_batch(self.problem, chunk, mesh=self.mesh,
+        d = dispatch_batch(self._problems[key], chunk, mesh=self.mesh,
                            pad_to=pad, **kw)
         return d, time.perf_counter() - t0
 
@@ -297,64 +364,84 @@ class RenderService:
 
     # -- feedback (planner-aware) serving -----------------------------------
 
-    def _depth(self, bounds) -> float:
+    def _split_item(self, item) -> Tuple[str, Any]:
+        """One stream item -> (problem key, bounds). Single-problem
+        streams carry bare bounds tuples; mixed-workload streams carry
+        (key, bounds) pairs."""
+        if not self._mixed:
+            return "", item
+        key, bounds = item
+        key = str(key)
+        if key not in self._problems:
+            raise KeyError(
+                f"stream item names unknown problem {key!r}; serving "
+                f"{sorted(self._problems)}")
+        return key, bounds
+
+    def _depth(self, key: str, bounds) -> float:
         from repro.core.planner import zoom_depth
 
         return zoom_depth(float(bounds[2]) - float(bounds[0]),
-                          ref_width=self._ref_width, r=self.problem.r)
+                          ref_width=self._ref_widths[key],
+                          r=self._problems[key].r)
 
-    def _caps_for(self, p: float):
-        """Capacity vector for one quantized planning P (memoised: the
-        p_quantum grid keeps this cache -- and the compiled-program
-        signature set -- small for the life of the service)."""
-        key = round(float(p), 6)
-        caps = self._caps_cache.get(key)
+    def _caps_for(self, key: str, p: float):
+        """Capacity vector for one (problem, quantized planning P)
+        (memoised: the p_quantum grid keeps this cache -- and the
+        compiled-program signature set -- small for the life of the
+        service)."""
+        ck = (key, round(float(p), 6))
+        caps = self._caps_cache.get(ck)
         if caps is None:
             from repro.core.ask import scan_capacities
 
-            prob = self.problem
+            prob = self._problems[key]
             caps = scan_capacities(
-                prob.n, prob.g, prob.r, prob.B, p_subdiv=key,
+                prob.n, prob.g, prob.r, prob.B, p_subdiv=ck[1],
                 safety_factor=self.engine_kw.get("safety_factor", 2.0))
-            self._caps_cache[key] = caps
+            self._caps_cache[ck] = caps
         return caps
 
     def _adaptive_chunks(self, it: Iterator):
-        """Boundary-aware chunker: yields (bounds, depths, p, caps,
-        source) with every frame of a chunk in ONE predicted capacity
-        class. A class jump cuts the chunk early -- deep-tail frames get
+        """Boundary-aware chunker: yields (key, bounds, depths, p, caps,
+        source) with every frame of a chunk in ONE problem and ONE
+        predicted capacity class. A class jump -- or a workload switch
+        in a mixed stream -- cuts the chunk early: deep-tail frames get
         their own (hotter) program instead of inflating the whole
-        chunk's ring. Lazy: predictions are made as frames are pulled,
-        so re-planning naturally picks up whatever the estimator has
-        observed by then.
+        chunk's ring, and every dispatch stays single-workload. Lazy:
+        predictions are made as frames are pulled, so re-planning
+        naturally picks up whatever the estimator has observed by then.
         """
         est = self.estimator
         buf: list = []
         depths: list = []
         sources: list = []
-        cls = None  # (quantized P, capacity vector) of the open chunk
+        cls = None  # (problem key, quantized P, capacities) of the open chunk
 
         def flush():
             src = (sources[0] if len(set(sources)) == 1 else "mixed")
-            return list(buf), list(depths), cls[0], cls[1], src
+            return cls[0], list(buf), list(depths), cls[1], cls[2], src
 
-        for b in it:
-            d = self._depth(b)
-            p = est.predict_quantized(d)
-            caps = self._caps_for(p)
-            if buf and (p, caps) != cls:
+        for item in it:
+            key, b = self._split_item(item)
+            wl = self._problems[key].workload
+            d = self._depth(key, b)
+            p = est.predict_quantized(d, workload=wl)
+            caps = self._caps_for(key, p)
+            if buf and (key, p, caps) != cls:
                 yield flush()
                 buf, depths, sources = [], [], []
                 # the estimator may have observed the flushed chunk while
                 # this generator was suspended in that yield: re-predict
                 # the held-over frame so the new chunk's class and
                 # provenance both reflect the post-observation state
-                p = est.predict_quantized(d)
-                caps = self._caps_for(p)
-            cls = (p, caps)
+                p = est.predict_quantized(d, workload=wl)
+                caps = self._caps_for(key, p)
+            cls = (key, p, caps)
             buf.append(b)
             depths.append(d)
-            sources.append("measured" if est.measured(d) is not None
+            sources.append("measured"
+                           if est.measured(d, workload=wl) is not None
                            else "prior")
             if len(buf) == self.chunk_frames:
                 yield flush()
@@ -362,7 +449,7 @@ class RenderService:
         if buf:
             yield flush()
 
-    def _resolve_overflow(self, bounds, caps, canvases, st):
+    def _resolve_overflow(self, key, bounds, caps, canvases, st):
         """Retry overflowing frames at doubled capacities until every
         frame fits, then merge canvases/stats. Returns (canvases np,
         merged ASKStats, frame re-dispatch count, retry ring rows).
@@ -387,10 +474,11 @@ class RenderService:
         canv = np.asarray(canvases)
         if pending:
             canv = np.array(canv)  # writable copy for the row merges
-            worst = worst_case_capacities(self.problem)
+            worst = worst_case_capacities(self._problems[key])
         while pending:
             cur = escalate_capacities(cur, worst, pending)
-            d, _ = self._dispatch([bounds[j] for j in pending], caps=cur)
+            d, _ = self._dispatch([bounds[j] for j in pending], caps=cur,
+                                  key=key)
             rc, rst = d.finalize()
             retry_rows += self._pad_width(len(pending)) * 2 * max(cur)
             retries += len(pending)
@@ -421,22 +509,24 @@ class RenderService:
 
     def _finalize_feedback(self, item, in_flight: int) -> ChunkResult:
         """Block on one in-flight feedback chunk: finalize, retry any
-        overflow, fold the measured counts into the estimator."""
-        i, bounds, depths, p, caps, src, d, disp_s = item
+        overflow, fold the measured counts into the estimator (under
+        the chunk's workload namespace)."""
+        i, key, bounds, depths, p, caps, src, d, disp_s = item
         t0 = time.perf_counter()
         canvases, st = d.finalize()
         canv, merged, retries, retry_rows = self._resolve_overflow(
-            bounds, caps, canvases, st)
+            key, bounds, caps, canvases, st)
         fetch_s = time.perf_counter() - t0  # retry dispatches included
+        prob = self._problems[key]
         if self.adapt:
-            self.estimator.observe_stats(depths, merged, g=self.problem.g,
-                                         r=self.problem.r)
+            self.estimator.observe_stats(depths, merged, g=prob.g, r=prob.r,
+                                         workload=prob.workload)
         return ChunkResult(canv, merged, ChunkStats(
             index=i, frames=len(bounds), dispatch_s=disp_s,
             fetch_s=fetch_s, in_flight=in_flight, p_subdiv=p,
             p_source=src, retries=retries,
             ring_rows=self._pad_width(len(bounds)) * 2 * max(caps)
-            + retry_rows))
+            + retry_rows, workload=key))
 
     def _stream_feedback(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
         """The closed loop: re-plan, dispatch, retry, observe, refill."""
@@ -449,9 +539,9 @@ class RenderService:
             item = next(chunks, None)
             if item is None:
                 return False
-            bounds, depths, p, caps, src = item
-            d, secs = self._dispatch(bounds, caps=caps)
-            pending.append((index, bounds, depths, p, caps, src, d, secs))
+            key, bounds, depths, p, caps, src = item
+            d, secs = self._dispatch(bounds, caps=caps, key=key)
+            pending.append((index, key, bounds, depths, p, caps, src, d, secs))
             index += 1
             return True
 
@@ -556,8 +646,8 @@ class RenderService:
 
         if self.estimator is not None:
             total = 0
-            for caps in {sig[1] for sig in self._used_sigs}:
-                fn = ask_lib._jitted_pipeline(self.problem, caps,
+            for key, caps in {(sig[0], sig[2]) for sig in self._used_sigs}:
+                fn = ask_lib._jitted_pipeline(self._problems[key], caps,
                                               batched=True, mesh=self.mesh)
                 size = getattr(fn, "_cache_size", None)
                 if not callable(size):
@@ -615,10 +705,32 @@ class RenderService:
         rs.program_traces = self.program_traces()
         if self.estimator is not None:
             rs.plan_signatures = len(self._used_sigs)
-        n = self.problem.n
+        if self._state_path is not None:
+            self.save_feedback_state()
+        n = self._n
         stacked = (np.concatenate(out, axis=0) if out
-                   else np.zeros((0, n, n), np.int32))
+                   else np.zeros((0, n, n), self._dtype))
         return stacked, rs
+
+    def save_feedback_state(self, path: Union[str, Path, None] = None) -> Path:
+        """Write the estimator snapshot as JSON (``feedback_state`` path
+        unless overridden). ``render()`` calls this automatically when
+        the service was constructed with ``feedback_state=``; streaming
+        callers (``stream_chunks``) invoke it at their own cadence."""
+        if self.estimator is None:
+            raise ValueError("no estimator to save -- service runs the "
+                             "uniform path (feedback= not set)")
+        target = self._state_path if path is None else Path(path)
+        if target is None:
+            raise ValueError("no feedback_state path configured; pass path=")
+        target.parent.mkdir(parents=True, exist_ok=True)
+        # atomic replace: a crash mid-save (the exact restart scenario
+        # feedback_state exists for) must never leave truncated JSON
+        # behind for the next construction to choke on
+        tmp = target.with_name(target.name + ".tmp")
+        tmp.write_text(json.dumps(self.estimator.snapshot()))
+        os.replace(tmp, target)
+        return target
 
 
 def main(argv=None):

@@ -1,8 +1,14 @@
-"""The paper's case study: Mandelbrot via Mariani-Silver subdivision."""
+"""The paper's case study: Mandelbrot via Mariani-Silver subdivision.
 
-from repro.mandelbrot.exhaustive import exhaustive
-from repro.mandelbrot.mariani_silver import (MandelbrotProblem, dispatch_batch,
-                                             solve, solve_batch)
+Back-compat facade over ``repro.workloads`` (the workload-parametric
+problem layer): ``MandelbrotProblem`` is ``FrameProblem`` with the
+registry's default ``mandelbrot`` spec, and ``solve`` / ``solve_batch``
+/ ``dispatch_batch`` are the same engine entry points, workload-generic.
+"""
 
-__all__ = ["exhaustive", "MandelbrotProblem", "solve", "solve_batch",
-           "dispatch_batch"]
+from repro.workloads.frame_problem import (FrameProblem, MandelbrotProblem,
+                                           dispatch_batch, exhaustive, solve,
+                                           solve_batch)
+
+__all__ = ["exhaustive", "FrameProblem", "MandelbrotProblem", "solve",
+           "solve_batch", "dispatch_batch"]

@@ -1,22 +1,7 @@
-"""Ex: the flat one-kernel baseline (paper Sec. 6.1, implementation 1)."""
+"""Back-compat shim: the Ex baseline moved to
+``repro.workloads.frame_problem.exhaustive`` (it is workload-parametric
+now; imported without ``workload=`` it is the seed Mandelbrot kernel)."""
 
-from __future__ import annotations
+from repro.workloads.frame_problem import exhaustive
 
-import time
-from typing import Tuple
-
-import jax
-
-from repro.core.ask import ASKStats
-from repro.kernels import ops, ref
-
-
-def exhaustive(n: int, *, max_dwell: int = 512, bounds=ref.DEFAULT_BOUNDS,
-               block=(256, 256), backend: str = "pallas") -> Tuple[jax.Array, ASKStats]:
-    """One flat kernel over the whole n x n domain; W_E = n^2 * A."""
-    t0 = time.perf_counter()
-    canvas = ops.mandelbrot(
-        n, bounds=bounds, max_dwell=max_dwell, block=block, backend=backend)
-    canvas = jax.block_until_ready(canvas)
-    stats = ASKStats(levels=0, kernel_launches=1, wall_s=time.perf_counter() - t0)
-    return canvas, stats
+__all__ = ["exhaustive"]

@@ -1,224 +1,11 @@
-"""Mariani-Silver subdivision for the Mandelbrot set (paper Sec. 6).
+"""Back-compat shim: the Mariani-Silver problem layer moved to
+``repro.workloads.frame_problem`` when the stack went workload-parametric
+(the Mandelbrot set is the registry's default workload, so
+``MandelbrotProblem`` is ``FrameProblem`` with its default spec -- same
+fields, same compute, same hash/equality for the compile caches)."""
 
-``MandelbrotProblem`` implements the ``ASKProblem`` adapter, so the same
-object runs under all three drivers the paper compares:
+from repro.workloads.frame_problem import (FrameProblem, MandelbrotProblem,
+                                           dispatch_batch, solve, solve_batch)
 
-  Ex   -- ``repro.mandelbrot.exhaustive``        (one flat kernel)
-  DP   -- ``repro.core.dp_emul.run_dp``          (one dispatch per tree node)
-  ASK  -- ``repro.core.ask.run_ask`` / ``run_ask_fused``  (one per level)
-
-Per level, ``level_step`` performs:
-  Q (perimeter query)            kernels/perimeter_query.py
-  T (fill homogeneous regions)   kernels/region_fill.py
-  subdivide flags                for the driver's OLT step
-and ``leaf_step`` performs the last-level application work A
-(kernels/region_dwell.py).
-
-The fill-OLT compaction inside level_step uses jnp.nonzero(size=...) --
-shape-static, so the whole step stays jittable; padding rows duplicate the
-first live row (see region_fill.py for why duplicates, not masks).
-"""
-
-from __future__ import annotations
-
-import dataclasses
-from typing import Any, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ops, ref
-
-__all__ = ["MandelbrotProblem", "solve", "solve_batch", "dispatch_batch"]
-
-
-@dataclasses.dataclass(frozen=True)
-class MandelbrotProblem:
-    """ASKProblem adapter for Mariani-Silver Mandelbrot."""
-
-    n: int
-    g: int = 2
-    r: int = 2
-    B: int = 32
-    max_dwell: int = 512
-    bounds: Tuple[float, float, float, float] = ref.DEFAULT_BOUNDS
-    scheme: str = "sbr"  # "sbr" | "mbr"  (paper Sec. 4.3)
-    tile: int = 256  # MBR tile side
-    backend: str = "pallas"  # "pallas" | "jnp"
-
-    def __post_init__(self):
-        if self.n % self.g:
-            raise ValueError("n must be divisible by g")
-        side = self.n // self.g
-        while side > self.B:
-            if side % self.r:
-                raise ValueError(
-                    f"subdivision chain broken: side {side} not divisible by r={self.r}")
-            side //= self.r
-
-    # -- ASKProblem protocol ------------------------------------------------
-
-    def init_state(self) -> jax.Array:
-        return jnp.zeros((self.n, self.n), dtype=jnp.int32)
-
-    def root_coords(self) -> jax.Array:
-        g = self.g
-        cy, cx = jnp.meshgrid(jnp.arange(g), jnp.arange(g), indexing="ij")
-        return jnp.stack([cy.ravel(), cx.ravel()], axis=-1).astype(jnp.int32)
-
-    def region_side(self, level: int) -> int:
-        return self.n // (self.g * self.r ** level)
-
-    def level_step(self, state: jax.Array, coords: jax.Array,
-                   valid: jax.Array, *, level: int,
-                   bounds=None) -> Tuple[jax.Array, jax.Array]:
-        bounds = self.bounds if bounds is None else bounds
-        side = self.region_side(level)
-        homog, common = ops.perimeter_query(
-            coords, side=side, n=self.n, bounds=bounds,
-            max_dwell=self.max_dwell, backend=self.backend)
-        homog = jnp.logical_and(homog, valid)
-
-        # compact fill-OLT; pad with duplicates of the first live row
-        cap = coords.shape[0]
-        (idx,) = jnp.nonzero(homog, size=cap, fill_value=0)
-        count = jnp.sum(homog.astype(jnp.int32))
-        live = jnp.arange(cap) < count
-        idx = jnp.where(live, idx, idx[0])
-        fill_coords = coords[idx]
-        fill_vals = common[idx]
-        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
-        state = ops.region_fill(
-            state, fill_coords, fill_vals, nonempty, side=side, n=self.n,
-            scheme=self.scheme, tile=self.tile, backend=self.backend)
-
-        subdivide = jnp.logical_and(valid, jnp.logical_not(homog))
-        return state, subdivide
-
-    def leaf_step(self, state: jax.Array, coords: jax.Array,
-                  valid: jax.Array, *, level: int, bounds=None) -> jax.Array:
-        bounds = self.bounds if bounds is None else bounds
-        side = self.region_side(level)
-        # duplicate-pad the invalid tail (idempotent recompute)
-        cap = coords.shape[0]
-        count = jnp.sum(valid.astype(jnp.int32))
-        idx = jnp.where(jnp.arange(cap) < count, jnp.arange(cap), 0)
-        coords = coords[idx]
-        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
-        return ops.region_dwell(
-            state, coords, nonempty, side=side, n=self.n, bounds=bounds,
-            max_dwell=self.max_dwell, scheme=self.scheme, tile=self.tile,
-            backend=self.backend)
-
-    # -- dynamic-parameter protocol (batched frame serving) -----------------
-    # ``extra`` is a traced [4] bounds array: one complex-plane window per
-    # frame in the vmapped ask_scan pipeline. The kernels route to the
-    # traced-bounds jnp path automatically (ops._bounds_traced).
-
-    def level_step_dyn(self, state, coords, valid, *, level: int, extra):
-        return self.level_step(state, coords, valid, level=level,
-                               bounds=extra)
-
-    def leaf_step_dyn(self, state, coords, valid, *, level: int, extra):
-        return self.leaf_step(state, coords, valid, level=level,
-                              bounds=extra)
-
-
-def solve(problem: MandelbrotProblem, method: str = "ask", **kw):
-    """Convenience dispatcher: method in {ex, ask, ask_fused, ask_scan, dp}."""
-    if method == "ex":
-        from repro.mandelbrot.exhaustive import exhaustive
-        return exhaustive(problem.n, max_dwell=problem.max_dwell,
-                          bounds=problem.bounds, backend=problem.backend)
-    if method == "ask":
-        from repro.core.ask import run_ask
-        return run_ask(problem, **kw)
-    if method == "ask_fused":
-        from repro.core.ask import run_ask_fused
-        return run_ask_fused(problem, **kw)
-    if method == "ask_scan":
-        from repro.core.ask import run_ask_scan
-        return run_ask_scan(problem, **kw)
-    if method == "dp":
-        from repro.core.dp_emul import run_dp
-        return run_dp(problem, **kw)
-    raise ValueError(f"unknown method {method!r}")
-
-
-def _bounds_array(bounds_batch) -> jax.Array:
-    bounds_arr = jnp.asarray(bounds_batch, jnp.float32)
-    if bounds_arr.ndim != 2 or bounds_arr.shape[1] != 4:
-        raise ValueError(f"bounds_batch must be [F, 4], got {bounds_arr.shape}")
-    return bounds_arr
-
-
-def solve_batch(problem: MandelbrotProblem, bounds_batch, *, mesh=None,
-                plan=None, **kw):
-    """Batched frame serving: render F frames in ONE XLA dispatch.
-
-    ``bounds_batch`` is [F, 4] (re0, im0, re1, im1) per frame -- a zoom
-    sequence or F tenants' viewports. The scan engine is vmapped over the
-    frame axis (see ``core.ask.run_ask_scan_batch``): per-level ring
-    capacities -- sized from the cost model's expected occupancy E_l =
-    g^2 (r^2 P)^l over the tau = log_r(n/(gB)) subdivision levels
-    (``cost_model.expected_level_counts`` / ``tau_levels``) -- are shared
-    across frames, overflow accounting is summed (and broken out per
-    frame in ``ASKStats.frame_overflow``). The dwell compute runs the
-    traced-bounds jnp path (identical math, so each frame is
-    bit-identical to a single-frame ``run_ask`` at those bounds).
-
-    ``mesh`` (a 1-D ``jax.sharding.Mesh``, see ``launch.mesh.
-    make_frames_mesh``) shards the frame axis across its devices
-    (``core.ask.run_ask_scan_sharded``): still one dispatch, frame counts
-    that don't divide the device count are padded and masked, and each
-    frame stays bit-identical to the unsharded batch. For streaming more
-    frames than fit one batch, see ``launch.render_service``.
-
-    ``plan`` switches to the occupancy-aware capacity planner
-    (``core.planner``) for heterogeneous batches -- deep-zoom frames get
-    a hotter effective P (hence a bigger ring) than wide frames, and any
-    frame that still overflows is re-planned automatically. Pass an int
-    (the bucket count K), True (default K), or a prebuilt
-    ``planner.CapacityPlan``. With ``observed=`` (a ``core.feedback.
-    OccupancyEstimator``) the plan blends MEASURED occupancy from
-    previous runs into the per-frame P instead of relying on the
-    zoom-depth prior alone (``planner.plan_frames``). The planned path
-    returns (canvases [F, n, n] numpy, ``planner.PlanReport``) -- whose
-    ``frame_p_subdiv`` / ``frame_p_source`` record the P that actually
-    sized each frame and where it came from -- and issues one compiled
-    program per bucket instead of one overall; the uniform path returns
-    (canvases [F, n, n], ASKStats).
-    """
-    bounds_arr = _bounds_array(bounds_batch)
-    if plan is not None and plan is not False:
-        from repro.core import planner as planner_lib
-        engine_only = {"capacities", "p_subdiv", "pad_to"} & kw.keys()
-        if engine_only:
-            raise ValueError(
-                f"{sorted(engine_only)} belong to the uniform path; the "
-                "planner sizes capacities itself -- tune num_buckets / "
-                "safety_factor / p_deep / slope / p_min / ref_width instead")
-        plan_obj = plan if isinstance(plan, planner_lib.CapacityPlan) else None
-        if plan_obj is None and not isinstance(plan, bool):
-            kw.setdefault("num_buckets", int(plan))
-        return planner_lib.solve_planned(problem, bounds_arr, plan=plan_obj,
-                                         mesh=mesh, **kw)
-    from repro.core.ask import run_ask_scan_batch, run_ask_scan_sharded
-    if mesh is None:
-        return run_ask_scan_batch(problem, bounds_arr, **kw)
-    return run_ask_scan_sharded(problem, bounds_arr, mesh=mesh, **kw)
-
-
-def dispatch_batch(problem: MandelbrotProblem, bounds_batch, *, mesh, **kw):
-    """Enqueue one sharded frame batch WITHOUT blocking (async serving).
-
-    The non-blocking half of ``solve_batch(..., mesh=...)``: returns a
-    ``core.ask.ShardedDispatch`` handle as soon as the XLA call is
-    enqueued; ``.finalize()`` yields the same (canvases, ASKStats). The
-    pipelined render service (``launch.render_service``) uses this to
-    overlap the host copy of chunk k with the device compute of chunk
-    k+1.
-    """
-    from repro.core.ask import dispatch_ask_scan_sharded
-    return dispatch_ask_scan_sharded(problem, _bounds_array(bounds_batch),
-                                     mesh=mesh, **kw)
+__all__ = ["FrameProblem", "MandelbrotProblem", "solve", "solve_batch",
+           "dispatch_batch"]

@@ -1,0 +1,37 @@
+"""Workload-parametric problem layer: one engine stack, many workloads.
+
+``WorkloadSpec`` (spec.py) packages a self-similar density workload --
+point function, homogeneity predicate, default window, zoom-depth prior
+band, palette/dtype; the registry (registry.py) ships mandelbrot, julia,
+burning_ship, multibrot and the generated ``ssd_synth`` field; and
+``FrameProblem`` (frame_problem.py) adapts any of them to the
+``ASKProblem`` protocol, so every engine (ex/dp/ask/ask_fused/ask_scan),
+the capacity planner, the feedback estimator, and the render service
+serve every registered workload. ``repro.mandelbrot`` re-exports the
+case-study names for back-compat.
+"""
+
+from repro.workloads.frame_problem import (FrameProblem, MandelbrotProblem,
+                                           dispatch_batch, exhaustive, solve,
+                                           solve_batch)
+from repro.workloads.registry import (available, escape_time_workloads,
+                                      get_workload, julia, multibrot,
+                                      register, ssd_synth)
+from repro.workloads.spec import WorkloadSpec
+
+__all__ = [
+    "WorkloadSpec",
+    "register",
+    "get_workload",
+    "available",
+    "escape_time_workloads",
+    "julia",
+    "multibrot",
+    "ssd_synth",
+    "FrameProblem",
+    "MandelbrotProblem",
+    "exhaustive",
+    "solve",
+    "solve_batch",
+    "dispatch_batch",
+]

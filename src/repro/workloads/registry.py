@@ -1,0 +1,239 @@
+"""The workload registry: canonical ``WorkloadSpec`` instances by name.
+
+Built-ins (all servable through every engine, planner, and service
+layer -- the golden tier pins the escape-time ones bit-identically
+across the full engine ladder):
+
+  mandelbrot    z -> z^2 + c, z0 = c (the paper's Sec. 6 case study;
+                identical compute to the pre-workload kernels)
+  julia         z -> z^2 + c0 over the dynamic plane (c0 a workload
+                parameter; ``julia(c=...)`` builds other members)
+  burning_ship  z -> (|Re z| + i|Im z|)^2 + c
+  multibrot     z -> z^m + c (default m=3; ``multibrot(m=...)``)
+  ssd_synth     a generated 2-D SSD field (paper Sec. 7) served as a
+                grid workload: the ONLY setting where the prior band is
+                exact, because the generator's P is known
+
+Canonicalisation matters: specs are jit-cache keys (see spec.py), so
+``get_workload("julia") is get_workload("julia")`` and parametric
+factories memoise per parameter -- two calls to ``multibrot(m=4)``
+return the SAME object. ``register`` accepts a spec or a zero-arg
+factory (lazy: the ``ssd_synth`` field is only generated when first
+requested).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.workloads.spec import WorkloadSpec
+
+__all__ = ["register", "get_workload", "available", "escape_time_workloads",
+           "julia", "multibrot", "ssd_synth", "DEFAULT_JULIA_C"]
+
+# lazily-resolved registry: name -> WorkloadSpec | zero-arg factory
+_REGISTRY: Dict[str, Union[WorkloadSpec, Callable[[], WorkloadSpec]]] = {}
+# name -> kind, recorded at registration so kind queries (e.g. the
+# golden tier's escape-time filter) never force a lazy factory
+_KINDS: Dict[str, str] = {}
+
+
+def register(name: str, spec_or_factory, *, kind: Union[str, None] = None,
+             overwrite: bool = False) -> None:
+    """Register a spec (or a zero-arg factory building one) under ``name``.
+
+    ``kind`` declares a factory's workload kind without building it
+    (defaults to "escape"; specs carry their own and ignore it) -- this
+    is what keeps expensive grid factories (a generated field) lazy
+    under kind filtering like ``escape_time_workloads``.
+    """
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"workload {name!r} already registered")
+    _REGISTRY[name] = spec_or_factory
+    if isinstance(spec_or_factory, WorkloadSpec):
+        _KINDS[name] = spec_or_factory.kind
+    else:
+        _KINDS[name] = "escape" if kind is None else kind
+
+
+def get_workload(workload: Union[str, WorkloadSpec]) -> WorkloadSpec:
+    """Resolve a name (or pass a spec through) to the canonical instance."""
+    if isinstance(workload, WorkloadSpec):
+        return workload
+    entry = _REGISTRY.get(workload)
+    if entry is None:
+        raise KeyError(
+            f"unknown workload {workload!r}; registered: {available()}")
+    if not isinstance(entry, WorkloadSpec):
+        entry = entry()
+        if entry.name != workload:
+            raise ValueError(
+                f"factory for {workload!r} built a spec named {entry.name!r}")
+        if entry.kind != _KINDS[workload]:
+            raise ValueError(
+                f"factory for {workload!r} was registered as kind "
+                f"{_KINDS[workload]!r} but built a {entry.kind!r} spec")
+        _REGISTRY[workload] = entry  # resolve the factory once
+    return entry
+
+
+def available() -> Tuple[str, ...]:
+    """Registered workload names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def escape_time_workloads() -> Tuple[str, ...]:
+    """Names of the registered escape-time workloads (the set the golden
+    tier parametrizes over -- grid workloads are pinned against their
+    own generated field instead of a checked-in image). Reads the
+    registration-time kind record, so lazy factories stay unbuilt."""
+    return tuple(name for name in _REGISTRY if _KINDS[name] == "escape")
+
+
+# ---------------------------------------------------------------------------
+# escape-time built-ins
+# ---------------------------------------------------------------------------
+
+MANDELBROT = WorkloadSpec(
+    name="mandelbrot",
+    init=ref.mandelbrot_init,
+    step=ref.mandelbrot_step,
+    default_bounds=ref.DEFAULT_BOUNDS,
+    # the calibrated seed prior (planner.P_DEEP_DEFAULT and friends keep
+    # these same values as the spec-less fallback)
+    p_deep=0.97, slope=0.18, p_min=0.3,
+)
+
+# the classic dendrite-adjacent Julia parameter; its set threads through
+# most of the default window, so the subdivision tree stays busy
+DEFAULT_JULIA_C = (-0.7269, 0.1889)
+
+_JULIA_CACHE: Dict[Tuple[float, float], WorkloadSpec] = {}
+
+
+def julia(c: Tuple[float, float] = DEFAULT_JULIA_C) -> WorkloadSpec:
+    """Julia set of z -> z^2 + c0: the pixel maps to z0 (dynamic plane)
+    and ``c`` is a workload parameter. Memoised per ``c``."""
+    key = (float(c[0]), float(c[1]))
+    spec = _JULIA_CACHE.get(key)
+    if spec is None:
+        c_re, c_im = key
+
+        def step(zr, zi, cr, ci):
+            return zr * zr - zi * zi + c_re, 2.0 * zr * zi + c_im
+
+        name = ("julia" if key == DEFAULT_JULIA_C
+                else f"julia(c={c_re:+g}{c_im:+g}j)")
+        spec = WorkloadSpec(
+            name=name, init=ref.mandelbrot_init, step=step,
+            default_bounds=(-1.6, -1.6, 1.6, 1.6),
+            # the default-c dendrite threads the whole window (measured
+            # envelope P == 1.0 at depth >= 0, n=512 fit) and thins by
+            # ~0.22/zoom-out level: 0.75 / 0.50 / 0.36 measured at
+            # depths -1/-2/-3 (recipe: docs/workloads.md)
+            p_deep=0.97, slope=0.22, p_min=0.25)
+        _JULIA_CACHE[key] = spec
+    return spec
+
+
+BURNING_SHIP = WorkloadSpec(
+    name="burning_ship",
+    init=ref.mandelbrot_init,
+    step=lambda zr, zi, cr, ci: (
+        zr * zr - zi * zi + cr,  # (|a| + i|b|)^2 keeps a^2 - b^2 real part
+        2.0 * jnp.abs(zr) * jnp.abs(zi) + ci),
+    # window covering the main ship + the antenna row of smaller ships
+    default_bounds=(-2.5, -2.0, 1.5, 2.0),
+    # the |.| fold makes the escape boundary stringier than Mandelbrot's:
+    # hot on-boundary (measured envelope 1.0 at depth 0, n=512 fit),
+    # thinning faster zoomed out: 0.60 / 0.43 / 0.29 at depths -1/-2/-3
+    p_deep=0.95, slope=0.25, p_min=0.3,
+)
+
+_MULTIBROT_CACHE: Dict[int, WorkloadSpec] = {}
+
+
+def multibrot(m: int = 3) -> WorkloadSpec:
+    """Multibrot set of z -> z^m + c (z0 = c, like the Mandelbrot
+    spelling). Memoised per ``m``; ``m == 2`` is NOT aliased to
+    ``mandelbrot`` (the repeated-multiplication step is a different op
+    sequence, so it would not be bit-identical)."""
+    m = int(m)
+    if m < 2:
+        raise ValueError(f"multibrot needs m >= 2, got {m}")
+    spec = _MULTIBROT_CACHE.get(m)
+    if spec is None:
+
+        def step(zr, zi, cr, ci):
+            wr, wi = zr, zi
+            for _ in range(m - 1):  # z^m by repeated complex multiply
+                wr, wi = wr * zr - wi * zi, wr * zi + wi * zr
+            return wr + cr, wi + ci
+
+        name = "multibrot" if m == 3 else f"multibrot(m={m})"
+        spec = WorkloadSpec(
+            name=name, init=ref.mandelbrot_init, step=step,
+            default_bounds=(-1.5, -1.5, 1.5, 1.5),
+            # m-fold symmetry multiplies boundary length: measured
+            # envelope 1.0 at depth 0 falling 0.75 / 0.50 / 0.36 at
+            # depths -1/-2/-3 (m=3, n=512 fit)
+            p_deep=0.96, slope=0.2, p_min=0.3)
+        _MULTIBROT_CACHE[m] = spec
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# grid built-in: the Sec. 7 synthetic SSD field as a servable workload
+# ---------------------------------------------------------------------------
+
+_SSD_CACHE: Dict[Tuple[int, int, int, int, int, float], WorkloadSpec] = {}
+
+
+def ssd_synth(seed: int = 0, *, n_field: int = 256, g: int = 4, r: int = 2,
+              B: int = 16, P: float = 0.7) -> WorkloadSpec:
+    """A generated 2-D SSD field (``core.ssd_synth.generate_field``,
+    k=2) served as a grid workload: the per-point value is a nearest
+    lookup into the field, the default window covers it exactly, and the
+    prior band is the generator's own P (slope 0: the process is
+    scale-free by construction) -- the one workload whose constant-P
+    assumption is exact, so planner predictions can be validated
+    quantitatively (paper Sec. 7 / Eq. 11).
+
+    With frame n == ``n_field`` on the default window, the subdivision
+    grid aligns with the generator's region edges, so Mariani-Silver's
+    border test is exact (a homogeneous perimeter really implies a
+    frozen region) and every engine reproduces the field bit for bit.
+    """
+    key = (int(seed), int(n_field), int(g), int(r), int(B), float(P))
+    spec = _SSD_CACHE.get(key)
+    if spec is None:
+        from repro.core.ssd_synth import generate_field
+
+        fld = generate_field(key[0], n=key[1], g=key[2], r=key[3], B=key[4],
+                             P=key[5], k=2)
+        field = jnp.asarray(fld.field)
+        nf = key[1]
+
+        def grid_fn(cr, ci):
+            fy = jnp.clip(ci.astype(jnp.int32), 0, nf - 1)
+            fx = jnp.clip(cr.astype(jnp.int32), 0, nf - 1)
+            return field[fy, fx]
+
+        name = ("ssd_synth" if key == (0, 256, 4, 2, 16, 0.7)
+                else f"ssd_synth(seed={key[0]},n={key[1]},P={key[5]:g})")
+        spec = WorkloadSpec(
+            name=name, kind="grid", grid_fn=grid_fn,
+            default_bounds=(0.0, 0.0, float(nf), float(nf)),
+            p_deep=key[5], slope=0.0, p_min=key[5])
+        _SSD_CACHE[key] = spec
+    return spec
+
+
+register("mandelbrot", MANDELBROT)
+register("julia", julia)
+register("burning_ship", BURNING_SHIP)
+register("multibrot", multibrot)
+register("ssd_synth", ssd_synth, kind="grid")

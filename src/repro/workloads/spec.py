@@ -1,0 +1,140 @@
+"""WorkloadSpec: the contract a self-similar-density workload satisfies.
+
+The paper states its cost model and the ASK machinery for *self-similar
+density workloads* in general -- the Mandelbrot set is only the case
+study (Sec. 6), and Sec. 7 extends the claims to synthetic k-D SSD
+fields. A ``WorkloadSpec`` packages everything the engine stack needs to
+serve one such workload:
+
+* the **per-point function** -- either an escape-time iteration
+  (``init``/``step``/``escape_radius2``, run by the shared
+  ``kernels.ref.escape_time`` loop so every workload reuses the ONE
+  kernel body, Pallas and jnp alike) or a **grid** lookup into a
+  generated field (``grid_fn``, the Sec. 7 synthetic-SSD scenario);
+* the **homogeneity predicate** is shared by construction: a region is
+  homogeneous iff all its perimeter values agree (Mariani-Silver's
+  border test) -- what varies per workload is only the value function,
+  so ``homogeneous(values)`` lives here as one overridable hook;
+* the **default window** (``default_bounds``) anchoring zoom depth 0
+  for the capacity planner;
+* the **zoom-depth prior band** (``p_deep``/``slope``/``p_min``) --
+  the per-workload effective-subdivision-probability prior
+  ``core.planner.effective_p_subdiv`` evaluates, replacing the global
+  Mandelbrot constants;
+* presentation metadata (``dtype`` of the canvas, ``palette_maxval``
+  for PGM rendering).
+
+Specs are **frozen and hashable** -- they ride inside ``FrameProblem``
+(itself a frozen dataclass) into the jitted-pipeline caches of
+``core.ask``, so a registered spec is a stable compile-cache key. Use
+the registry (``repro.workloads.registry``) to obtain canonical
+instances; ad-hoc specs work too but each new instance is a new cache
+key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+__all__ = ["WorkloadSpec"]
+
+Bounds = Tuple[float, float, float, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One self-similar density workload, engine-stack ready.
+
+    ``kind`` selects the per-point machinery:
+
+    * ``"escape"`` -- ``values`` runs ``kernels.ref.escape_time`` with
+      this spec's ``init``/``step``/``escape_radius2``. Pure arithmetic,
+      so the same spec flows into the Pallas kernel bodies (static
+      ``workload=`` argument) and the jnp oracles bit-identically.
+    * ``"grid"`` -- ``values`` calls ``grid_fn(cr, ci)``: a lookup into
+      a precomputed field (``registry.ssd_synth``). Gather-based, so
+      ``kernels.ops`` routes it through the jnp path on every backend.
+    """
+
+    name: str
+    kind: str = "escape"  # "escape" | "grid"
+    init: Callable = ref.mandelbrot_init  # (cr, ci) -> (zr0, zi0)
+    step: Callable = ref.mandelbrot_step  # (zr, zi, cr, ci) -> (zr', zi')
+    grid_fn: Optional[Callable] = None  # (cr, ci) -> values (kind="grid")
+    escape_radius2: float = 4.0
+    default_bounds: Bounds = ref.DEFAULT_BOUNDS
+    # per-workload zoom-depth prior band (planner.effective_p_subdiv):
+    # P saturates at p_deep on-boundary and falls off `slope` per
+    # zoom-OUT level down to p_min. The Mandelbrot values are the
+    # calibrated seed fit (planner.P_DEEP_DEFAULT and friends).
+    p_deep: float = 0.97
+    slope: float = 0.18
+    p_min: float = 0.3
+    dtype: Any = jnp.int32  # canvas dtype (init_state)
+    palette_maxval: Optional[int] = None  # PGM maxval; None => max_dwell
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError(
+                "WorkloadSpec needs a non-empty name: it keys estimator "
+                "namespaces (\"\" is the reserved default namespace) and "
+                "registry lookups")
+        if self.kind not in ("escape", "grid"):
+            raise ValueError(f"kind must be 'escape' or 'grid', got {self.kind!r}")
+        if self.kind == "grid" and self.grid_fn is None:
+            raise ValueError(f"grid workload {self.name!r} needs grid_fn")
+        if not 0.0 < self.p_min <= self.p_deep <= 1.0:
+            raise ValueError(
+                f"{self.name!r}: need 0 < p_min <= p_deep <= 1, got "
+                f"{self.p_min}/{self.p_deep}")
+        if self.slope < 0:
+            raise ValueError(f"{self.name!r}: slope must be >= 0, got {self.slope}")
+        if len(self.default_bounds) != 4:
+            raise ValueError(f"{self.name!r}: default_bounds must be length 4")
+
+    # -- the per-point function --------------------------------------------
+
+    def values(self, cr: jax.Array, ci: jax.Array, max_dwell: int) -> jax.Array:
+        """Point values at mapped plane coordinates (THE function every
+        kernel body and oracle calls; see ``kernels.ref.dwell_compute``)."""
+        if self.kind == "grid":
+            return self.grid_fn(cr, ci)
+        return ref.escape_time(cr, ci, max_dwell, init=self.init,
+                               step=self.step,
+                               escape_radius2=self.escape_radius2)
+
+    # -- homogeneity predicate ---------------------------------------------
+
+    @staticmethod
+    def region_equal(values: jax.Array, first: jax.Array) -> jax.Array:
+        """Elementwise homogeneity predicate: does each perimeter value
+        match the region's reference value? The engines reduce this with
+        ``jnp.all`` over the perimeter (Mariani-Silver's border test).
+
+        Exact equality is shared by every registered workload
+        (escape-time dwell bands AND generated SSD fields freeze whole
+        regions to constants); it is a spec hook so exotic workloads can
+        widen it (e.g. tolerance bands) without touching the engines.
+        """
+        return values == first
+
+    # -- planner hooks ------------------------------------------------------
+
+    @property
+    def prior_band(self) -> Tuple[float, float, float]:
+        """(p_deep, slope, p_min) -- the zoom-depth prior the capacity
+        planner and the feedback estimator fall back to for this
+        workload."""
+        return (self.p_deep, self.slope, self.p_min)
+
+    @property
+    def width(self) -> float:
+        """Width of the default window: the depth-0 anchor of
+        ``planner.zoom_depth`` for this workload."""
+        return float(self.default_bounds[2]) - float(self.default_bounds[0])

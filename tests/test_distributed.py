@@ -157,7 +157,7 @@ def test_render_service_feedback_sharded():
         assert rs.overflow_dropped == 0
         assert rs.chunk_stats[0].p_source == "prior"
         assert any(c.p_source == "measured" for c in rs.chunk_stats[1:])
-        for width, caps in svc._used_sigs:
+        for _key, width, caps in svc._used_sigs:
             assert width % 8 == 0, (width, caps)
         ref, _ = run_ask_scan_batch(
             prob, jnp.asarray(np.asarray(bounds, np.float32)),

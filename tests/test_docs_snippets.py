@@ -44,7 +44,7 @@ def test_docs_exist_and_have_examples():
     files = _doc_files()
     names = {f.name for f in files}
     assert {"README.md", "architecture.md", "capacity-planning.md",
-            "serving.md", "feedback.md"} <= names, names
+            "serving.md", "feedback.md", "workloads.md"} <= names, names
     assert sum(len(_snippets(f)) for f in files) >= 8
 
 

@@ -242,10 +242,13 @@ def test_observe_report_closes_the_batch_loop():
     bounds = [(-1.5, -1.0, 0.5, 1.0), (-5.0, -4.0, 3.0, 4.0)]
     est = feedback.OccupancyEstimator()
     _, rep = solve_batch(prob, bounds, plan=2, observed=est)
+    assert rep.plan.workload == "mandelbrot"  # stamped by plan_frames
     est.observe_report(rep, g=prob.g, r=prob.r)
     assert est.chunks_observed == 1 and not est.is_cold
-    # snapshot keys are bucket-centre depths of the two frames
-    snap = est.snapshot()
+    assert est.workloads_observed() == ("mandelbrot",)
+    # bucket keys are bucket-centre depths of the two frames, filed in
+    # the plan's workload namespace
+    snap = est.buckets(rep.plan.workload)
     depths = [e.depth for e in rep.plan.estimates]
     for d in depths:
         b = round(d / est.depth_quantum) * est.depth_quantum
@@ -273,3 +276,53 @@ def test_single_frame_stats_chain():
     _, st_one = run_ask_scan(prob, safety_factor=1e9)
     (chain,) = st_one.frame_chains()
     assert chain == (st_one.region_counts, st_one.leaf_count)
+
+
+# ---------------------------------------------------------------------------
+# persistence: snapshot()/restore() JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_round_trip_is_exact():
+    """A restored estimator is indistinguishable from the original:
+    same predictions at every depth (all namespaces), same counters,
+    same continued EWMA dynamics -- through an actual JSON encode."""
+    import json
+
+    est = feedback.OccupancyEstimator(alpha=0.25, depth_quantum=0.4,
+                                      p_quantum=0.1, slope=0.2)
+    est.observe_value(-2.3, 0.41)
+    est.observe_value(0.7, 0.88)
+    est.observe_value(0.7, 0.7)  # a second EWMA step in the same bucket
+    est.observe_value(1.0, 0.66, workload="julia")  # registry band learned
+    est.observe_frames([0.0], [_chain_from_p(0.8, g=4, r=2, levels=3)],
+                       g=4, r=2, workload="burning_ship")
+
+    wire = json.dumps(est.snapshot())  # must be JSON-clean
+    back = feedback.OccupancyEstimator.restore(json.loads(wire))
+
+    assert back.frames_observed == est.frames_observed
+    assert back.chunks_observed == est.chunks_observed
+    assert back.workloads_observed() == est.workloads_observed()
+    for wl in (None, "julia", "burning_ship"):
+        assert back.buckets(wl) == est.buckets(wl)
+        for d in (-4.0, -2.3, 0.0, 0.7, 1.0, 3.0):
+            assert back.predict(d, workload=wl) == est.predict(d, workload=wl)
+            assert back.predict_quantized(d, workload=wl) == \
+                est.predict_quantized(d, workload=wl)
+            assert back.measured(d, workload=wl) == est.measured(d, workload=wl)
+    # and the dynamics continue identically after the restore
+    est.observe_value(0.7, 0.5)
+    back.observe_value(0.7, 0.5)
+    assert back.measured(0.7) == pytest.approx(est.measured(0.7))
+
+
+def test_snapshot_restore_empty_and_versioning():
+    import json
+
+    cold = feedback.OccupancyEstimator(p_deep=0.9)
+    back = feedback.OccupancyEstimator.restore(
+        json.loads(json.dumps(cold.snapshot())))
+    assert back.is_cold and back.p_deep == 0.9
+    assert back.predict(0.0) == cold.predict(0.0)
+    with pytest.raises(ValueError, match="version"):
+        feedback.OccupancyEstimator.restore({"version": 99})

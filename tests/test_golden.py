@@ -1,21 +1,24 @@
-"""Golden-image regression tests: every engine renders the paper's
-Mandelbrot viewport bit-identically to ONE checked-in reference canvas.
+"""Golden-image regression tests: every engine renders every registered
+escape-time workload's default viewport bit-identically to ONE
+checked-in reference canvas per workload.
 
-The reference (``tests/golden/mandelbrot_256.pgm``) is a raw (P5) PGM of
-the dwell canvas itself -- maxval equals ``max_dwell`` and every stored
-byte IS a dwell value, so decoding is exact and "bit-identical" means
-the int32 canvas, not a rescaled rendering. The adaptive machinery
-(capacity planner, overflow retry, measured-occupancy feedback) resizes
-rings and reshuffles dispatches but may NEVER change pixels; these tests
-are the tripwire.
+Each reference (``tests/golden/<workload>_256.pgm``) is a raw (P5) PGM
+of the dwell canvas itself -- maxval equals ``max_dwell`` and every
+stored byte IS a dwell value, so decoding is exact and "bit-identical"
+means the int32 canvas, not a rescaled rendering. The adaptive
+machinery (capacity planner, overflow retry, measured-occupancy
+feedback) resizes rings and reshuffles dispatches but may NEVER change
+pixels -- for ANY workload; these tests are the tripwire, parametrized
+over (workload, engine) so a new workload is pinned across the full
+engine ladder the moment its golden lands.
 
 Regenerate after an intentional change to the canonical config with::
 
     PYTHONPATH=src python tests/test_golden.py
 
-which writes the reference from the paper-faithful serial engine
-(``run_ask``) and prints its checksum. The diff then shows up in review
-as a binary-file change -- silent drift cannot.
+which writes every workload's reference from the paper-faithful serial
+engine (``run_ask``) and prints the checksums. The diff then shows up
+in review as binary-file changes -- silent drift cannot.
 """
 
 import sys
@@ -25,119 +28,170 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-GOLDEN = Path(__file__).resolve().parent / "golden" / "mandelbrot_256.pgm"
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
 
-# the canonical config: the paper's benchmark viewport (DEFAULT_BOUNDS,
-# the full upper-half view of the set) at the checked-in reference size
+# the canonical config: each workload's default viewport at the
+# checked-in reference size (the mandelbrot golden is DEFAULT_BOUNDS,
+# the paper's benchmark window -- unchanged from the pre-workload tier)
 N = 256
 MAX_DWELL = 128
 
+# every registered escape-time workload (grid workloads are pinned
+# against their own generated field in test_workloads.py instead)
+WORKLOADS = ("mandelbrot", "julia", "burning_ship", "multibrot")
 
-def _problem():
-    from repro.mandelbrot import MandelbrotProblem
+# workloads whose default viewport contains interior (dwell-cap) pixels;
+# dynamic-plane julia at the default c is a dust/dendrite boundary and
+# may legitimately cap out below max_dwell
+CAPPED = ("mandelbrot", "burning_ship", "multibrot")
 
-    return MandelbrotProblem(n=N, g=4, r=2, B=16, max_dwell=MAX_DWELL,
-                             backend="jnp")
+
+def golden_path(workload: str) -> Path:
+    return GOLDEN_DIR / f"{workload}_{N}.pgm"
 
 
-def read_golden() -> np.ndarray:
-    """Decode the checked-in reference into the int32 dwell canvas."""
-    raw = GOLDEN.read_bytes()
+def _problem(workload: str):
+    from repro.workloads import FrameProblem
+
+    return FrameProblem(n=N, g=4, r=2, B=16, max_dwell=MAX_DWELL,
+                        backend="jnp", workload=workload)
+
+
+def _maxval(workload: str) -> int:
+    """PGM maxval for one workload: the spec's palette hint, else the
+    canonical max_dwell (dwell canvases store dwells byte-exactly)."""
+    from repro.workloads import get_workload
+
+    return get_workload(workload).palette_maxval or MAX_DWELL
+
+
+def read_golden(workload: str) -> np.ndarray:
+    """Decode a checked-in reference into its int32 dwell canvas."""
+    raw = golden_path(workload).read_bytes()
     header, pixels = raw.split(b"\n", 1)
     magic, w, h, maxval = header.split()
-    assert magic == b"P5" and int(maxval) == MAX_DWELL, header
+    assert magic == b"P5" and int(maxval) == _maxval(workload), header
     img = np.frombuffer(pixels, dtype=np.uint8).reshape(int(h), int(w))
     return img.astype(np.int32)
 
 
-def write_golden() -> np.ndarray:
-    """Render the reference with the paper-faithful engine and write it."""
+def write_golden(workload: str) -> np.ndarray:
+    """Render one reference with the paper-faithful engine and write it."""
     from repro.core.ask import run_ask
 
-    canvas, stats = run_ask(_problem())
+    canvas, stats = run_ask(_problem(workload))
     img = np.asarray(canvas)
-    assert img.max() <= MAX_DWELL <= 255  # bytes store dwells exactly
-    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
-    with open(GOLDEN, "wb") as f:
-        f.write(f"P5 {img.shape[1]} {img.shape[0]} {MAX_DWELL}\n".encode())
+    maxval = _maxval(workload)
+    assert img.max() <= maxval <= 255  # bytes store values exactly
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    with open(golden_path(workload), "wb") as f:
+        f.write(f"P5 {img.shape[1]} {img.shape[0]} {maxval}\n".encode())
         f.write(img.astype(np.uint8).tobytes())
     return img
 
 
 @pytest.fixture(scope="module")
 def golden():
-    assert GOLDEN.exists(), (
-        f"{GOLDEN} missing -- regenerate with "
-        "`PYTHONPATH=src python tests/test_golden.py`")
-    return read_golden()
+    """Memoised per-workload reference loader."""
+    cache = {}
+
+    def get(workload: str) -> np.ndarray:
+        if workload not in cache:
+            path = golden_path(workload)
+            assert path.exists(), (
+                f"{path} missing -- regenerate with "
+                "`PYTHONPATH=src python tests/test_golden.py`")
+            cache[workload] = read_golden(workload)
+        return cache[workload]
+
+    return get
 
 
-def test_golden_file_is_self_consistent(golden):
-    assert golden.shape == (N, N)
-    assert golden.dtype == np.int32
-    assert 0 < golden.max() <= MAX_DWELL
-    # interior pixels hit the dwell cap in this viewport
-    assert (golden == MAX_DWELL).any()
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_golden_file_is_self_consistent(golden, workload):
+    img = golden(workload)
+    assert img.shape == (N, N)
+    assert img.dtype == np.int32
+    assert 0 < img.max() <= MAX_DWELL
+    if workload in CAPPED:  # interior pixels hit the dwell cap
+        assert (img == MAX_DWELL).any()
 
 
-def _assert_matches(canvas, golden, engine):
+def test_goldens_are_distinct():
+    """Four workloads, four different pictures: a copy-paste golden (or
+    a workload whose point function silently fell back to Mandelbrot)
+    cannot pass."""
+    crcs = {w: zlib.crc32(read_golden(w).tobytes()) for w in WORKLOADS}
+    assert len(set(crcs.values())) == len(WORKLOADS), crcs
+
+
+def _assert_matches(canvas, reference, label):
     canvas = np.asarray(canvas)
-    if not np.array_equal(canvas, golden):
-        diff = int(np.count_nonzero(canvas != golden))
-        pytest.fail(f"{engine}: {diff} pixels differ from the golden "
+    if not np.array_equal(canvas, reference):
+        diff = int(np.count_nonzero(canvas != reference))
+        pytest.fail(f"{label}: {diff} pixels differ from the golden "
                     f"reference (crc {zlib.crc32(canvas.tobytes()):#x} vs "
-                    f"{zlib.crc32(golden.tobytes()):#x})")
+                    f"{zlib.crc32(reference.tobytes()):#x})")
 
 
-def test_exhaustive_matches_golden(golden):
-    from repro.mandelbrot import solve
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_exhaustive_matches_golden(golden, workload):
+    from repro.workloads import solve
 
-    canvas, _ = solve(_problem(), "ex")
-    _assert_matches(canvas, golden, "exhaustive")
+    canvas, _ = solve(_problem(workload), "ex")
+    _assert_matches(canvas, golden(workload), f"exhaustive[{workload}]")
 
 
 def test_dp_emul_matches_golden(golden):
-    from repro.mandelbrot import solve
+    """The per-node DP driver (one dispatch per tree node, host syncs):
+    pinned on the seed workload only -- it is the slowest engine, and
+    its driver code is identical across workloads."""
+    from repro.workloads import solve
 
-    canvas, st = solve(_problem(), "dp")
-    _assert_matches(canvas, golden, "dp")
+    canvas, st = solve(_problem("mandelbrot"), "dp")
+    _assert_matches(canvas, golden("mandelbrot"), "dp")
     assert st.kernel_launches > 1  # really the per-node DP driver
 
 
-def test_ask_matches_golden(golden):
-    from repro.mandelbrot import solve
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_ask_matches_golden(golden, workload):
+    from repro.workloads import solve
 
-    canvas, _ = solve(_problem(), "ask")
-    _assert_matches(canvas, golden, "ask")
+    canvas, _ = solve(_problem(workload), "ask")
+    _assert_matches(canvas, golden(workload), f"ask[{workload}]")
 
 
-def test_ask_scan_matches_golden(golden):
-    from repro.mandelbrot import solve
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_ask_scan_matches_golden(golden, workload):
+    from repro.workloads import solve
 
-    canvas, st = solve(_problem(), "ask_scan", safety_factor=1e9)
-    _assert_matches(canvas, golden, "ask_scan")
+    canvas, st = solve(_problem(workload), "ask_scan", safety_factor=1e9)
+    _assert_matches(canvas, golden(workload), f"ask_scan[{workload}]")
     assert st.overflow_dropped == 0 and st.kernel_launches == 1
 
 
-def test_planned_matches_golden(golden):
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_planned_matches_golden(golden, workload):
     """The capacity-planned batch path: planning may resize rings and
-    retry, never change pixels."""
-    from repro.mandelbrot import solve_batch
+    retry -- from each workload's OWN prior band -- never change pixels."""
+    from repro.workloads import solve_batch
 
-    prob = _problem()
+    prob = _problem(workload)
     canvases, rep = solve_batch(prob, [prob.bounds], plan=2)
     assert rep.overflow_dropped == 0
-    _assert_matches(canvases[0], golden, "planned")
+    assert rep.plan.workload == workload
+    _assert_matches(canvases[0], golden(workload), f"planned[{workload}]")
 
 
-def test_feedback_matches_golden(golden):
-    """The closed-loop feedback path: chunk 0 plans from the prior,
-    chunk 1 from chunk 0's measured region_counts -- BOTH must render
-    the viewport bit-identically to the reference."""
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_feedback_matches_golden(golden, workload):
+    """The closed-loop feedback path: chunk 0 plans from the workload's
+    prior, chunk 1 from chunk 0's measured region_counts -- BOTH must
+    render the viewport bit-identically to the reference."""
     from repro.launch.mesh import make_frames_mesh
     from repro.launch.render_service import RenderService
 
-    prob = _problem()
+    prob = _problem(workload)
     svc = RenderService(prob, mesh=make_frames_mesh(1), chunk_frames=2,
                         pipeline_depth=1, feedback=True, safety_factor=1.1)
     canvases, rs = svc.render([prob.bounds] * 4)
@@ -145,13 +199,16 @@ def test_feedback_matches_golden(golden):
     assert {c.p_source for c in rs.chunk_stats[1:]} == {"measured"}
     assert rs.overflow_dropped == 0
     for i in range(4):
-        _assert_matches(canvases[i], golden, f"feedback[frame {i}]")
+        _assert_matches(canvases[i], golden(workload),
+                        f"feedback[{workload} frame {i}]")
 
 
 if __name__ == "__main__":
     # bare-python regeneration: repro is imported lazily inside the
     # helpers, so inserting src/ here is sufficient without PYTHONPATH
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
-    img = write_golden()
-    print(f"wrote {GOLDEN} (crc {zlib.crc32(img.tobytes()):#x}, "
-          f"max dwell {int(img.max())})")
+    for wl in WORKLOADS:
+        img = write_golden(wl)
+        print(f"wrote {golden_path(wl)} "
+              f"(crc {zlib.crc32(img.tobytes()):#x}, "
+              f"max dwell {int(img.max())})")

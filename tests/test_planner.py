@@ -317,8 +317,9 @@ def test_observed_blend_ring_monotone_in_measured_density(data):
     for d in depths:
         lo = data.draw(st.floats(0.05, 1.0))
         hi = min(1.0, lo + data.draw(st.floats(0.0, 0.5)))
-        lo_est.observe_value(d, lo)
-        hi_est.observe_value(d, hi)
+        # measurements live in the problem's workload namespace
+        lo_est.observe_value(d, lo, workload=prob.workload)
+        hi_est.observe_value(d, hi, workload=prob.workload)
     k = data.draw(st.integers(1, 4))
     lo_plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=lo_est,
                                   num_buckets=k)
@@ -335,8 +336,9 @@ def test_plan_frames_provenance_and_conflicts():
     prob = _prob()
     est = OccupancyEstimator()
     # observe only the deepest frame's depth (width 1.0 => depth 1.0),
-    # beyond max_extrapolate of the wide frames
-    est.observe_value(1.0, 0.5)
+    # beyond max_extrapolate of the wide frames -- filed under the
+    # problem's workload namespace, where plan_frames looks
+    est.observe_value(1.0, 0.5, workload=prob.workload)
     est.max_extrapolate = 0.75
     plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=est,
                                num_buckets=3)
@@ -357,11 +359,11 @@ def test_plan_frames_quantize_bounds_signatures():
     prob = _prob()
     est = OccupancyEstimator(p_quantum=0.1)
     for d, p in ((0.0, 0.512), (-2.0, 0.43)):
-        est.observe_value(d, p)
+        est.observe_value(d, p, workload=prob.workload)
     plan = planner.plan_frames(prob, _BLEND_BOUNDS, observed=est,
                                num_buckets=4, quantize=True)
     for fp in plan.frame_plans:
-        raw = est.predict(fp.depth)
+        raw = est.predict(fp.depth, workload=prob.workload)
         assert fp.p_subdiv == pytest.approx(min(est.p_deep,
                                                 np.ceil(raw / 0.1 - 1e-12) * 0.1))
 
@@ -391,7 +393,7 @@ def test_report_frame_p_tracks_retry_promotion():
 def test_report_frame_p_matches_plan_without_retries(exact_batch_reference):
     prob = _prob()
     est = OccupancyEstimator()
-    est.observe_value(0.0, 0.9)
+    est.observe_value(0.0, 0.9, workload=prob.workload)
     canv, rep = solve_batch(prob, _BLEND_BOUNDS, plan=3, observed=est)
     assert rep.overflow_dropped == 0
     assert len(rep.frame_p_subdiv) == len(_BLEND_BOUNDS)

@@ -1,0 +1,323 @@
+"""The workload-parametric stack: registry semantics, spec validation,
+engine bit-identity per workload, per-workload planner priors, the
+generated-field grid workload, and mixed-workload serving with
+per-workload estimator state."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.ask import run_ask, run_ask_scan
+from repro.core.planner import (P_DEEP_DEFAULT, P_MIN_DEFAULT, SLOPE_DEFAULT,
+                                plan_capacities, prior_band_for)
+from repro.workloads import (FrameProblem, WorkloadSpec, available,
+                             escape_time_workloads, get_workload, julia,
+                             multibrot, solve, solve_batch, ssd_synth)
+
+# workload tests get their own max_dwell so trace-count bookkeeping in
+# other modules (test_render_pipeline pins dwell 48; test_ask_scan pins
+# 32) cannot collide under shuffled test order
+DWELL = 72
+
+
+def _prob(workload, n=128, **kw):
+    kw.setdefault("max_dwell", DWELL)
+    kw.setdefault("B", 16)
+    return FrameProblem(n=n, g=4, r=2, backend="jnp",
+                        workload=workload, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_ships_the_builtin_workloads():
+    names = available()
+    assert {"mandelbrot", "julia", "burning_ship", "multibrot",
+            "ssd_synth"} <= set(names)
+    # superset, not equality: other suites (the docs snippets) may have
+    # registered extra workloads into the process-global registry
+    assert {"mandelbrot", "julia", "burning_ship",
+            "multibrot"} <= set(escape_time_workloads())
+    assert "ssd_synth" not in escape_time_workloads()
+    assert get_workload("ssd_synth").kind == "grid"
+
+
+def test_registry_returns_canonical_instances():
+    """Specs are jit-cache keys: the same name/parameters must resolve
+    to the SAME object every time."""
+    assert get_workload("mandelbrot") is get_workload("mandelbrot")
+    assert get_workload("julia") is julia()
+    assert julia(c=(-0.4, 0.6)) is julia(c=(-0.4, 0.6))
+    assert julia(c=(-0.4, 0.6)) is not julia()
+    assert multibrot(4) is multibrot(m=4)
+    assert multibrot(3) is get_workload("multibrot")
+    spec = get_workload("burning_ship")
+    assert get_workload(spec) is spec  # specs pass through
+
+
+def test_registry_rejects_unknowns_and_bad_params():
+    with pytest.raises(KeyError, match="registered"):
+        get_workload("nosuch")
+    with pytest.raises(ValueError, match="m >= 2"):
+        multibrot(1)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="name"):
+        WorkloadSpec(name="")  # "" is the estimator's reserved namespace
+    with pytest.raises(ValueError, match="kind"):
+        WorkloadSpec(name="x", kind="weird")
+    with pytest.raises(ValueError, match="grid_fn"):
+        WorkloadSpec(name="x", kind="grid")
+    with pytest.raises(ValueError, match="p_min"):
+        WorkloadSpec(name="x", p_min=0.9, p_deep=0.5)
+    with pytest.raises(ValueError, match="slope"):
+        WorkloadSpec(name="x", slope=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# FrameProblem / back-compat
+# ---------------------------------------------------------------------------
+
+def test_frame_problem_resolves_workload_and_bounds():
+    p = _prob("julia")
+    assert p.workload is get_workload("julia")
+    assert p.bounds == get_workload("julia").default_bounds
+    override = _prob("julia", bounds=(-1.0, -1.0, 1.0, 1.0))
+    assert override.bounds == (-1.0, -1.0, 1.0, 1.0)
+    # frozen + hashable: the compile-cache contract
+    assert hash(p) == hash(_prob("julia"))
+    assert p == _prob("julia")
+    assert p != override
+    replaced = dataclasses.replace(p, max_dwell=16)
+    assert replaced.workload is p.workload and replaced.max_dwell == 16
+
+
+def test_mandelbrot_backcompat_alias():
+    """The acceptance import: the pre-refactor spelling still works and
+    builds the default-workload FrameProblem."""
+    from repro.mandelbrot import MandelbrotProblem, solve_batch  # noqa: F401
+
+    p = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=DWELL,
+                          backend="jnp")
+    assert isinstance(p, FrameProblem)
+    assert p.workload is get_workload("mandelbrot")
+    from repro.kernels.ref import DEFAULT_BOUNDS
+    assert p.bounds == DEFAULT_BOUNDS
+
+
+# ---------------------------------------------------------------------------
+# engine bit-identity per workload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["julia", "burning_ship", "multibrot"])
+def test_engines_agree_per_workload(workload):
+    """ex / ask / ask_scan / batched serving agree bit for bit on every
+    escape-time workload (the 256^2 golden tier pins the same ladder
+    against checked-in images; this is the fast cross-check at a second
+    config, plus the vmapped batch path at non-default bounds)."""
+    prob = _prob(workload)
+    ex, _ = solve(prob, "ex")
+    ex = np.asarray(ex)
+    ask, _ = run_ask(prob)
+    np.testing.assert_array_equal(np.asarray(ask), ex)
+    scan, st = run_ask_scan(prob, safety_factor=1e9)
+    assert st.overflow_dropped == 0
+    np.testing.assert_array_equal(np.asarray(scan), ex)
+    # batched: frame 0 at default bounds, frame 1 zoomed -- each must
+    # equal the single-frame engine at those bounds
+    zoom = tuple(0.5 * b for b in prob.bounds)
+    canv, stb = solve_batch(prob, [prob.bounds, zoom], safety_factor=1e9)
+    assert stb.overflow_dropped == 0
+    np.testing.assert_array_equal(np.asarray(canv[0]), ex)
+    zoomed, _ = run_ask(dataclasses.replace(prob, bounds=zoom))
+    np.testing.assert_array_equal(np.asarray(canv[1]), np.asarray(zoomed))
+
+
+def test_multibrot_m2_is_not_mandelbrot_picture():
+    """z^2+c via the multibrot factory draws the Mandelbrot SET (sanity)
+    while m=3 draws a different picture (the workload really changes
+    the compute)."""
+    m3, _ = solve(_prob("multibrot", n=64, B=8), "ex")
+    mset, _ = solve(_prob("mandelbrot", n=64, B=8,
+                          bounds=get_workload("multibrot").default_bounds),
+                    "ex")
+    assert not np.array_equal(np.asarray(m3), np.asarray(mset))
+
+
+# ---------------------------------------------------------------------------
+# the generated-field grid workload (paper Sec. 7 as a servable scenario)
+# ---------------------------------------------------------------------------
+
+def test_ssd_synth_reconstructs_its_field_through_every_engine():
+    """With frame n == field n on the default window, the subdivision
+    grid aligns with the generator's region edges, so ex, ask, and the
+    scan engine all reproduce the generated field exactly -- the one
+    workload with known ground truth at every pixel."""
+    from repro.core.ssd_synth import generate_field
+
+    spec = ssd_synth(seed=3, n_field=128, g=4, r=2, B=16, P=0.7)
+    assert ssd_synth(seed=3, n_field=128, g=4, r=2, B=16, P=0.7) is spec
+    fld = generate_field(3, n=128, g=4, r=2, B=16, P=0.7, k=2)
+    prob = _prob(spec)
+    for engine in ("ex", "ask", "ask_scan"):
+        kw = {"safety_factor": 1e9} if engine == "ask_scan" else {}
+        canvas, _ = solve(prob, engine, **kw)
+        np.testing.assert_array_equal(np.asarray(canvas), fld.field)
+
+
+def test_ssd_synth_prior_is_the_generator_p():
+    """The grid workload's prior band IS the generator's P (slope 0):
+    the constant-P assumption is exact by construction."""
+    spec = ssd_synth(seed=3, n_field=128, g=4, r=2, B=16, P=0.6)
+    assert spec.prior_band == (0.6, 0.0, 0.6)
+    plan = plan_capacities(_prob(spec), [spec.default_bounds,
+                                         (0.0, 0.0, 32.0, 32.0)])
+    # every frame plans at P=0.6 regardless of zoom depth
+    assert all(e.p_subdiv == pytest.approx(0.6) for e in plan.estimates)
+
+
+# ---------------------------------------------------------------------------
+# per-workload planner priors
+# ---------------------------------------------------------------------------
+
+def test_prior_band_resolution():
+    assert prior_band_for(_prob("mandelbrot")) == (
+        P_DEEP_DEFAULT, SLOPE_DEFAULT, P_MIN_DEFAULT)
+    assert prior_band_for(_prob("julia")) == get_workload("julia").prior_band
+    assert prior_band_for(object()) == (  # spec-less problems: seed band
+        P_DEEP_DEFAULT, SLOPE_DEFAULT, P_MIN_DEFAULT)
+
+
+def test_planner_uses_each_workloads_own_band():
+    """The same zoomed-out window plans a DIFFERENT effective P under
+    different workloads: the prior now lives on the spec, not in module
+    constants."""
+    wide = (-6.4, -6.4, 6.4, 6.4)  # 2 zoom-out levels vs a 3.2-wide ref
+    plans = {}
+    for wl in ("julia", "burning_ship"):
+        prob = FrameProblem(n=128, g=4, r=2, B=16, max_dwell=DWELL,
+                            backend="jnp", workload=wl,
+                            bounds=(-1.6, -1.6, 1.6, 1.6))
+        plan = plan_capacities(prob, [wide])
+        spec = get_workload(wl)
+        expect = max(spec.p_min, spec.p_deep - 2.0 * spec.slope)
+        assert plan.estimates[0].p_subdiv == pytest.approx(expect)
+        assert plan.workload == wl
+        plans[wl] = plan.estimates[0].p_subdiv
+    assert plans["julia"] != plans["burning_ship"]
+
+
+# ---------------------------------------------------------------------------
+# mixed-workload serving (the ISSUE acceptance scenario)
+# ---------------------------------------------------------------------------
+
+def _mixed_service(**kw):
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService
+
+    pm = _prob("mandelbrot")
+    pj = _prob("julia")
+    kw.setdefault("feedback", True)
+    return RenderService({"mandelbrot": pm, "julia": pj},
+                         mesh=make_frames_mesh(1), chunk_frames=4,
+                         pipeline_depth=1, safety_factor=1.1, **kw), pm, pj
+
+
+def test_mixed_workload_trajectory_plans_per_workload():
+    """Mandelbrot + julia frames through ONE service: chunks split at
+    the workload switch, each workload's cold chunk plans from its OWN
+    prior (julia stays "prior" even after mandelbrot was measured),
+    overflow_dropped == 0, and the estimator state survives a
+    snapshot/restore round-trip per workload."""
+    from repro.core.feedback import OccupancyEstimator
+    from repro.launch.render_service import zoom_bounds
+
+    svc, pm, pj = _mixed_service()
+    items = ([("mandelbrot", b) for b in zoom_bounds(6, width0=2.0)]
+             + [("julia", b) for b in zoom_bounds(6, center=(0.0, 0.0),
+                                                  width0=3.2)])
+    canvases, rs = svc.render(items)
+    assert canvases.shape == (12, 128, 128)
+    assert rs.overflow_dropped == 0
+    # chunks stay single-workload and ordered
+    assert [c.workload for c in rs.chunk_stats] == (
+        ["mandelbrot"] * 2 + ["julia"] * 2)
+    by_wl = {}
+    for c in rs.chunk_stats:
+        by_wl.setdefault(c.workload, []).append(c)
+    for wl, chunks in by_wl.items():
+        assert chunks[0].p_source == "prior"  # own cold start...
+        assert chunks[1].p_source == "measured"  # ...own warm re-plan
+    # the cold planning P is each workload's own quantized prior
+    est = OccupancyEstimator()
+    for wl, prob in (("mandelbrot", pm), ("julia", pj)):
+        assert by_wl[wl][0].p_subdiv == pytest.approx(
+            est.predict_quantized(0.0, workload=prob.workload))
+    assert set(svc.estimator.workloads_observed()) == {"mandelbrot", "julia"}
+
+    # frames are bit-identical to the per-problem engines
+    ref_m, _ = solve_batch(pm, [b for k, b in items[:6]], safety_factor=1e9)
+    ref_j, _ = solve_batch(pj, [b for k, b in items[6:]], safety_factor=1e9)
+    np.testing.assert_array_equal(canvases[:6], np.asarray(ref_m))
+    np.testing.assert_array_equal(canvases[6:], np.asarray(ref_j))
+
+    # per-workload snapshot/restore: the restored estimator predicts
+    # identically in BOTH namespaces
+    restored = OccupancyEstimator.restore(
+        json.loads(json.dumps(svc.estimator.snapshot())))
+    for prob in (pm, pj):
+        for depth in (-2.0, 0.0, 1.5):
+            assert restored.predict(depth, workload=prob.workload) == \
+                svc.estimator.predict(depth, workload=prob.workload)
+
+
+def test_observe_report_learns_parametric_workload_band():
+    """A planned run of a parametric workload instance whose name is NOT
+    a registry key (multibrot(m=4)) still files its measurements under
+    its own namespace with its OWN clamping band: the plan stamps both
+    the name and the band, and observe_report learns them."""
+    from repro.core.feedback import OccupancyEstimator
+
+    spec = multibrot(m=4)
+    prob = _prob(spec, n=64, B=8)
+    est = OccupancyEstimator()
+    _, rep = solve_batch(prob, [prob.bounds], plan=1)
+    assert rep.plan.workload == spec.name
+    assert rep.plan.workload_band == spec.prior_band
+    est.observe_report(rep, g=prob.g, r=prob.r)
+    assert est.workloads_observed() == (spec.name,)
+    assert est.measured(0.0, workload=spec) is not None
+    # the band came from the stamp, not the default Mandelbrot triple
+    assert est._bands[spec.name] == spec.prior_band
+
+
+def test_mixed_workload_measurements_do_not_cross_contaminate():
+    """A hot mandelbrot measurement must not move julia's plan."""
+    from repro.core.feedback import OccupancyEstimator
+
+    est = OccupancyEstimator()
+    jl, mb = get_workload("julia"), get_workload("mandelbrot")
+    cold_julia = est.predict(0.0, workload=jl)
+    est.observe_value(0.0, 0.99, workload=mb)
+    assert est.predict(0.0, workload=jl) == cold_julia
+    assert est.measured(0.0, workload=jl) is None
+    assert est.measured(0.0, workload=mb) == pytest.approx(mb.p_deep)
+
+
+def test_mixed_workload_requires_feedback_and_shared_n():
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService
+
+    pm, pj = _prob("mandelbrot"), _prob("julia")
+    with pytest.raises(ValueError, match="feedback"):
+        RenderService({"m": pm, "j": pj}, mesh=make_frames_mesh(1))
+    with pytest.raises(ValueError, match="canvas size"):
+        RenderService({"m": pm, "j": _prob("julia", n=64, B=8)},
+                      mesh=make_frames_mesh(1), feedback=True)
+    svc, _, _ = _mixed_service()
+    with pytest.raises(KeyError, match="unknown problem"):
+        next(iter(svc.stream([("nosuch", pm.bounds)])))
