@@ -11,6 +11,13 @@ measurable across the whole engine ladder:
                                                       memory worst-case)
   ask_scan   one dispatch, bounded OLT ring          (lambda paid once,
                                                       memory ~expected)
+  ask_tuned  ask_scan with autotuned kernel routing  (same dispatches,
+                                                      tuned schedules)
+
+The ``tuned_tier`` suite additionally emits a machine-readable
+``BENCH_6.json`` (dispatches / ring rows / wall times / tuned-vs-jnp
+speedup per registry workload) that CI's ``compare_bench`` gate diffs
+against the checked-in baseline.
 
 Rows (``name,case,value``):
   ask_scan_launches_<m>      kernel dispatch count
@@ -44,7 +51,7 @@ from repro.mandelbrot import MandelbrotProblem, solve, solve_batch
 
 DWELL = 128
 
-METHODS = ("ex", "dp", "ask", "ask_fused", "ask_scan")
+METHODS = ("ex", "dp", "ask", "ask_fused", "ask_scan", "ask_tuned")
 
 
 def _best_time(fn, reps=3):
@@ -72,7 +79,7 @@ def _peak_rows(method: str, stats, r: int) -> int:
         return max(c + next_pow2(c * r * r) for c in caps[:-1])
     if method == "ask_fused":
         return sum(caps)  # all per-level buffers live in one program
-    if method == "ask_scan":
+    if method in ("ask_scan", "ask_tuned"):
         return 2 * max(caps)  # the double-buffered ring
     return sum(caps)
 
@@ -463,7 +470,58 @@ def workload_serving(writer, n=256, dwell=64, frames=24, chunk=4,
                sum(1 for c in fb.chunk_stats if c.p_source == "measured"))
 
 
-def run(writer, full=False):
+def tuned_tier(writer, n=256, dwell=64, bench_json=None):
+    """The autotuned rung vs the plain scan engine, per registry workload.
+
+    For every registered workload (the four escape-time sets AND the
+    generated ``ssd_synth`` field) renders the 256^2 default viewport with
+    ``ask_scan`` (jnp routing) and ``ask_tuned`` (autotune heuristics /
+    cache), asserting the tuned canvas is bit-identical, and records
+    dispatch count, ring rows, best-of-3 wall times, and the tuned-vs-jnp
+    speedup. With ``bench_json`` the same numbers are written as the
+    machine-readable ``BENCH_6.json`` CI's ``compare_bench`` gate diffs.
+    """
+    from repro.workloads import FrameProblem, available, solve
+
+    payload = {"version": 1,
+               "config": {"n": n, "max_dwell": dwell, "g": 4, "r": 2,
+                          "B": 16},
+               "workloads": {}}
+    for wl in available():
+        prob = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                            backend="jnp", workload=wl)
+        case = f"wl={wl} n={n}"
+        base, base_stats = solve(prob, "ask_scan", safety_factor=1e9)
+        tuned, stats = solve(prob, "ask_tuned", safety_factor=1e9)
+        wall_jnp = _best_time(lambda: solve(prob, "ask_scan",
+                                            safety_factor=1e9))
+        wall_tuned = _best_time(lambda: solve(prob, "ask_tuned",
+                                              safety_factor=1e9))
+        identical = int(np.array_equal(np.asarray(base), np.asarray(tuned)))
+        speedup = wall_jnp / wall_tuned if wall_tuned > 0 else 0.0
+        ring_rows = stats.ring_rows
+        writer("ask_tuned_dispatches", case, stats.kernel_launches)
+        writer("ask_tuned_ring_rows", case, ring_rows)
+        writer("ask_tuned_wall_ms_jnp", case, wall_jnp * 1e3)
+        writer("ask_tuned_wall_ms_tuned", case, wall_tuned * 1e3)
+        writer("ask_tuned_speedup", case, speedup)
+        writer("ask_tuned_identical", case, identical)
+        payload["workloads"][wl] = {
+            "dispatches": int(stats.kernel_launches),
+            "ring_rows": int(ring_rows),
+            "wall_ms_jnp": round(wall_jnp * 1e3, 3),
+            "wall_ms_tuned": round(wall_tuned * 1e3, 3),
+            "speedup": round(speedup, 4),
+            "identical": identical,
+        }
+    if bench_json:
+        with open(bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return payload
+
+
+def run(writer, full=False, bench_json=None):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
@@ -472,6 +530,7 @@ def run(writer, full=False):
         pipelined_serving(writer, n=256, dwell=128, frames=128, chunk=8)
         feedback_serving(writer, n=256, dwell=128, frames=96, chunk=8)
         workload_serving(writer, n=512, dwell=128, frames=48, chunk=8)
+        tuned_tier(writer, n=256, dwell=128, bench_json=bench_json)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
@@ -480,3 +539,4 @@ def run(writer, full=False):
         pipelined_serving(writer, n=256, dwell=128, frames=64, chunk=8)
         feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4)
         workload_serving(writer, n=256, dwell=64, frames=24, chunk=4)
+        tuned_tier(writer, n=256, dwell=64, bench_json=bench_json)

@@ -1,0 +1,107 @@
+"""CI gate: diff a fresh tuned-tier BENCH json against the baseline.
+
+``python -m benchmarks.compare_bench BENCH_6.json bench_now.json`` exits
+nonzero -- loudly, with a per-workload table -- when the fresh run
+regresses the checked-in baseline:
+
+* exact invariants (any violation fails): the tuned engine must stay
+  bit-identical (``identical == 1``), must not add dispatches, and must
+  not grow the OLT ring;
+* loose perf bounds (tolerance-gated, CI machines are noisy): the
+  tuned-vs-jnp speedup may not collapse below ``--speedup-floor-frac`` of
+  the baseline's (floored at ``--min-speedup``), and the tuned wall time
+  may not blow past ``--wall-tol`` times the baseline's.
+
+Workloads present only in the fresh run pass (new registry entries);
+workloads missing from the fresh run fail (silent coverage loss).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, fresh: dict, *, wall_tol: float = 5.0,
+            speedup_floor_frac: float = 0.5,
+            min_speedup: float = 0.6) -> list[str]:
+    """Return the list of human-readable failures (empty == gate passes)."""
+    failures: list[str] = []
+    if fresh.get("version") != baseline.get("version"):
+        failures.append(
+            f"schema version changed: baseline {baseline.get('version')} "
+            f"vs fresh {fresh.get('version')}")
+        return failures
+    base_wl = baseline.get("workloads", {})
+    new_wl = fresh.get("workloads", {})
+    for name in sorted(base_wl):
+        if name not in new_wl:
+            failures.append(f"{name}: missing from the fresh run "
+                            "(coverage regression)")
+            continue
+        b, f = base_wl[name], new_wl[name]
+        if f["identical"] != 1:
+            failures.append(f"{name}: ask_tuned no longer bit-identical "
+                            "to ask_scan")
+        if f["dispatches"] > b["dispatches"]:
+            failures.append(
+                f"{name}: dispatches grew {b['dispatches']} -> "
+                f"{f['dispatches']}")
+        if f["ring_rows"] > b["ring_rows"]:
+            failures.append(
+                f"{name}: ring_rows grew {b['ring_rows']} -> "
+                f"{f['ring_rows']}")
+        floor = max(b["speedup"] * speedup_floor_frac, min_speedup)
+        if f["speedup"] < floor:
+            failures.append(
+                f"{name}: speedup collapsed {b['speedup']:.3f} -> "
+                f"{f['speedup']:.3f} (floor {floor:.3f})")
+        if f["wall_ms_tuned"] > b["wall_ms_tuned"] * wall_tol:
+            failures.append(
+                f"{name}: tuned wall {f['wall_ms_tuned']:.1f}ms > "
+                f"{wall_tol}x baseline {b['wall_ms_tuned']:.1f}ms")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when a fresh BENCH json regresses the baseline")
+    ap.add_argument("baseline", help="checked-in BENCH_6.json")
+    ap.add_argument("fresh", help="json from the current run")
+    ap.add_argument("--wall-tol", type=float, default=5.0,
+                    help="tuned wall-time blowup factor allowed (CI noise)")
+    ap.add_argument("--speedup-floor-frac", type=float, default=0.5,
+                    help="fraction of baseline speedup that must survive")
+    ap.add_argument("--min-speedup", type=float, default=0.6,
+                    help="absolute floor for the speedup check")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures = compare(baseline, fresh, wall_tol=args.wall_tol,
+                       speedup_floor_frac=args.speedup_floor_frac,
+                       min_speedup=args.min_speedup)
+
+    for name in sorted(fresh.get("workloads", {})):
+        row = fresh["workloads"][name]
+        print(f"{name:>14}: identical={row['identical']} "
+              f"dispatches={row['dispatches']} ring_rows={row['ring_rows']} "
+              f"jnp={row['wall_ms_jnp']:.1f}ms "
+              f"tuned={row['wall_ms_tuned']:.1f}ms "
+              f"speedup={row['speedup']:.3f}")
+    if failures:
+        print(f"\nBENCH REGRESSION ({len(failures)} failure(s)):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL: {f}", file=sys.stderr)
+        return 1
+    print("\nbench gate OK: no regression vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,11 @@ summary per suite. Suites:
   moe         -> beyond-paper: OLT-dispatch MoE
   roofline    -> deliverable (g): printed from experiments/dryrun if present
 
-``python -m benchmarks.run [--suite X] [--full]``
+``python -m benchmarks.run [--suite X] [--full] [--json PATH]``
+
+``--json PATH`` (ask_scan suite) additionally writes the machine-readable
+tuned-tier comparison (``BENCH_6.json`` schema) that CI's
+``benchmarks.compare_bench`` gate diffs against the checked-in baseline.
 """
 
 from __future__ import annotations
@@ -26,6 +30,8 @@ def main(argv=None) -> None:
                     choices=("all", "cost_model", "mandelbrot", "ask_scan",
                              "landscape", "moe", "roofline"))
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the tuned-tier BENCH json (ask_scan suite)")
     args = ap.parse_args(argv)
 
     def writer(name, case, value):
@@ -43,7 +49,8 @@ def main(argv=None) -> None:
     if args.suite in ("all", "ask_scan"):
         from benchmarks import bench_ask_scan
         suites.append(("ask_scan",
-                       lambda: bench_ask_scan.run(writer, full=args.full)))
+                       lambda: bench_ask_scan.run(writer, full=args.full,
+                                                  bench_json=args.json)))
     if args.suite in ("all", "landscape"):
         from benchmarks import bench_landscape
         suites.append(("landscape",

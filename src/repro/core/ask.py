@@ -398,7 +398,11 @@ def _build_scan_pipeline(problem: ASKProblem, caps: Sequence[int]):
 # Keyed on (problem, caps, batched, mesh) when the problem is hashable
 # (the Mandelbrot adapter is a frozen dataclass; Mesh is hashable);
 # unhashable problems just rebuild. Bounded FIFO so a long-lived server
-# can't grow it unboundedly.
+# can't grow it unboundedly. The problem's KernelPolicy (frozen, hashes
+# with it) is therefore part of the key: the tuned kernel tier
+# (kernels.autotune) rides on problem.policy and two problems that route
+# kernels differently never share a compiled pipeline -- the tuning
+# cache (autotune.TuningCache) is keyed by the same static arguments.
 _PIPELINE_CACHE: dict = {}
 _PIPELINE_CACHE_MAX = 128
 

@@ -595,6 +595,12 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
 
     Returns ``(states, PlanReport)`` with ``states`` a host (numpy) pytree
     whose leading axis is the frame axis in input order.
+
+    Kernel routing is inherited from ``problem.policy`` (a
+    ``kernels.policy.KernelPolicy``): a tuned-tier problem plans and
+    retries exactly like a jnp/pallas one -- the planner sizes rings,
+    the policy schedules kernels, and the two compose through the
+    problem object without any extra plumbing here.
     """
     leaves = jax.tree_util.tree_leaves(extras)
     if not leaves:

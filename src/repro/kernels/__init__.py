@@ -14,4 +14,16 @@ bit-identically to its oracle (None keeps the seed Mandelbrot iteration).
   region_dwell       last-level application work A (SBR/MBR grids)
   olt_compact        prefix-sum compaction (the atomicAdd replacement)
   moe_dispatch       batched per-expert OLT ranks (MoE position_in_expert)
+
+Routing and scheduling live beside them:
+
+  policy             KernelPolicy -- the ONE routing object (backend
+                     jnp/pallas/tuned, interpret flag, per-kernel
+                     schedule overrides, tuning-cache path) every ops.py
+                     entry point accepts as ``policy=``
+  autotune           the tuned tier: candidate sweep (block shape,
+                     escape-loop unroll), JSON tuning cache keyed like
+                     the compile cache, measured heuristics when cold
+
+See docs/kernels.md for the backend ladder and the add-a-kernel recipe.
 """

@@ -25,7 +25,7 @@ from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
 def _kernel(o_ref, *, by: int, bx: int, n: int, bounds, max_dwell: int,
-            workload):
+            workload, unroll: int):
     pi = pl.program_id(0)
     pj = pl.program_id(1)
     ys = (pi * by).astype(jnp.float32) + jax.lax.broadcasted_iota(
@@ -33,12 +33,13 @@ def _kernel(o_ref, *, by: int, bx: int, n: int, bounds, max_dwell: int,
     xs = (pj * bx).astype(jnp.float32) + jax.lax.broadcasted_iota(
         jnp.float32, (by, bx), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    o_ref[...] = dwell_compute(cr, ci, max_dwell, workload=workload)
+    o_ref[...] = dwell_compute(cr, ci, max_dwell, workload=workload,
+                               unroll=unroll)
 
 
 @functools.partial(
     jax.jit, static_argnames=("n", "bounds", "max_dwell", "block", "interpret",
-                              "workload"))
+                              "workload", "unroll"))
 def mandelbrot_dwell(
     n: int,
     bounds=DEFAULT_BOUNDS,
@@ -46,16 +47,19 @@ def mandelbrot_dwell(
     block: tuple[int, int] = (256, 256),
     interpret: bool = True,
     workload=None,
+    unroll: int = 1,
 ) -> jax.Array:
     """``workload`` (an escape-time ``WorkloadSpec``) swaps the per-point
-    function inside the SAME kernel body; None keeps classic Mandelbrot."""
+    function inside the SAME kernel body; None keeps classic Mandelbrot.
+    ``unroll`` is the escape loop's bit-identity-preserving grouping
+    factor (an autotune candidate axis alongside ``block``)."""
     by = min(block[0], n)
     bx = min(block[1], n)
     if n % by or n % bx:
         raise ValueError(f"n={n} must be divisible by block {by}x{bx}")
     kernel = functools.partial(
         _kernel, by=by, bx=bx, n=n, bounds=bounds, max_dwell=max_dwell,
-        workload=workload)
+        workload=workload, unroll=unroll)
     return pl.pallas_call(
         kernel,
         grid=(n // by, n // bx),

@@ -5,11 +5,22 @@ counter; Sec. 5.3.1 itself names the prefix-sum alternative, which is the
 only (and better: deterministic) option on TPU. This kernel fuses
 flag -> exclusive-scan -> total in one VMEM pass.
 
-Single-block kernel: flags up to ``capacity`` live in one VMEM block
-(int32[64k] = 256 KiB -- far under VMEM). For larger OLTs ``ops.py`` falls
-back to the XLA cumsum (which XLA itself tiles); the subdivision workloads
-this repo targets keep OLTs well under this bound (paper Sec. 7.2 sizes the
-OLT as |G_i| * r^k << n^k).
+Two variants:
+
+* ``compact_ranks_kernel`` -- single-block: flags up to ``ops._OLT_KERNEL_CAP``
+  live in one VMEM block (int32[64k] = 256 KiB -- far under VMEM). The
+  subdivision workloads this repo targets keep OLTs well under this bound
+  (paper Sec. 7.2 sizes the OLT as |G_i| * r^k << n^k).
+* ``compact_ranks_blocked`` -- blockwise: grid over ``N // block`` VMEM
+  tiles with the running total carried across grid steps in SMEM scratch
+  (TPU grid steps execute sequentially on one core, so the carry is the
+  classic accumulator pattern: ``@pl.when(step == 0)`` initialises it).
+  This lifts the single-block capacity bound and makes ``block`` an
+  autotune candidate axis; the total is re-written per step into the 1-row
+  count output, so the last step's write is the grand total.
+
+Beyond both, ``ops.py`` still falls back to the XLA cumsum (which XLA
+itself tiles) for jnp-backend callers and non-dividing shapes.
 """
 
 from __future__ import annotations
@@ -19,6 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(flags_ref, ranks_ref, count_ref):
@@ -26,6 +38,48 @@ def _kernel(flags_ref, ranks_ref, count_ref):
     inc = jnp.cumsum(f)
     ranks_ref[...] = (inc - f).astype(jnp.int32)
     count_ref[0] = inc[-1].astype(jnp.int32)
+
+
+def _kernel_blocked(flags_ref, ranks_ref, count_ref, carry_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _():
+        carry_ref[0] = jnp.int32(0)
+
+    f = flags_ref[...].astype(jnp.int32)
+    inc = jnp.cumsum(f)
+    base = carry_ref[0]
+    ranks_ref[...] = (base + inc - f).astype(jnp.int32)
+    total = (base + inc[-1]).astype(jnp.int32)
+    carry_ref[0] = total
+    count_ref[0] = total  # last grid step's write is the grand total
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def compact_ranks_blocked(flags: jax.Array, *, block: int = 4096,
+                          interpret: bool = True):
+    """Blockwise exclusive scan: flags [N] with N % block == 0.
+    Returns (ranks [N] int32, count [1] int32)."""
+    N = flags.shape[0]
+    if N % block:
+        raise ValueError(f"N={N} must be divisible by block={block}")
+    ranks, count = pl.pallas_call(
+        _kernel_blocked,
+        grid=(N // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(flags.astype(jnp.int32))
+    return ranks, count
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,12 +1,25 @@
 """Public jitted wrappers over the Pallas kernels with jnp fallback.
 
-``backend`` selection:
-  "pallas" -- pl.pallas_call; compiled on TPU, interpret=True elsewhere
-              (interpret executes the kernel body on CPU for validation).
-  "jnp"    -- the pure-jnp oracles from ref.py (also the CPU fast path:
-              interpret mode is an interpreter, so production CPU tests and
-              benchmarks default to jnp while every kernel is still
-              validated against its oracle in tests/test_kernels.py).
+Routing is governed by ONE object: :class:`repro.kernels.policy.KernelPolicy`
+(``policy=`` on every entry point). Its backend rungs:
+
+  ``jnp``    -- the pure-jnp oracles from ref.py (also the CPU fast path:
+                interpret mode is an interpreter, so production CPU tests
+                and benchmarks default to jnp while every kernel is still
+                validated against its oracle in tests/test_kernels.py).
+  ``pallas`` -- pl.pallas_call; compiled on TPU, interpret=True elsewhere
+                (interpret executes the kernel body on CPU for validation).
+  ``tuned``  -- per-dispatch choice from the autotune harness
+                (``kernels.autotune``): JSON tuning-cache winners when the
+                policy names a cache file, measured heuristics when cold.
+                The choice (impl + block/unroll schedule params) is made
+                at trace time from static arguments only.
+
+Schedule-parameter precedence (lowest to highest): explicit kwarg
+(``block=``) < tuned choice < ``policy.overrides``.
+
+The legacy per-call ``backend="pallas"|"jnp"`` string kwarg still works via
+a deprecation shim (``policy.resolve_policy``) -- pass ``policy=`` instead.
 
 All entry points take/return plain arrays so both ASK and the DP baseline
 drive the exact same compute.
@@ -17,22 +30,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.mandelbrot_dwell import mandelbrot_dwell as _mandelbrot_pallas
-from repro.kernels.olt_compact import compact_ranks_kernel
+from repro.kernels.olt_compact import compact_ranks_blocked, compact_ranks_kernel
 from repro.kernels.perimeter_query import perimeter_query as _perimeter_pallas
+from repro.kernels.policy import (Backend, DEFAULT_POLICY, KernelPolicy,
+                                  resolve_policy)
 from repro.kernels.region_dwell import region_dwell as _region_dwell_pallas
 from repro.kernels.region_fill import region_fill as _region_fill_pallas
 
 _OLT_KERNEL_CAP = 1 << 16  # single-VMEM-block bound (see olt_compact.py)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interpret() -> bool:
-    return not _on_tpu()
 
 
 def _grid_workload(workload) -> bool:
@@ -44,15 +51,43 @@ def _grid_workload(workload) -> bool:
     return workload is not None and getattr(workload, "kind", "") == "grid"
 
 
+def _route(pol: KernelPolicy, kernel: str, *, workload=None, **sig):
+    """Trace-time routing: -> (impl, schedule-params dict).
+
+    ``sig`` is the kernel's static shape signature (the tuning-cache key
+    fields, see ``autotune.cache_key``). Overrides from the policy are
+    applied last so they beat both heuristics and cache entries.
+    """
+    if _grid_workload(workload):
+        return "jnp", dict(pol.override_for(kernel))
+    if pol.backend is Backend.JNP:
+        impl, params = "jnp", {}
+    elif pol.backend is Backend.PALLAS:
+        impl, params = "pallas", {}
+    else:  # Backend.TUNED
+        choice = autotune.choose(kernel, workload=workload,
+                                 cache=pol.tuning_cache, **sig)
+        impl, params = choice.impl, choice.param_dict()
+    params.update(pol.override_for(kernel))
+    return impl, params
+
+
 def mandelbrot(n, *, bounds=ref.DEFAULT_BOUNDS, max_dwell=512,
-               block=(256, 256), backend="pallas", workload=None):
+               block=(256, 256), backend=None, policy=None, workload=None):
     """Exhaustive n x n value image (the paper's Ex baseline; named for
     the seed workload, ``workload=`` makes it serve any)."""
-    if backend == "jnp" or _grid_workload(workload):
-        return ref.mandelbrot_ref(n, bounds, max_dwell, workload=workload)
-    blk = (min(block[0], n), min(block[1], n))
-    return _mandelbrot_pallas(n, bounds, max_dwell, blk, _interpret(),
-                              workload=workload)
+    pol = resolve_policy(backend, policy)
+    impl, params = _route(pol, "dwell", workload=workload,
+                          n=n, max_dwell=max_dwell)
+    unroll = int(params.get("unroll", 1))
+    if impl == "jnp":
+        return ref.mandelbrot_ref(n, bounds, max_dwell, workload=workload,
+                                  unroll=unroll)
+    blk = tuple(params.get("block", block))
+    blk = (min(blk[0], n), min(blk[1], n))
+    return _mandelbrot_pallas(n, bounds, max_dwell, blk,
+                              pol.resolve_interpret(), workload=workload,
+                              unroll=unroll)
 
 
 def _bounds_traced(bounds) -> bool:
@@ -62,25 +97,33 @@ def _bounds_traced(bounds) -> bool:
 
 
 def perimeter_query(coords, *, side, n, bounds=ref.DEFAULT_BOUNDS,
-                    max_dwell=512, backend="pallas", workload=None):
+                    max_dwell=512, backend=None, policy=None, workload=None):
     """Border query Q: (homog [N] bool, common [N] int32)."""
+    pol = resolve_policy(backend, policy)
+    impl, params = _route(pol, "perimeter_query", workload=workload,
+                          side=side, n=n, max_dwell=max_dwell)
+    unroll = int(params.get("unroll", 1))
     if _bounds_traced(bounds):
+        # batched serving: bounds vary per frame, so only the jnp lowering
+        # applies -- the tuned tier still contributes its unroll schedule.
         return ref.perimeter_query_dyn(
             coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-            workload=workload)
-    if backend == "jnp" or _grid_workload(workload):
+            workload=workload, unroll=unroll)
+    if impl == "jnp":
         return ref.perimeter_query_ref(
             coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-            workload=workload)
+            workload=workload, unroll=unroll)
     return _perimeter_pallas(
         coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-        interpret=_interpret(), workload=workload)
+        interpret=pol.resolve_interpret(), workload=workload, unroll=unroll)
 
 
 def region_fill(canvas, coords, values, nonempty, *, side, n,
-                scheme="sbr", tile=256, backend="pallas"):
+                scheme="sbr", tile=256, backend=None, policy=None):
     """Terminal work T: constant-fill the (duplicate-padded) fill-OLT."""
-    if backend == "jnp":
+    pol = resolve_policy(backend, policy)
+    impl, _ = _route(pol, "region_fill", side=side, n=n)
+    if impl == "jnp":
         N = coords.shape[0]
         iy = jnp.arange(side)
         ys = coords[:, 0:1, None] * side + iy[None, :, None]
@@ -93,20 +136,24 @@ def region_fill(canvas, coords, values, nonempty, *, side, n,
         return canvas.at[ys.ravel(), xs.ravel()].set(vals.ravel(), mode="drop")
     return _region_fill_pallas(
         canvas, coords, values, nonempty, side=side, n=n, scheme=scheme,
-        tile=tile, interpret=_interpret())
+        tile=tile, interpret=pol.resolve_interpret())
 
 
 def region_dwell(canvas, coords, nonempty, *, side, n,
                  bounds=ref.DEFAULT_BOUNDS, max_dwell=512, scheme="sbr",
-                 tile=256, backend="pallas", workload=None):
+                 tile=256, backend=None, policy=None, workload=None):
     """Last-level work A: interior values of the (duplicate-padded) leaf-OLT."""
-    if backend == "jnp" or _bounds_traced(bounds) or _grid_workload(workload):
+    pol = resolve_policy(backend, policy)
+    impl, params = _route(pol, "region_dwell", workload=workload,
+                          side=side, n=n, max_dwell=max_dwell)
+    unroll = int(params.get("unroll", 1))
+    if impl == "jnp" or _bounds_traced(bounds):
         N = coords.shape[0]
         interior = (ref.region_interior_dyn if _bounds_traced(bounds)
                     else ref.region_interior_ref)
         tiles = interior(
             coords, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-            workload=workload)
+            workload=workload, unroll=unroll)
         iy = jnp.arange(side)
         ys = coords[:, 0:1, None] * side + iy[None, :, None]
         xs = coords[:, 1:2, None] * side + iy[None, None, :]
@@ -116,26 +163,41 @@ def region_dwell(canvas, coords, nonempty, *, side, n,
         return canvas.at[ys.ravel(), xs.ravel()].set(tiles.ravel(), mode="drop")
     return _region_dwell_pallas(
         canvas, coords, nonempty, side=side, n=n, bounds=bounds,
-        max_dwell=max_dwell, scheme=scheme, tile=tile, interpret=_interpret(),
-        workload=workload)
+        max_dwell=max_dwell, scheme=scheme, tile=tile,
+        interpret=pol.resolve_interpret(), workload=workload, unroll=unroll)
 
 
-def compact_ranks(flags, *, backend="pallas"):
+def compact_ranks(flags, *, backend=None, policy=None):
     """Exclusive-scan OLT compaction (atomicAdd replacement).
     Returns (ranks [N] int32, count scalar int32)."""
-    if backend == "jnp" or flags.shape[0] > _OLT_KERNEL_CAP:
+    pol = resolve_policy(backend, policy)
+    N = flags.shape[0]
+    impl, params = _route(pol, "olt_compact", n=N)
+    if impl == "jnp":
         ranks, count = ref.compact_ranks_ref(flags)
         return ranks, count
-    ranks, count = compact_ranks_kernel(flags, interpret=_interpret())
+    block = params.get("block")
+    if block is not None and N > int(block) and N % int(block) == 0:
+        ranks, count = compact_ranks_blocked(
+            flags, block=int(block), interpret=pol.resolve_interpret())
+        return ranks, count[0]
+    if N > _OLT_KERNEL_CAP:
+        # too large for one VMEM block and no valid blocked schedule:
+        # XLA's own tiled cumsum is the safe lowering
+        ranks, count = ref.compact_ranks_ref(flags)
+        return ranks, count
+    ranks, count = compact_ranks_kernel(flags, interpret=pol.resolve_interpret())
     return ranks, count[0]
 
 
-def batched_ranks(flags, *, backend="pallas"):
+def batched_ranks(flags, *, backend=None, policy=None):
     """Per-column OLT ranks [N, E] (MoE position_in_expert).
     Returns (ranks [N, E] int32, counts [E] int32)."""
     from repro.core.olt import batched_compact_ranks
-    if backend == "jnp" or flags.size > _OLT_KERNEL_CAP:
+    pol = resolve_policy(backend, policy)
+    impl, _ = _route(pol, "batched_ranks", n=flags.shape[0], e=flags.shape[1])
+    if impl == "jnp" or flags.size > _OLT_KERNEL_CAP:
         return batched_compact_ranks(flags)
     from repro.kernels.moe_dispatch import batched_ranks_kernel
-    ranks, counts = batched_ranks_kernel(flags, interpret=_interpret())
+    ranks, counts = batched_ranks_kernel(flags, interpret=pol.resolve_interpret())
     return ranks, counts[0]

@@ -27,7 +27,7 @@ from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
 def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
-            bounds, max_dwell: int, workload):
+            bounds, max_dwell: int, workload, unroll: int):
     i = pl.program_id(0)
     py = (cy_ref[i] * side).astype(jnp.float32)
     px = (cx_ref[i] * side).astype(jnp.float32)
@@ -40,7 +40,7 @@ def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
          jnp.where(row == 1, px + j,
          jnp.where(row == 2, px, px + last)))
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell, workload=workload)
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload, unroll=unroll)
     first = dw[0, 0]
     eq = (dw == first if workload is None
           else workload.region_equal(dw, first))
@@ -50,7 +50,7 @@ def _kernel(cy_ref, cx_ref, homog_ref, common_ref, *, side: int, n: int,
 
 @functools.partial(
     jax.jit, static_argnames=("side", "n", "bounds", "max_dwell", "interpret",
-                              "workload"))
+                              "workload", "unroll"))
 def perimeter_query(
     coords: jax.Array,
     *,
@@ -60,13 +60,15 @@ def perimeter_query(
     max_dwell: int = 512,
     interpret: bool = True,
     workload=None,
+    unroll: int = 1,
 ):
     """coords: [N, 2] int32 (cy, cx). Returns (homog [N] bool, common [N]).
-    ``workload`` (escape-time spec) swaps the per-point function."""
+    ``workload`` (escape-time spec) swaps the per-point function; ``unroll``
+    groups the escape loop (bit-identical, autotune candidate axis)."""
     N = coords.shape[0]
     kernel = functools.partial(
         _kernel, side=side, n=n, bounds=bounds, max_dwell=max_dwell,
-        workload=workload)
+        workload=workload, unroll=unroll)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(N,),

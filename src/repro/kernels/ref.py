@@ -52,7 +52,7 @@ def mandelbrot_step(zr: jax.Array, zi: jax.Array,
 
 def escape_time(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
                 init=mandelbrot_init, step=mandelbrot_step,
-                escape_radius2: float = 4.0) -> jax.Array:
+                escape_radius2: float = 4.0, unroll: int = 1) -> jax.Array:
     """Generic escape-time iteration, vectorised, fixed trip count with
     masked updates (uniform control flow -- the TPU/VPU-idiomatic form).
 
@@ -62,11 +62,19 @@ def escape_time(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
     while dynamic-plane workloads like Julia ignore it). The loop
     structure -- escape test BEFORE the step, masked updates -- is the
     single definition every engine and kernel backend shares.
+
+    ``unroll`` groups the trip count into ``max_dwell // unroll``
+    ``fori_loop`` iterations of ``unroll`` identical masked steps plus a
+    statically-unrolled remainder -- exactly ``max_dwell`` applications
+    of the SAME per-point op sequence in the same order, so the result
+    is bit-identical for every ``unroll``. It is a pure scheduling knob
+    (the autotuned tier's main lever on the jnp lowering: fewer loop-
+    carried iterations, more straight-line vector work per iteration).
     """
     zr, zi = init(cr, ci)
     dw = jnp.zeros(cr.shape, dtype=jnp.int32)
 
-    def body(_, carry):
+    def one(carry):
         zr, zi, dw = carry
         active = (zr * zr + zi * zi) < escape_radius2
         nzr, nzi = step(zr, zi, cr, ci)
@@ -75,35 +83,51 @@ def escape_time(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
         dw = jnp.where(active, dw + 1, dw)
         return zr, zi, dw
 
-    zr, zi, dw = jax.lax.fori_loop(0, max_dwell, body, (zr, zi, dw))
-    return dw
+    u = max(1, min(int(unroll), max_dwell)) if max_dwell > 0 else 1
+
+    def body(_, carry):
+        for _ in range(u):
+            carry = one(carry)
+        return carry
+
+    carry = (zr, zi, dw)
+    trips, rem = divmod(max_dwell, u)
+    if trips > 0:
+        carry = jax.lax.fori_loop(0, trips, body, carry)
+    for _ in range(rem):
+        carry = one(carry)
+    return carry[2]
 
 
 def dwell_compute(cr: jax.Array, ci: jax.Array, max_dwell: int, *,
-                  workload=None) -> jax.Array:
+                  workload=None, unroll: int = 1) -> jax.Array:
     """Per-point values at the mapped plane coordinates.
 
     ``workload`` is a ``repro.workloads.WorkloadSpec`` (duck-typed: only
     ``.values(cr, ci, max_dwell)`` is called, so this module never
     imports the workloads package); None keeps the classic Mandelbrot
     iteration -- the back-compat spelling every pre-workload caller
-    relies on.
+    relies on. ``unroll`` is the bit-identity-preserving loop grouping
+    of ``escape_time`` (grid workloads have no loop and ignore it).
     """
     if workload is None:
-        return escape_time(cr, ci, max_dwell)
-    return workload.values(cr, ci, max_dwell)
+        return escape_time(cr, ci, max_dwell, unroll=unroll)
+    if unroll == 1:  # ad-hoc duck-typed specs may predate the unroll kwarg
+        return workload.values(cr, ci, max_dwell)
+    return workload.values(cr, ci, max_dwell, unroll=unroll)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "bounds", "max_dwell", "workload"))
+                   static_argnames=("n", "bounds", "max_dwell", "workload",
+                                    "unroll"))
 def mandelbrot_ref(n: int, bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
-                   workload=None) -> jax.Array:
+                   workload=None, unroll: int = 1) -> jax.Array:
     """Oracle for the exhaustive flat kernel: full n x n value image.
     (Named for the seed workload; ``workload=`` makes it serve any.)"""
     ys = jax.lax.broadcasted_iota(jnp.float32, (n, n), 0)
     xs = jax.lax.broadcasted_iota(jnp.float32, (n, n), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    return dwell_compute(cr, ci, max_dwell, workload=workload)
+    return dwell_compute(cr, ci, max_dwell, workload=workload, unroll=unroll)
 
 
 def perimeter_coords(coords: jax.Array, side: int):
@@ -131,13 +155,14 @@ def perimeter_coords(coords: jax.Array, side: int):
 
 def perimeter_query_dyn(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
-                        workload=None):
+                        workload=None, unroll: int = 1):
     """Un-jitted border query Q: same math as ``perimeter_query_ref`` but
     ``bounds`` may be a traced [4] array -- the batched frame-serving path
     vmaps over it (one plane window per frame)."""
     ys, xs = perimeter_coords(coords, side)
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell, workload=workload)  # [N, 4, side]
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload,
+                       unroll=unroll)  # [N, 4, side]
     first = dw[:, 0, 0]
     eq = (dw == first[:, None, None] if workload is None
           else workload.region_equal(dw, first[:, None, None]))
@@ -147,22 +172,23 @@ def perimeter_query_dyn(coords: jax.Array, *, side: int, n: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("side", "n", "bounds", "max_dwell",
-                                    "workload"))
+                                    "workload", "unroll"))
 def perimeter_query_ref(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
-                        workload=None):
+                        workload=None, unroll: int = 1):
     """Oracle for the Mariani-Silver border query Q (paper Sec. 4.2.1).
 
     Returns (homog [N] bool, common [N] int32): whether all 4*side border
     values agree, and the shared value (row (0,0) -- junk if not homog).
     """
     return perimeter_query_dyn(coords, side=side, n=n, bounds=bounds,
-                               max_dwell=max_dwell, workload=workload)
+                               max_dwell=max_dwell, workload=workload,
+                               unroll=unroll)
 
 
 def region_interior_dyn(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
-                        workload=None) -> jax.Array:
+                        workload=None, unroll: int = 1) -> jax.Array:
     """Un-jitted last-level work A (traced-bounds variant, see
     ``perimeter_query_dyn``)."""
     py = (coords[:, 0] * side).astype(jnp.float32)
@@ -173,19 +199,20 @@ def region_interior_dyn(coords: jax.Array, *, side: int, n: int,
     ys = jnp.broadcast_to(ys, (coords.shape[0], side, side))
     xs = jnp.broadcast_to(xs, (coords.shape[0], side, side))
     cr, ci = map_coords(xs, ys, n, bounds)
-    return dwell_compute(cr, ci, max_dwell, workload=workload)
+    return dwell_compute(cr, ci, max_dwell, workload=workload, unroll=unroll)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("side", "n", "bounds", "max_dwell",
-                                    "workload"))
+                                    "workload", "unroll"))
 def region_interior_ref(coords: jax.Array, *, side: int, n: int,
                         bounds=DEFAULT_BOUNDS, max_dwell: int = 512,
-                        workload=None) -> jax.Array:
+                        workload=None, unroll: int = 1) -> jax.Array:
     """Oracle for the last-level application work A: [N, side, side] value
     tiles for each region."""
     return region_interior_dyn(coords, side=side, n=n, bounds=bounds,
-                               max_dwell=max_dwell, workload=workload)
+                               max_dwell=max_dwell, workload=workload,
+                               unroll=unroll)
 
 
 def compact_ranks_ref(flags):

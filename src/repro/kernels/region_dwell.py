@@ -28,7 +28,7 @@ from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 def _kernel(cy_ref, cx_ref, nonempty_ref, canvas_ref, out_ref, *,
             by: int, bx: int, tiles: int, side: int, n: int, bounds,
-            max_dwell: int, workload):
+            max_dwell: int, workload, unroll: int):
     i = pl.program_id(0)
     if tiles == 1:
         ty = tx = 0
@@ -40,13 +40,13 @@ def _kernel(cy_ref, cx_ref, nonempty_ref, canvas_ref, out_ref, *,
     ys = y0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 0)
     xs = x0 + jax.lax.broadcasted_iota(jnp.float32, (by, bx), 1)
     cr, ci = map_coords(xs, ys, n, bounds)
-    dw = dwell_compute(cr, ci, max_dwell, workload=workload)
+    dw = dwell_compute(cr, ci, max_dwell, workload=workload, unroll=unroll)
     out_ref[...] = jnp.where(nonempty_ref[0] > 0, dw, canvas_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=(
     "side", "n", "bounds", "max_dwell", "scheme", "tile", "interpret",
-    "workload"))
+    "workload", "unroll"))
 def region_dwell(
     canvas: jax.Array,
     coords: jax.Array,
@@ -60,9 +60,11 @@ def region_dwell(
     tile: int = 256,
     interpret: bool = True,
     workload=None,
+    unroll: int = 1,
 ) -> jax.Array:
     """coords: [N,2] leaf-OLT (duplicate-padded); returns updated canvas.
-    ``workload`` (escape-time spec) swaps the per-point function."""
+    ``workload`` (escape-time spec) swaps the per-point function; ``unroll``
+    groups the escape loop (bit-identical, autotune candidate axis)."""
     N = coords.shape[0]
     cy = coords[:, 0].astype(jnp.int32)
     cx = coords[:, 1].astype(jnp.int32)
@@ -88,7 +90,7 @@ def region_dwell(
 
     kernel = functools.partial(
         _kernel, by=by, bx=bx, tiles=t, side=side, n=n, bounds=bounds,
-        max_dwell=max_dwell, workload=workload)
+        max_dwell=max_dwell, workload=workload, unroll=unroll)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,

@@ -226,6 +226,7 @@ class RenderService:
                  feedback: OccupancyEstimator | bool | None = None,
                  adapt: bool = True,
                  feedback_state: Union[str, Path, None] = None,
+                 policy=None,
                  **engine_kw):
         if "pad_to" in engine_kw:
             raise ValueError(
@@ -244,6 +245,15 @@ class RenderService:
             self._problems = {"": problem}
             self._mixed = False
             self.problem = problem
+        if policy is not None:
+            # one KernelPolicy for every tenant: the service owns kernel
+            # routing the same way it owns pad_to / chunking
+            from repro.kernels.policy import KernelPolicy
+            pol = KernelPolicy.coerce(policy)
+            self._problems = {k: dataclasses.replace(p, policy=pol)
+                              for k, p in self._problems.items()}
+            if not self._mixed:
+                self.problem = self._problems[""]
         sizes = {p.n for p in self._problems.values()}
         if len(sizes) != 1:
             raise ValueError(

@@ -5,21 +5,30 @@ point function, homogeneity predicate, default window, zoom-depth prior
 band, palette/dtype; the registry (registry.py) ships mandelbrot, julia,
 burning_ship, multibrot and the generated ``ssd_synth`` field; and
 ``FrameProblem`` (frame_problem.py) adapts any of them to the
-``ASKProblem`` protocol, so every engine (ex/dp/ask/ask_fused/ask_scan),
-the capacity planner, the feedback estimator, and the render service
-serve every registered workload. ``repro.mandelbrot`` re-exports the
-case-study names for back-compat.
+``ASKProblem`` protocol, so every engine (ex/dp/ask/ask_fused/ask_scan/
+ask_tuned), the capacity planner, the feedback estimator, and the render
+service serve every registered workload. ``repro.mandelbrot`` re-exports
+the case-study names for back-compat.
+
+Serving configuration lives in two frozen objects re-exported here:
+``KernelPolicy`` (kernels/policy.py) governs per-kernel backend routing
+(jnp / pallas / tuned) and ``EngineOptions`` (options.py) consolidates
+every ``solve_batch`` knob -- engine, mesh, planning, capacities, policy.
 """
 
+from repro.kernels.policy import KernelPolicy
 from repro.workloads.frame_problem import (FrameProblem, MandelbrotProblem,
                                            dispatch_batch, exhaustive, solve,
                                            solve_batch)
+from repro.workloads.options import EngineOptions
 from repro.workloads.registry import (available, escape_time_workloads,
                                       get_workload, julia, multibrot,
                                       register, ssd_synth)
 from repro.workloads.spec import WorkloadSpec
 
 __all__ = [
+    "EngineOptions",
+    "KernelPolicy",
     "WorkloadSpec",
     "register",
     "get_workload",

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.kernels.policy import KernelPolicy
 from repro.workloads.registry import get_workload
 from repro.workloads.spec import WorkloadSpec
 
@@ -56,7 +57,17 @@ class FrameProblem:
     defaults to the workload's own window (``spec.default_bounds``), so
     ``FrameProblem(n=256, workload="julia")`` is a fully-specified
     problem. The dataclass stays frozen and hashable -- it is the
-    compile-cache key of the scan engines (``core.ask._PIPELINE_CACHE``).
+    compile-cache key of the scan engines (``core.ask._PIPELINE_CACHE``),
+    and since the resolved ``policy`` participates in equality/hash, two
+    problems that route kernels differently never share a compiled
+    pipeline.
+
+    Kernel routing: ``policy`` (a ``kernels.policy.KernelPolicy`` or a
+    backend name) is the canonical knob; the legacy ``backend`` string
+    field remains as constructor sugar -- at construction the two are
+    reconciled (``policy`` wins when both are given; ``backend`` is
+    rewritten to the resolved policy's backend so the pair can never
+    disagree).
     """
 
     n: int
@@ -67,12 +78,19 @@ class FrameProblem:
     bounds: Union[Tuple[float, float, float, float], None] = None
     scheme: str = "sbr"  # "sbr" | "mbr"  (paper Sec. 4.3)
     tile: int = 256  # MBR tile side
-    backend: str = "pallas"  # "pallas" | "jnp"
+    backend: str = "pallas"  # "pallas" | "jnp" | "tuned" (sugar for policy)
     workload: Union[str, WorkloadSpec] = "mandelbrot"
+    policy: Union[KernelPolicy, str, None] = None
 
     def __post_init__(self):
         spec = get_workload(self.workload)
         object.__setattr__(self, "workload", spec)
+        if self.policy is None:
+            pol = KernelPolicy(backend=self.backend)
+        else:
+            pol = KernelPolicy.coerce(self.policy)
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "backend", pol.backend.value)
         bounds = spec.default_bounds if self.bounds is None else self.bounds
         object.__setattr__(self, "bounds",
                            tuple(float(b) for b in bounds))
@@ -105,7 +123,7 @@ class FrameProblem:
         side = self.region_side(level)
         homog, common = ops.perimeter_query(
             coords, side=side, n=self.n, bounds=bounds,
-            max_dwell=self.max_dwell, backend=self.backend,
+            max_dwell=self.max_dwell, policy=self.policy,
             workload=self.workload)
         homog = jnp.logical_and(homog, valid)
 
@@ -120,7 +138,7 @@ class FrameProblem:
         nonempty = (count > 0).astype(jnp.int32).reshape((1,))
         state = ops.region_fill(
             state, fill_coords, fill_vals, nonempty, side=side, n=self.n,
-            scheme=self.scheme, tile=self.tile, backend=self.backend)
+            scheme=self.scheme, tile=self.tile, policy=self.policy)
 
         subdivide = jnp.logical_and(valid, jnp.logical_not(homog))
         return state, subdivide
@@ -138,7 +156,7 @@ class FrameProblem:
         return ops.region_dwell(
             state, coords, nonempty, side=side, n=self.n, bounds=bounds,
             max_dwell=self.max_dwell, scheme=self.scheme, tile=self.tile,
-            backend=self.backend, workload=self.workload)
+            policy=self.policy, workload=self.workload)
 
     # -- dynamic-parameter protocol (batched frame serving) -----------------
     # ``extra`` is a traced [4] bounds array: one plane window per frame
@@ -159,13 +177,15 @@ MandelbrotProblem = FrameProblem
 
 
 def exhaustive(n: int, *, max_dwell: int = 512, bounds=None,
-               block=(256, 256), backend: str = "pallas",
+               block=(256, 256), backend=None, policy=None,
                workload: Union[str, WorkloadSpec, None] = None):
     """Ex: the flat one-kernel baseline (paper Sec. 6.1, implementation 1).
 
     One flat kernel over the whole n x n domain; W_E = n^2 * A. With
     ``workload=None`` this is the seed Mandelbrot kernel; otherwise the
     workload's point function runs inside the same kernel body.
+    ``policy`` is a ``KernelPolicy`` (or backend name); the legacy
+    ``backend=`` string kwarg still works via the deprecation shim.
     """
     from repro.core.ask import ASKStats
 
@@ -175,7 +195,7 @@ def exhaustive(n: int, *, max_dwell: int = 512, bounds=None,
     t0 = time.perf_counter()
     canvas = ops.mandelbrot(
         n, bounds=tuple(bounds), max_dwell=max_dwell, block=block,
-        backend=backend, workload=spec)
+        backend=backend, policy=policy, workload=spec)
     canvas = jax.block_until_ready(canvas)
     stats = ASKStats(levels=0, kernel_launches=1,
                      wall_s=time.perf_counter() - t0)
@@ -183,10 +203,19 @@ def exhaustive(n: int, *, max_dwell: int = 512, bounds=None,
 
 
 def solve(problem: FrameProblem, method: str = "ask", **kw):
-    """Convenience dispatcher: method in {ex, ask, ask_fused, ask_scan, dp}."""
+    """Convenience dispatcher:
+    method in {ex, ask, ask_fused, ask_scan, ask_tuned, dp}.
+
+    ``ask_tuned`` is the autotuned rung of the engine ladder: the same
+    scan pipeline as ``ask_scan``, with every kernel dispatch routed
+    through the tuned tier (``kernels.autotune`` winners / heuristics,
+    see ``kernels.policy.KernelPolicy``). Bit-identical to ``ask_scan``
+    for every registered workload -- the tuned tier only re-schedules
+    (block shape, escape-loop unroll), it never changes the math.
+    """
     if method == "ex":
         return exhaustive(problem.n, max_dwell=problem.max_dwell,
-                          bounds=problem.bounds, backend=problem.backend,
+                          bounds=problem.bounds, policy=problem.policy,
                           workload=problem.workload)
     if method == "ask":
         from repro.core.ask import run_ask
@@ -197,6 +226,11 @@ def solve(problem: FrameProblem, method: str = "ask", **kw):
     if method == "ask_scan":
         from repro.core.ask import run_ask_scan
         return run_ask_scan(problem, **kw)
+    if method == "ask_tuned":
+        from repro.core.ask import run_ask_scan
+        tuned = dataclasses.replace(
+            problem, policy=problem.policy.with_backend("tuned"))
+        return run_ask_scan(tuned, **kw)
     if method == "dp":
         from repro.core.dp_emul import run_dp
         return run_dp(problem, **kw)
@@ -210,9 +244,21 @@ def _bounds_array(bounds_batch) -> jax.Array:
     return bounds_arr
 
 
-def solve_batch(problem: FrameProblem, bounds_batch, *, mesh=None,
-                plan=None, **kw):
+def solve_batch(problem: FrameProblem, bounds_batch, *, options=None,
+                mesh=None, plan=None, **kw):
     """Batched frame serving: render F frames in ONE XLA dispatch.
+
+    ``options`` (an ``EngineOptions`` -- re-exported from
+    ``repro.workloads`` -- or an engine name) is the canonical way to
+    configure this call: engine selection (``engine="ask_tuned"`` routes
+    every kernel through the autotuned tier), batching (``mesh`` /
+    ``pad_to``), planning (``plan`` / ``observed`` / ``num_buckets``),
+    capacity sizing, kernel routing (``policy``), and planner expert
+    knobs (``extra``) in one frozen object. The flat keyword arguments
+    below remain supported for backward compatibility but are
+    **deprecated** -- they are folded into an ``EngineOptions`` via
+    ``EngineOptions.from_kwargs``; mixing ``options=`` with any legacy
+    kwarg raises ``ValueError``.
 
     ``bounds_batch`` is [F, 4] (re0, im0, re1, im1) per frame -- a zoom
     sequence or F tenants' viewports, all of the problem's ONE workload
@@ -252,6 +298,17 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, mesh=None,
     instead of one overall; the uniform path returns (canvases
     [F, n, n], ASKStats).
     """
+    from repro.workloads.options import EngineOptions
+
+    if options is not None:
+        if mesh is not None or plan is not None or kw:
+            legacy = [k for k, v in (("mesh", mesh), ("plan", plan))
+                      if v is not None] + sorted(kw)
+            raise ValueError(
+                f"pass options= OR the legacy kwargs {legacy}, not both")
+        opts = EngineOptions.coerce(options)
+        problem = opts.apply_to(problem)
+        mesh, plan, kw = opts.mesh, opts.plan, opts.engine_kwargs()
     bounds_arr = _bounds_array(bounds_batch)
     if plan is not None and plan is not False:
         from repro.core import planner as planner_lib
@@ -272,7 +329,8 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, mesh=None,
     return run_ask_scan_sharded(problem, bounds_arr, mesh=mesh, **kw)
 
 
-def dispatch_batch(problem: FrameProblem, bounds_batch, *, mesh, **kw):
+def dispatch_batch(problem: FrameProblem, bounds_batch, *, mesh=None,
+                   options=None, **kw):
     """Enqueue one sharded frame batch WITHOUT blocking (async serving).
 
     The non-blocking half of ``solve_batch(..., mesh=...)``: returns a
@@ -280,8 +338,21 @@ def dispatch_batch(problem: FrameProblem, bounds_batch, *, mesh, **kw):
     enqueued; ``.finalize()`` yields the same (canvases, ASKStats). The
     pipelined render service (``launch.render_service``) uses this to
     overlap the host copy of chunk k with the device compute of chunk
-    k+1.
+    k+1. ``options`` (an ``EngineOptions`` carrying the mesh) is the
+    canonical configuration spelling, as in ``solve_batch``.
     """
     from repro.core.ask import dispatch_ask_scan_sharded
+    from repro.workloads.options import EngineOptions
+
+    if options is not None:
+        if mesh is not None or kw:
+            raise ValueError(
+                "pass options= OR the legacy mesh=/engine kwargs, not both")
+        opts = EngineOptions.coerce(options)
+        problem = opts.apply_to(problem)
+        mesh, kw = opts.mesh, opts.engine_kwargs()
+    if mesh is None:
+        raise ValueError(
+            "dispatch_batch needs a mesh (mesh= or options.mesh)")
     return dispatch_ask_scan_sharded(problem, _bounds_array(bounds_batch),
                                      mesh=mesh, **kw)

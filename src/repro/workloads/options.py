@@ -1,0 +1,133 @@
+"""EngineOptions: one object for every ``solve_batch`` serving knob.
+
+Batched serving grew one keyword at a time -- ``plan=``, ``observed=``,
+``mesh=``, ``pad_to=``, planner expert knobs riding in ``**kw`` -- until a
+call site needed a paragraph to read. ``EngineOptions`` consolidates the
+whole surface into a single frozen dataclass:
+
+* engine selection (``engine="ask_scan" | "ask_tuned"``) -- the tuned
+  engine is applied by swapping the problem's ``KernelPolicy`` backend,
+  so it composes with every other option;
+* batching (``mesh``, ``pad_to``), capacity sizing (``capacities``,
+  ``p_subdiv``, ``safety_factor``), planning (``plan``, ``observed``,
+  ``num_buckets``, ``quantize``), and kernel routing (``policy``);
+* planner expert knobs (``p_deep`` / ``slope`` / ``p_min`` /
+  ``ref_width`` / ``max_dispatches`` / ...) ride in ``extra`` -- a frozen
+  (name, value) tuple coerced from any mapping.
+
+``solve_batch(problem, bounds, options=EngineOptions(...))`` is the
+canonical spelling; the legacy flat kwargs still work (they are folded
+into an EngineOptions via :meth:`from_kwargs`) but are deprecated in the
+docstrings -- mixing ``options=`` with legacy kwargs is an error rather
+than a guess about precedence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+from repro.kernels.policy import KernelPolicy
+
+__all__ = ["EngineOptions"]
+
+_ENGINES = ("ask_scan", "ask_tuned")
+
+# the flat solve_batch kwargs that map onto first-class fields
+_FIELD_KWARGS = ("plan", "observed", "mesh", "pad_to", "capacities",
+                 "p_subdiv", "safety_factor", "num_buckets", "quantize",
+                 "policy", "block_until_ready")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Everything that shapes one batched-serving dispatch.
+
+    All fields default to "unset" (None / empty) and only non-None values
+    are forwarded, so ``EngineOptions()`` reproduces the bare
+    ``solve_batch(problem, bounds)`` call exactly.
+    """
+
+    engine: str = "ask_scan"  # "ask_scan" | "ask_tuned"
+    plan: Any = None          # planner switch: True | int K | CapacityPlan
+    observed: Any = None      # core.feedback.OccupancyEstimator
+    mesh: Any = None          # jax.sharding.Mesh (frame-axis sharding)
+    pad_to: Optional[int] = None
+    capacities: Optional[Tuple[int, ...]] = None
+    p_subdiv: Optional[float] = None
+    safety_factor: Optional[float] = None
+    num_buckets: Optional[int] = None
+    quantize: Any = None
+    policy: Union[KernelPolicy, str, None] = None  # kernel routing override
+    block_until_ready: Optional[bool] = None
+    extra: Tuple[Tuple[str, Any], ...] = ()  # expert knobs (p_deep, ...)
+
+    def __post_init__(self):
+        if self.engine not in _ENGINES:
+            raise ValueError(
+                f"engine must be one of {_ENGINES}, got {self.engine!r}")
+        if self.policy is not None:
+            object.__setattr__(self, "policy",
+                               KernelPolicy.coerce(self.policy))
+        if self.capacities is not None:
+            object.__setattr__(self, "capacities",
+                               tuple(int(c) for c in self.capacities))
+        extra = self.extra
+        if not isinstance(extra, tuple):
+            extra = tuple(sorted(dict(extra).items()))
+        else:
+            extra = tuple(sorted((str(k), v) for k, v in extra))
+        object.__setattr__(self, "extra", extra)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def coerce(cls, value: Union["EngineOptions", str, None]) -> "EngineOptions":
+        """Pass an instance through; accept an engine name as shorthand."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(engine=value)
+        raise TypeError(
+            f"options must be EngineOptions or engine name, got {type(value)}")
+
+    @classmethod
+    def from_kwargs(cls, kw: dict, *, engine: str = "ask_scan") -> "EngineOptions":
+        """Fold a legacy flat-kwargs dict into an EngineOptions.
+
+        Known keys become first-class fields; everything else (planner
+        expert knobs) lands in ``extra``. Consumes from a copy -- the
+        caller's dict is untouched.
+        """
+        kw = dict(kw)
+        fields = {name: kw.pop(name) for name in _FIELD_KWARGS if name in kw}
+        return cls(engine=engine, extra=tuple(sorted(kw.items())), **fields)
+
+    # -- application --------------------------------------------------------
+
+    def apply_to(self, problem):
+        """Return ``problem`` with this option set's kernel routing applied
+        (tuned engine and/or explicit policy override); a no-op problem
+        pass-through when neither is set."""
+        pol = self.policy if self.policy is not None else problem.policy
+        if self.engine == "ask_tuned":
+            pol = pol.with_backend("tuned")
+        if pol == problem.policy:
+            return problem
+        return dataclasses.replace(problem, policy=pol)
+
+    def engine_kwargs(self) -> dict:
+        """The flat kwargs dict the underlying engines expect (non-None
+        fields only; ``engine`` / ``mesh`` / ``plan`` / ``policy`` are
+        consumed by ``solve_batch`` itself and excluded here)."""
+        out = {}
+        for name in ("observed", "pad_to", "capacities", "p_subdiv",
+                     "safety_factor", "num_buckets", "quantize",
+                     "block_until_ready"):
+            value = getattr(self, name)
+            if value is not None:
+                out[name] = value
+        out.update(self.extra)
+        return out

@@ -100,14 +100,20 @@ class WorkloadSpec:
 
     # -- the per-point function --------------------------------------------
 
-    def values(self, cr: jax.Array, ci: jax.Array, max_dwell: int) -> jax.Array:
+    def values(self, cr: jax.Array, ci: jax.Array, max_dwell: int,
+               *, unroll: int = 1) -> jax.Array:
         """Point values at mapped plane coordinates (THE function every
-        kernel body and oracle calls; see ``kernels.ref.dwell_compute``)."""
+        kernel body and oracle calls; see ``kernels.ref.dwell_compute``).
+
+        ``unroll`` is ``escape_time``'s bit-identity-preserving loop
+        grouping (the autotuned tier's scheduling knob); grid workloads
+        have no iteration loop and ignore it."""
         if self.kind == "grid":
             return self.grid_fn(cr, ci)
         return ref.escape_time(cr, ci, max_dwell, init=self.init,
                                step=self.step,
-                               escape_radius2=self.escape_radius2)
+                               escape_radius2=self.escape_radius2,
+                               unroll=unroll)
 
     # -- homogeneity predicate ---------------------------------------------
 

@@ -171,6 +171,18 @@ def test_ask_scan_matches_golden(golden, workload):
 
 
 @pytest.mark.parametrize("workload", WORKLOADS)
+def test_ask_tuned_matches_golden(golden, workload):
+    """The autotuned engine rung: kernel routing and scheduling come from
+    the tuned tier (``kernels.autotune`` heuristics here -- cold cache),
+    which may re-block and re-unroll but NEVER change pixels."""
+    from repro.workloads import solve
+
+    canvas, st = solve(_problem(workload), "ask_tuned", safety_factor=1e9)
+    _assert_matches(canvas, golden(workload), f"ask_tuned[{workload}]")
+    assert st.overflow_dropped == 0 and st.kernel_launches == 1
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
 def test_planned_matches_golden(golden, workload):
     """The capacity-planned batch path: planning may resize rings and
     retry -- from each workload's OWN prior band -- never change pixels."""

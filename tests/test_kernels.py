@@ -23,6 +23,11 @@ def test_flat_dwell_kernel_matches_oracle(n, block, dwell):
     got = mandelbrot_dwell(n, max_dwell=dwell, block=block, interpret=True)
     want = ref.mandelbrot_ref(n, max_dwell=dwell)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # unroll re-groups the escape loop without changing any per-point op
+    # sequence: bit-identical for every factor (the tuned tier's lever)
+    unrolled = mandelbrot_dwell(n, max_dwell=dwell, block=block,
+                                interpret=True, unroll=4)
+    np.testing.assert_array_equal(np.asarray(unrolled), np.asarray(want))
 
 
 @pytest.mark.parametrize("side", [4, 8, 16])
@@ -93,16 +98,19 @@ def test_olt_compact_kernel(nbits):
 
 
 def test_ops_backends_agree():
-    """The public ops must give identical results on both backends."""
+    """The public ops must give identical results on every policy rung."""
+    from repro.kernels.policy import JNP_POLICY, PALLAS_POLICY, TUNED_POLICY
+
     n = 64
-    a = ops.mandelbrot(n, max_dwell=32, backend="pallas")
-    b = ops.mandelbrot(n, max_dwell=32, backend="jnp")
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    b = ops.mandelbrot(n, max_dwell=32, policy=JNP_POLICY)
+    for pol in (PALLAS_POLICY, TUNED_POLICY):
+        a = ops.mandelbrot(n, max_dwell=32, policy=pol)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     coords = jnp.array([[0, 1], [2, 3], [1, 1]], jnp.int32)
-    for backend in ("pallas", "jnp"):
+    for pol in (PALLAS_POLICY, JNP_POLICY, TUNED_POLICY):
         h, c = ops.perimeter_query(coords, side=16, n=n, max_dwell=32,
-                                   backend=backend)
+                                   policy=pol)
         hr, cr = ref.perimeter_query_ref(coords, side=16, n=n, max_dwell=32)
         np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
         np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))

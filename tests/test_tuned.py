@@ -1,0 +1,352 @@
+"""Tests for the autotuned kernel tier and its API surface.
+
+Covers the three layers the tier spans:
+
+* ``kernels.policy`` -- KernelPolicy validation, hashability (it keys the
+  jitted-pipeline cache through FrameProblem), legacy ``backend=`` shims;
+* ``kernels.autotune`` -- tuning-cache JSON round-trip, cold-cache
+  heuristic fallback, warm-cache lookup, trace-time ``choose`` memo, and
+  the interpret-mode CPU path exercising the Pallas lowerings the tuned
+  tier selects;
+* ``workloads`` -- ``ask_tuned`` bit-identity against ``ask_scan`` on
+  every registry workload (incl. the grid workload, which must route to
+  jnp), ``EngineOptions`` legacy-kwarg equivalence, and the RenderService
+  ``policy=`` knob.
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+from repro.kernels.policy import (Backend, DEFAULT_POLICY, JNP_POLICY,
+                                  KernelPolicy, PALLAS_POLICY, TUNED_POLICY,
+                                  resolve_policy)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    """choose() memoises per (cache, key); tests must not see each other."""
+    autotune.clear_memo()
+    yield
+    autotune.clear_memo()
+
+
+# ---------------------------------------------------------------------------
+# KernelPolicy
+
+
+def test_policy_is_frozen_and_hashable():
+    a = KernelPolicy(backend="tuned",
+                     overrides={"dwell": {"block": (64, 64), "unroll": 2}})
+    b = KernelPolicy(backend="tuned",
+                     overrides={"dwell": {"unroll": 2, "block": [64, 64]}})
+    assert a == b and hash(a) == hash(b)  # order/list-vs-tuple insensitive
+    assert a.override_for("dwell") == {"block": (64, 64), "unroll": 2}
+    assert a.override_for("olt_compact") == {}
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.backend = Backend.JNP
+
+
+def test_policy_validates_inputs():
+    with pytest.raises(ValueError):
+        KernelPolicy(backend="cuda")
+    with pytest.raises(ValueError):
+        KernelPolicy(overrides={"not_a_kernel": {"unroll": 2}})
+    with pytest.raises(TypeError):
+        KernelPolicy(overrides={"dwell": 3})
+
+
+def test_policy_with_backend_and_coerce():
+    pol = PALLAS_POLICY.with_backend("tuned")
+    assert pol.backend is Backend.TUNED
+    assert PALLAS_POLICY.backend is Backend.PALLAS  # original untouched
+    assert KernelPolicy.coerce("jnp") == JNP_POLICY
+    assert KernelPolicy.coerce(pol) is pol
+
+
+def test_policy_resolve_interpret_follows_platform():
+    import jax
+
+    on_tpu = jax.default_backend() == "tpu"
+    assert DEFAULT_POLICY.resolve_interpret() is (not on_tpu)
+    assert KernelPolicy(interpret=True).resolve_interpret() is True
+    assert KernelPolicy(interpret=False).resolve_interpret() is False
+
+
+def test_resolve_policy_shim_warns_and_maps():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        pol = resolve_policy("jnp", None)
+    assert pol.backend is Backend.JNP
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    # no kwargs -> the default, silently
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert resolve_policy(None, None) == DEFAULT_POLICY
+    assert not caught
+
+
+def test_resolve_policy_rejects_both():
+    with pytest.raises(ValueError, match="not both"):
+        resolve_policy("jnp", JNP_POLICY)
+
+
+def test_ops_legacy_backend_kwarg_still_works():
+    """The deprecated string kwarg must keep producing identical output."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = ops.mandelbrot(32, max_dwell=16, backend="jnp")
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    new = ops.mandelbrot(32, max_dwell=16, policy=JNP_POLICY)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+
+# ---------------------------------------------------------------------------
+# Tuning cache
+
+
+def test_tuning_cache_json_round_trip(tmp_path):
+    cache = autotune.TuningCache()
+    key = autotune.cache_key("dwell", n=256, max_dwell=128)
+    cache.put(key, autotune.Choice(
+        "pallas", (("block", (64, 64)), ("unroll", 4)),
+        source="measured", us=123.5))
+    path = tmp_path / "tc.json"
+    cache.save(str(path))
+    back = autotune.TuningCache.load(str(path))
+    assert back.entries == cache.entries
+    got = back.get(key)
+    assert got.impl == "pallas"
+    assert got.param_dict() == {"block": (64, 64), "unroll": 4}
+    assert got.us == 123.5
+
+
+def test_tuning_cache_rejects_wrong_version():
+    with pytest.raises(ValueError, match="version"):
+        autotune.TuningCache.from_json('{"version": 999, "entries": {}}')
+
+
+def test_cold_cache_falls_back_to_heuristic(tmp_path):
+    missing = tmp_path / "nope.json"
+    choice = autotune.choose("dwell", cache=str(missing), n=64, max_dwell=32)
+    assert choice.source == "heuristic"
+    assert choice.impl in ("jnp", "pallas")
+
+
+def test_warm_cache_wins_over_heuristic(tmp_path):
+    cache = autotune.TuningCache()
+    key = autotune.cache_key("dwell", n=64, max_dwell=32)
+    cache.put(key, autotune.Choice("pallas", (("block", (32, 32)),
+                                              ("unroll", 2)),
+                                   source="measured", us=1.0))
+    path = tmp_path / "tc.json"
+    cache.save(str(path))
+    choice = autotune.choose("dwell", cache=str(path), n=64, max_dwell=32)
+    assert choice.source == "cache"
+    assert choice.param_dict() == {"block": (32, 32), "unroll": 2}
+    # a signature NOT in the cache still heuristics
+    other = autotune.choose("dwell", cache=str(path), n=128, max_dwell=32)
+    assert other.source == "heuristic"
+
+
+def test_tune_measures_and_records(tmp_path):
+    cache = autotune.TuningCache()
+    best = autotune.tune("olt_compact", cache=cache, reps=1, tiny=True, n=32)
+    assert best.source == "measured" and best.us > 0
+    key = autotune.cache_key("olt_compact", n=32)
+    assert cache.get(key) == best
+    # and the persisted winner round-trips into choose()
+    path = tmp_path / "tc.json"
+    cache.save(str(path))
+    assert autotune.choose("olt_compact", cache=str(path),
+                           n=32).source == "cache"
+
+
+def test_grid_workload_always_routes_jnp():
+    from repro.workloads import get_workload
+
+    ssd = get_workload("ssd_synth")
+    assert autotune.heuristic("dwell", workload=ssd).impl == "jnp"
+    impl, _ = ops._route(TUNED_POLICY, "dwell", workload=ssd,
+                         n=64, max_dwell=32)
+    assert impl == "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Tuned routing through ops (interpret-mode Pallas lowering on CPU)
+
+
+def test_tuned_cache_can_force_pallas_lowering(tmp_path):
+    """A cache entry selecting the Pallas impl must drive the real kernel
+    through interpret mode on CPU -- and stay bit-identical."""
+    cache = autotune.TuningCache()
+    cache.put(autotune.cache_key("dwell", n=64, max_dwell=32),
+              autotune.Choice("pallas", (("block", (32, 32)), ("unroll", 2)),
+                              source="measured", us=1.0))
+    cache.put(autotune.cache_key("olt_compact", n=128),
+              autotune.Choice("pallas", (("block", 32),),
+                              source="measured", us=1.0))
+    path = tmp_path / "tc.json"
+    cache.save(str(path))
+    pol = KernelPolicy(backend="tuned", interpret=True,
+                       tuning_cache=str(path))
+
+    got = ops.mandelbrot(64, max_dwell=32, policy=pol)
+    want = ref.mandelbrot_ref(64, max_dwell=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    flags = jnp.asarray(np.random.default_rng(7).integers(0, 2, 128),
+                        jnp.int32)
+    ranks, count = ops.compact_ranks(flags, policy=pol)
+    want_r, want_c = ref.compact_ranks_ref(flags)
+    np.testing.assert_array_equal(np.asarray(ranks), np.asarray(want_r))
+    assert int(count) == int(want_c)
+
+
+def test_policy_overrides_beat_tuned_choice(tmp_path):
+    """Precedence: policy.overrides > cache entry > explicit kwarg."""
+    cache = autotune.TuningCache()
+    cache.put(autotune.cache_key("dwell", n=64, max_dwell=32),
+              autotune.Choice("jnp", (("unroll", 2),), us=1.0))
+    path = tmp_path / "tc.json"
+    cache.save(str(path))
+    pol = KernelPolicy(backend="tuned", tuning_cache=str(path),
+                       overrides={"dwell": {"unroll": 8}})
+    impl, params = ops._route(pol, "dwell", n=64, max_dwell=32)
+    assert impl == "jnp" and params["unroll"] == 8
+
+
+def test_blocked_olt_compact_matches_oracle():
+    from repro.kernels.olt_compact import compact_ranks_blocked
+
+    rng = np.random.default_rng(3)
+    for n, block in [(64, 16), (256, 64), (4096, 1024)]:
+        flags = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+        ranks, count = compact_ranks_blocked(flags, block=block)
+        want_r, want_c = ref.compact_ranks_ref(flags)
+        np.testing.assert_array_equal(np.asarray(ranks), np.asarray(want_r))
+        assert int(count[0]) == int(want_c)
+    with pytest.raises(ValueError, match="divisible"):
+        compact_ranks_blocked(jnp.zeros(100, jnp.int32), block=48)
+
+
+# ---------------------------------------------------------------------------
+# ask_tuned engine: bit-identity across the registry
+
+
+def _problem(workload, **kw):
+    from repro.workloads import FrameProblem
+
+    kw.setdefault("backend", "jnp")
+    return FrameProblem(n=256, g=4, r=2, B=16, max_dwell=64,
+                        workload=workload, **kw)
+
+
+@pytest.mark.parametrize("workload", ["mandelbrot", "julia", "burning_ship",
+                                      "multibrot", "ssd_synth"])
+def test_ask_tuned_matches_ask_scan_all_workloads(workload):
+    """The acceptance bar: ask_tuned == ask_scan on every registry
+    workload's 256^2 default viewport, bit for bit."""
+    from repro.workloads import solve
+
+    base, _ = solve(_problem(workload), "ask_scan", safety_factor=1e9)
+    tuned, st = solve(_problem(workload), "ask_tuned", safety_factor=1e9)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tuned))
+    assert st.kernel_launches == 1
+
+
+def test_frame_problem_policy_field_sync():
+    p = _problem("mandelbrot", backend="jnp")
+    assert p.policy == JNP_POLICY and p.backend == "jnp"
+    q = _problem("mandelbrot", backend="pallas",
+                 policy=KernelPolicy(backend="tuned"))
+    assert q.backend == "tuned"  # policy wins, backend field re-synced
+    r = dataclasses.replace(p, policy=p.policy.with_backend("tuned"))
+    assert r.backend == "tuned" and r != p  # distinct pipeline-cache keys
+
+
+# ---------------------------------------------------------------------------
+# EngineOptions
+
+
+def test_engine_options_legacy_equivalence():
+    from repro.workloads import EngineOptions, solve_batch
+
+    p = _problem("mandelbrot")
+    bb = np.array([list(p.bounds)], np.float32)
+    legacy, rep1 = solve_batch(p, bb, plan=2)
+    via_opts, rep2 = solve_batch(p, bb, options=EngineOptions(plan=2))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(via_opts))
+    assert rep1.overflow_dropped == rep2.overflow_dropped == 0
+
+
+def test_engine_options_from_kwargs_round_trip():
+    from repro.workloads import EngineOptions
+
+    opts = EngineOptions.from_kwargs(
+        {"plan": 2, "observed": None, "p_deep": 0.9, "num_buckets": 3})
+    assert opts.plan == 2 and opts.num_buckets == 3
+    assert dict(opts.extra) == {"p_deep": 0.9}
+    assert opts.engine_kwargs() == {"num_buckets": 3, "p_deep": 0.9}
+
+
+def test_engine_options_validation():
+    from repro.workloads import EngineOptions
+
+    with pytest.raises(ValueError, match="engine"):
+        EngineOptions(engine="warp")
+    with pytest.raises(TypeError):
+        EngineOptions.coerce(42)
+    assert EngineOptions.coerce("ask_tuned").engine == "ask_tuned"
+
+
+def test_engine_options_apply_to_switches_policy():
+    from repro.workloads import EngineOptions
+
+    p = _problem("mandelbrot")
+    tuned = EngineOptions(engine="ask_tuned").apply_to(p)
+    assert tuned.policy.backend is Backend.TUNED
+    assert EngineOptions().apply_to(p) is p  # no-op pass-through
+
+
+def test_engine_options_tuned_batch_identical():
+    from repro.workloads import EngineOptions, solve_batch
+
+    p = _problem("julia")
+    bb = np.array([list(p.bounds), [-0.8, -0.8, 0.8, 0.8]], np.float32)
+    base, _ = solve_batch(p, bb)
+    tuned, _ = solve_batch(p, bb, options=EngineOptions(engine="ask_tuned"))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tuned))
+
+
+def test_solve_batch_rejects_options_plus_legacy():
+    from repro.workloads import EngineOptions, solve_batch
+
+    p = _problem("mandelbrot")
+    bb = np.array([list(p.bounds)], np.float32)
+    with pytest.raises(ValueError, match="not both"):
+        solve_batch(p, bb, options=EngineOptions(), plan=2)
+
+
+# ---------------------------------------------------------------------------
+# RenderService policy knob
+
+
+def test_render_service_policy_identical():
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService
+
+    p = _problem("mandelbrot")
+    bb = np.array([list(p.bounds)] * 2, np.float32)
+    mesh = make_frames_mesh(1)
+    base, _ = RenderService(p, mesh=mesh, chunk_frames=2,
+                            pipeline_depth=1).render(bb)
+    tuned_svc = RenderService(p, mesh=mesh, chunk_frames=2,
+                              pipeline_depth=1, policy="tuned")
+    assert tuned_svc.problem.policy.backend is Backend.TUNED
+    tuned, _ = tuned_svc.render(bb)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(tuned))
