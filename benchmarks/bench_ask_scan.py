@@ -14,10 +14,16 @@ measurable across the whole engine ladder:
   ask_tuned  ask_scan with autotuned kernel routing  (same dispatches,
                                                       tuned schedules)
 
+  ask_pooled one dispatch for a WHOLE batch, one     (lambda paid once per
+             cross-frame pooled worklist per level    batch, ring ~ summed
+                                                      expected occupancy)
+
 The ``tuned_tier`` suite additionally emits a machine-readable
 ``BENCH_6.json`` (dispatches / ring rows / wall times / tuned-vs-jnp
-speedup per registry workload) that CI's ``compare_bench`` gate diffs
-against the checked-in baseline.
+speedup per registry workload) and the ``pooled_tier`` suite a
+``BENCH_7.json`` (pooled vs per-frame-planned ring rows on a
+heterogeneous batch); CI's ``compare_bench`` gate diffs both against
+the checked-in baselines.
 
 Rows (``name,case,value``):
   ask_scan_launches_<m>      kernel dispatch count
@@ -521,7 +527,90 @@ def tuned_tier(writer, n=256, dwell=64, bench_json=None):
     return payload
 
 
-def run(writer, full=False, bench_json=None):
+def pooled_tier(writer, n=512, dwell=128, n_sparse=12, n_dense=4,
+                bench_json=None):
+    """Cross-frame pooled worklists vs the per-frame capacity plan.
+
+    The same heterogeneous zoom batch as ``planner_batch`` (a sparse
+    zoomed-out majority plus a deep seahorse-valley tail), solved two
+    ways: the bucketed per-frame plan (``plan=4``, each bucket's ring
+    sized for its WORST member) and the ``ask_pooled`` engine (one
+    compacted cross-frame worklist per level, the ring sized from the
+    SUM of per-frame expected occupancies). Pooling must land strictly
+    below the per-frame plan's total ring rows -- averaging over a
+    heterogeneous batch beats per-bucket maxima -- in ONE dispatch with
+    zero overflow-drops and a bit-identical canvas. With ``bench_json``
+    the numbers are written as the machine-readable ``BENCH_7.json``
+    that CI's ``compare_bench`` gate diffs (the pooled config is the
+    SAME in smoke and full mode so the checked-in baseline's exact
+    ring-row / dispatch budgets stay comparable).
+    """
+    from repro.workloads import EngineOptions
+
+    prob = MandelbrotProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                             backend="jnp")
+
+    def window(cx, cy, w):
+        return (cx - w / 2, cy - w / 2, cx + w / 2, cy + w / 2)
+
+    widths = np.geomspace(16.0, 4.0, n_sparse)
+    sparse = [window(-0.5, 0.0, float(w)) for w in widths]
+    dense = [window(-0.7436447860, 0.1318252536, 3.0 / 2 ** k)
+             for k in np.linspace(4, 12, n_dense)]
+    bounds = sparse + dense
+    F = len(bounds)
+    case = f"n={n} f={F}"
+
+    planned_canv, base_rep = solve_batch(prob, bounds, plan=4)  # warm
+    t_plan = _best_time(lambda: solve_batch(prob, bounds, plan=4), reps=2)
+
+    opts = EngineOptions(engine="ask_pooled", plan=True)
+    pooled_canv, pool_rep = solve_batch(prob, bounds, options=opts)  # warm
+    t_pool = _best_time(lambda: solve_batch(prob, bounds, options=opts),
+                        reps=2)
+
+    identical = int(np.array_equal(np.asarray(planned_canv),
+                                   np.asarray(pooled_canv)))
+    below = int(pool_rep.ring_rows < base_rep.ring_rows)
+    speedup = t_plan / t_pool if t_pool > 0 else 0.0
+
+    writer("ask_pooled_frames", case, F)
+    writer("ask_pooled_dispatches", case, pool_rep.dispatches)
+    writer("ask_pooled_overflow", case, pool_rep.overflow_dropped)
+    writer("ask_pooled_ring_rows", case, pool_rep.ring_rows)
+    writer("ask_pooled_planned_ring_rows", case, base_rep.ring_rows)
+    writer("ask_pooled_ring_vs_planned", case,
+           pool_rep.ring_rows / base_rep.ring_rows
+           if base_rep.ring_rows else 0.0)
+    writer("ask_pooled_below_planned", case, below)
+    writer("ask_pooled_wall_ms_planned", case, t_plan * 1e3)
+    writer("ask_pooled_wall_ms_pooled", case, t_pool * 1e3)
+    writer("ask_pooled_speedup", case, speedup)
+    writer("ask_pooled_identical", case, identical)
+
+    payload = {"version": 1,
+               "config": {"n": n, "max_dwell": dwell, "g": 4, "r": 2,
+                          "B": 16, "n_sparse": n_sparse,
+                          "n_dense": n_dense},
+               "workloads": {"mixed_mandelbrot": {
+                   "identical": identical,
+                   "dispatches": int(pool_rep.dispatches),
+                   "ring_rows": int(pool_rep.ring_rows),
+                   "planned_ring_rows": int(base_rep.ring_rows),
+                   "overflow": int(pool_rep.overflow_dropped),
+                   "below_planned": below,
+                   "wall_ms_planned": round(t_plan * 1e3, 3),
+                   "wall_ms_pooled": round(t_pool * 1e3, 3),
+                   "speedup": round(speedup, 4),
+               }}}
+    if bench_json:
+        with open(bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return payload
+
+
+def run(writer, full=False, bench_json=None, bench_json_pooled=None):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
@@ -531,6 +620,7 @@ def run(writer, full=False, bench_json=None):
         feedback_serving(writer, n=256, dwell=128, frames=96, chunk=8)
         workload_serving(writer, n=512, dwell=128, frames=48, chunk=8)
         tuned_tier(writer, n=256, dwell=128, bench_json=bench_json)
+        pooled_tier(writer, bench_json=bench_json_pooled)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
@@ -540,3 +630,4 @@ def run(writer, full=False, bench_json=None):
         feedback_serving(writer, n=256, dwell=64, frames=48, chunk=4)
         workload_serving(writer, n=256, dwell=64, frames=24, chunk=4)
         tuned_tier(writer, n=256, dwell=64, bench_json=bench_json)
+        pooled_tier(writer, bench_json=bench_json_pooled)

@@ -1,80 +1,146 @@
-"""CI gate: diff a fresh tuned-tier BENCH json against the baseline.
+"""CI gate: diff a fresh BENCH json against a checked-in baseline.
 
 ``python -m benchmarks.compare_bench BENCH_6.json bench_now.json`` exits
 nonzero -- loudly, with a per-workload table -- when the fresh run
-regresses the checked-in baseline:
+regresses the baseline. Failures are split into two classes:
 
-* exact invariants (any violation fails): the tuned engine must stay
-  bit-identical (``identical == 1``), must not add dispatches, and must
-  not grow the OLT ring;
-* loose perf bounds (tolerance-gated, CI machines are noisy): the
-  tuned-vs-jnp speedup may not collapse below ``--speedup-floor-frac`` of
-  the baseline's (floored at ``--min-speedup``), and the tuned wall time
-  may not blow past ``--wall-tol`` times the baseline's.
-
-Workloads present only in the fresh run pass (new registry entries);
-workloads missing from the fresh run fail (silent coverage loss).
+* HARD failures -- deterministic invariants a re-run cannot fix (any
+  violation fails immediately, never retried): schema version changes,
+  workloads missing from the fresh run (silent coverage loss), engines
+  no longer bit-identical (``identical != 1``), rows dropped
+  (``overflow != 0``), a pooled ring no longer beating the per-frame
+  plan (``below_planned != 1``), dispatch counts growing, ring rows
+  growing. Each is checked only when the baseline row carries the field,
+  so one gate serves every BENCH schema (the tuned-tier BENCH_6, the
+  pooled BENCH_7, future suites).
+* SOFT failures -- wall-clock-derived checks that flake on noisy CI
+  machines: the speedup may not collapse below ``--speedup-floor-frac``
+  of the baseline's (floored at ``--min-speedup``), and no ``wall_ms_*``
+  field may blow past ``--wall-tol`` times its baseline value. When a
+  run fails ONLY softly and ``--remeasure-cmd`` is given, the command is
+  re-run (up to ``--max-retries`` times) to produce a fresh measurement;
+  each retry is merged best-of into the candidate (min wall, max
+  speedup) before re-checking -- so a single scheduler hiccup does not
+  fail the gate, while a real sustained regression still does.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
+
+# exact-valued invariant fields: checked when the BASELINE row has them,
+# against the value a healthy run must report
+_INVARIANTS = (
+    ("identical", 1, "engines no longer bit-identical"),
+    ("overflow", 0, "rows dropped (overflow != 0)"),
+    ("below_planned", 1, "pooled ring no longer below the per-frame plan"),
+)
+
+# monotone budget fields: the fresh value must not exceed the baseline's
+_BUDGETS = ("dispatches", "ring_rows")
 
 
 def compare(baseline: dict, fresh: dict, *, wall_tol: float = 5.0,
             speedup_floor_frac: float = 0.5,
-            min_speedup: float = 0.6) -> list[str]:
-    """Return the list of human-readable failures (empty == gate passes)."""
-    failures: list[str] = []
+            min_speedup: float = 0.6) -> tuple[list[str], list[str]]:
+    """-> (hard failures, soft failures); both empty == gate passes."""
+    hard: list[str] = []
+    soft: list[str] = []
     if fresh.get("version") != baseline.get("version"):
-        failures.append(
+        hard.append(
             f"schema version changed: baseline {baseline.get('version')} "
             f"vs fresh {fresh.get('version')}")
-        return failures
+        return hard, soft
     base_wl = baseline.get("workloads", {})
     new_wl = fresh.get("workloads", {})
     for name in sorted(base_wl):
         if name not in new_wl:
-            failures.append(f"{name}: missing from the fresh run "
-                            "(coverage regression)")
+            hard.append(f"{name}: missing from the fresh run "
+                        "(coverage regression)")
             continue
         b, f = base_wl[name], new_wl[name]
-        if f["identical"] != 1:
-            failures.append(f"{name}: ask_tuned no longer bit-identical "
-                            "to ask_scan")
-        if f["dispatches"] > b["dispatches"]:
-            failures.append(
-                f"{name}: dispatches grew {b['dispatches']} -> "
-                f"{f['dispatches']}")
-        if f["ring_rows"] > b["ring_rows"]:
-            failures.append(
-                f"{name}: ring_rows grew {b['ring_rows']} -> "
-                f"{f['ring_rows']}")
-        floor = max(b["speedup"] * speedup_floor_frac, min_speedup)
-        if f["speedup"] < floor:
-            failures.append(
-                f"{name}: speedup collapsed {b['speedup']:.3f} -> "
-                f"{f['speedup']:.3f} (floor {floor:.3f})")
-        if f["wall_ms_tuned"] > b["wall_ms_tuned"] * wall_tol:
-            failures.append(
-                f"{name}: tuned wall {f['wall_ms_tuned']:.1f}ms > "
-                f"{wall_tol}x baseline {b['wall_ms_tuned']:.1f}ms")
-    return failures
+        for field, want, label in _INVARIANTS:
+            if field in b and f.get(field) != want:
+                hard.append(f"{name}: {label} ({field}={f.get(field)!r})")
+        for field in _BUDGETS:
+            if field in b and f.get(field, 0) > b[field]:
+                hard.append(f"{name}: {field} grew {b[field]} -> "
+                            f"{f.get(field)}")
+        if "speedup" in b:
+            floor = max(b["speedup"] * speedup_floor_frac, min_speedup)
+            if f.get("speedup", 0.0) < floor:
+                soft.append(
+                    f"{name}: speedup collapsed {b['speedup']:.3f} -> "
+                    f"{f.get('speedup', 0.0):.3f} (floor {floor:.3f})")
+        for field in sorted(b):
+            if not field.startswith("wall_ms_"):
+                continue
+            fv = f.get(field)
+            if fv is not None and fv > b[field] * wall_tol:
+                soft.append(
+                    f"{name}: {field} {fv:.1f}ms > {wall_tol}x baseline "
+                    f"{b[field]:.1f}ms")
+    return hard, soft
+
+
+def merge_best(candidate: dict, fresh: dict) -> dict:
+    """Fold a re-measurement into the candidate, best-of per workload:
+    min over every ``wall_ms_*`` field, max over ``speedup``. Exact
+    fields (identical / overflow / counts) keep the LATEST run's values
+    -- a re-measure must reproduce the invariants on its own, best-of
+    only smooths wall-clock noise."""
+    out = dict(fresh)
+    out["workloads"] = {}
+    cand_wl = candidate.get("workloads", {})
+    for name, row in fresh.get("workloads", {}).items():
+        prev = cand_wl.get(name, {})
+        merged = dict(row)
+        for field, value in row.items():
+            if field.startswith("wall_ms_") and field in prev:
+                merged[field] = min(prev[field], value)
+            elif field == "speedup" and field in prev:
+                merged[field] = max(prev[field], value)
+        out["workloads"][name] = merged
+    return out
+
+
+def _print_table(fresh: dict) -> None:
+    for name in sorted(fresh.get("workloads", {})):
+        row = fresh["workloads"][name]
+        cells = []
+        for field in ("identical", "overflow", "below_planned",
+                      "dispatches", "ring_rows"):
+            if field in row:
+                cells.append(f"{field}={row[field]}")
+        for field in sorted(row):
+            if field.startswith("wall_ms_"):
+                cells.append(f"{field[8:]}={row[field]:.1f}ms")
+        if "speedup" in row:
+            cells.append(f"speedup={row['speedup']:.3f}")
+        print(f"{name:>18}: " + " ".join(cells))
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail when a fresh BENCH json regresses the baseline")
-    ap.add_argument("baseline", help="checked-in BENCH_6.json")
+    ap.add_argument("baseline", help="checked-in BENCH_N.json")
     ap.add_argument("fresh", help="json from the current run")
     ap.add_argument("--wall-tol", type=float, default=5.0,
-                    help="tuned wall-time blowup factor allowed (CI noise)")
+                    help="wall-time blowup factor allowed (CI noise)")
     ap.add_argument("--speedup-floor-frac", type=float, default=0.5,
                     help="fraction of baseline speedup that must survive")
     ap.add_argument("--min-speedup", type=float, default=0.6,
                     help="absolute floor for the speedup check")
+    ap.add_argument("--remeasure-cmd", default=None,
+                    help="shell command that regenerates the fresh json; "
+                         "run on SOFT (wall-clock) failures only, merged "
+                         "best-of before re-checking")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="re-measurements allowed before a soft failure "
+                         "becomes final")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as fh:
@@ -82,24 +148,35 @@ def main(argv=None) -> int:
     with open(args.fresh) as fh:
         fresh = json.load(fh)
 
-    failures = compare(baseline, fresh, wall_tol=args.wall_tol,
-                       speedup_floor_frac=args.speedup_floor_frac,
-                       min_speedup=args.min_speedup)
+    kw = dict(wall_tol=args.wall_tol,
+              speedup_floor_frac=args.speedup_floor_frac,
+              min_speedup=args.min_speedup)
+    hard, soft = compare(baseline, fresh, **kw)
 
-    for name in sorted(fresh.get("workloads", {})):
-        row = fresh["workloads"][name]
-        print(f"{name:>14}: identical={row['identical']} "
-              f"dispatches={row['dispatches']} ring_rows={row['ring_rows']} "
-              f"jnp={row['wall_ms_jnp']:.1f}ms "
-              f"tuned={row['wall_ms_tuned']:.1f}ms "
-              f"speedup={row['speedup']:.3f}")
+    retries = 0
+    while (soft and not hard and args.remeasure_cmd
+           and retries < args.max_retries):
+        retries += 1
+        print(f"soft (wall-clock) failure; re-measuring "
+              f"({retries}/{args.max_retries}): {args.remeasure_cmd}",
+              file=sys.stderr)
+        subprocess.run(args.remeasure_cmd, shell=True, check=True)
+        with open(args.fresh) as fh:
+            fresh = merge_best(fresh, json.load(fh))
+        hard, soft = compare(baseline, fresh, **kw)
+
+    _print_table(fresh)
+    failures = hard + soft
     if failures:
         print(f"\nBENCH REGRESSION ({len(failures)} failure(s)):",
               file=sys.stderr)
-        for f in failures:
-            print(f"  FAIL: {f}", file=sys.stderr)
+        for f in hard:
+            print(f"  FAIL (hard): {f}", file=sys.stderr)
+        for f in soft:
+            print(f"  FAIL (soft): {f}", file=sys.stderr)
         return 1
-    print("\nbench gate OK: no regression vs baseline")
+    suffix = f" after {retries} re-measure(s)" if retries else ""
+    print(f"\nbench gate OK: no regression vs baseline{suffix}")
     return 0
 
 

@@ -11,11 +11,14 @@ summary per suite. Suites:
   moe         -> beyond-paper: OLT-dispatch MoE
   roofline    -> deliverable (g): printed from experiments/dryrun if present
 
-``python -m benchmarks.run [--suite X] [--full] [--json PATH]``
+``python -m benchmarks.run [--suite X] [--full] [--json PATH]
+[--json-pooled PATH]``
 
 ``--json PATH`` (ask_scan suite) additionally writes the machine-readable
-tuned-tier comparison (``BENCH_6.json`` schema) that CI's
-``benchmarks.compare_bench`` gate diffs against the checked-in baseline.
+tuned-tier comparison (``BENCH_6.json`` schema) and ``--json-pooled PATH``
+the pooled-vs-planned comparison (``BENCH_7.json`` schema); CI's
+``benchmarks.compare_bench`` gate diffs both against the checked-in
+baselines.
 """
 
 from __future__ import annotations
@@ -32,6 +35,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the tuned-tier BENCH json (ask_scan suite)")
+    ap.add_argument("--json-pooled", default=None, metavar="PATH",
+                    help="write the pooled-tier BENCH json (ask_scan suite)")
     args = ap.parse_args(argv)
 
     def writer(name, case, value):
@@ -49,8 +54,9 @@ def main(argv=None) -> None:
     if args.suite in ("all", "ask_scan"):
         from benchmarks import bench_ask_scan
         suites.append(("ask_scan",
-                       lambda: bench_ask_scan.run(writer, full=args.full,
-                                                  bench_json=args.json)))
+                       lambda: bench_ask_scan.run(
+                           writer, full=args.full, bench_json=args.json,
+                           bench_json_pooled=args.json_pooled)))
     if args.suite in ("all", "landscape"):
         from benchmarks import bench_landscape
         suites.append(("landscape",

@@ -413,15 +413,47 @@ class OccupancyEstimator:
 
     @classmethod
     def restore(cls, state: dict) -> "OccupancyEstimator":
-        """Rebuild an estimator from ``snapshot()`` output (parsed JSON)."""
+        """Rebuild an estimator from ``snapshot()`` output (parsed JSON).
+
+        Snapshot files live outside the process (service restarts read
+        whatever is on disk), so restore SANITIZES instead of ingesting
+        blindly: non-finite or out-of-range EWMA entries and malformed
+        band triples are dropped (falling back to the prior, exactly as
+        if never observed) rather than poisoning later ``predict()``
+        calls -- a NaN EWMA would flow straight through ``_clamp``'s
+        min/max into every capacity vector planned from it. Entries for
+        workloads this process never serves are harmless and kept (they
+        are only consulted under their own namespace). Structurally
+        unusable snapshots (wrong version, bad config) still raise.
+        """
         version = state.get("version")
         if version != 1:
             raise ValueError(f"unknown estimator snapshot version {version!r}")
         est = cls(**state["config"])
-        est._bands = {k: tuple(float(x) for x in v)
-                      for k, v in state.get("bands", {}).items()}
-        est._ewma = {(str(k), int(b)): float(v)
-                     for k, b, v in state.get("ewma", [])}
-        est.frames_observed = int(state.get("frames_observed", 0))
-        est.chunks_observed = int(state.get("chunks_observed", 0))
+        bands = {}
+        for k, v in state.get("bands", {}).items():
+            try:
+                band = tuple(float(x) for x in v)
+            except (TypeError, ValueError):
+                continue
+            if len(band) != 3 or not all(math.isfinite(x) for x in band):
+                continue
+            deep, slope, p_min = band
+            if not (0.0 < p_min <= deep <= 1.0) or slope < 0.0:
+                continue
+            bands[str(k)] = band
+        est._bands = bands
+        ewma = {}
+        for entry in state.get("ewma", []):
+            try:
+                k, b, v = entry
+                key, bucket, val = str(k), int(b), float(v)
+            except (TypeError, ValueError):
+                continue
+            if not math.isfinite(val) or not 0.0 < val <= 1.0:
+                continue
+            ewma[(key, bucket)] = val
+        est._ewma = ewma
+        est.frames_observed = max(0, int(state.get("frames_observed", 0) or 0))
+        est.chunks_observed = max(0, int(state.get("chunks_observed", 0) or 0))
         return est

@@ -32,6 +32,7 @@ __all__ = [
     "compact_ranks",
     "compact_gather",
     "subdivide_olt",
+    "subdivide_olt_tagged",
     "ring_init",
     "ring_read",
     "ring_write",
@@ -168,6 +169,36 @@ def subdivide_olt(
     idx = base[:, None] + jnp.arange(R)[None, :]  # [N, R]
     out = jnp.zeros((capacity, 2), dtype=coords.dtype)
     out = out.at[idx.reshape(-1)].set(children.reshape(-1, 2), mode="drop")
+    return out, count * R
+
+
+@functools.partial(jax.jit, static_argnames=("r", "capacity"))
+def subdivide_olt_tagged(
+    rows: jax.Array, flags: jax.Array, *, r: int, capacity: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Frame-tagged OLT step for the POOLED cross-frame worklist.
+
+    ``rows`` is [N, 3] int32 ``(frame, cy, cx)`` -- one worklist holding
+    regions from every frame of a dispatch. Subdivision multiplies only
+    the coordinate columns by ``r``; the frame tag is carried into all
+    r*r children unchanged. Insertion layout is identical to
+    ``subdivide_olt`` (flagged parent at rank k owns slots
+    ``[k*r*r, (k+1)*r*r)``), so because the pooled worklist keeps frames
+    in stable frame-major order, each frame's subsequence of children is
+    exactly what its private ``subdivide_olt`` would have produced.
+    Returns (child_rows [capacity, 3], child_count).
+    """
+    ranks, count = compact_ranks(flags)
+    R = r * r
+    dy, dx = jnp.meshgrid(jnp.arange(r), jnp.arange(r), indexing="ij")
+    offs = jnp.stack([jnp.zeros(R, jnp.int32), dy.ravel(), dx.ravel()],
+                     axis=-1).astype(rows.dtype)  # [R, 3]; frame offset 0
+    scale = jnp.asarray([1, r, r], dtype=rows.dtype)  # frame tag unscaled
+    children = rows[:, None, :] * scale[None, None, :] + offs[None, :, :]
+    base = jnp.where(flags, ranks * R, capacity)  # off-end drop for unflagged
+    idx = base[:, None] + jnp.arange(R)[None, :]  # [N, R]
+    out = jnp.zeros((capacity, 3), dtype=rows.dtype)
+    out = out.at[idx.reshape(-1)].set(children.reshape(-1, 3), mode="drop")
     return out, count * R
 
 

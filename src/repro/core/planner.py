@@ -68,9 +68,11 @@ __all__ = [
     "plan_from_p",
     "plan_capacities",
     "plan_frames",
+    "plan_pooled",
     "worst_case_capacities",
     "escalate_capacities",
     "solve_planned",
+    "solve_pooled",
 ]
 
 # int32 (cy, cx) coordinates: bytes per OLT row (public: the benchmarks
@@ -222,11 +224,18 @@ def estimate_frames(problem, widths: Sequence[float], *,
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
-    """One capacity class: the frames it serves and their shared ring."""
+    """One capacity class: the frames it serves and their shared ring.
+
+    ``pooled=True`` marks a cross-frame pooled bucket (``core.pooled``):
+    ``capacities`` is then ONE shared ring for all member frames (sized
+    from their summed occupancies) rather than a per-frame sizing, so
+    the bucket's ring cost is 2 x max(caps) TOTAL instead of per frame.
+    """
 
     frames: Tuple[int, ...]  # input-batch indices, original order
     p_subdiv: float  # planning P (max over member frames)
     capacities: Tuple[int, ...]  # per-level ring-slice capacities
+    pooled: bool = False
 
     @property
     def ring_rows_per_frame(self) -> int:
@@ -236,6 +245,8 @@ class BucketPlan:
 
     @property
     def ring_rows(self) -> int:
+        if self.pooled:
+            return self.ring_rows_per_frame  # ONE shared ring, all frames
         return len(self.frames) * self.ring_rows_per_frame
 
     @property
@@ -265,6 +276,7 @@ class CapacityPlan:
     frame_plans: Tuple[FramePlan, ...] = ()
     workload: str = ""
     workload_band: Union[Tuple[float, float, float], None] = None
+    pooled: bool = False  # True: one cross-frame bucket (plan_pooled)
 
     @property
     def frames(self) -> int:
@@ -517,6 +529,44 @@ def plan_frames(problem, bounds_batch, *, observed=None,
                        estimates=tuple(ests), frame_plans=tuple(fps))
 
 
+def plan_pooled(problem, bounds_batch, *, observed=None,
+                safety_factor: float = 1.25,
+                quantize: bool = False,
+                p_deep: Union[float, None] = None,
+                slope: Union[float, None] = None,
+                p_min: Union[float, None] = None,
+                ref_width: Union[float, None] = None,
+                ) -> CapacityPlan:
+    """Plan ONE pooled cross-frame bucket from summed occupancies.
+
+    Per-frame estimation is exactly ``plan_frames`` (zoom-depth prior,
+    optionally blended with an ``observed`` estimator's measurements,
+    optionally quantized), but instead of bucketing frames into capacity
+    classes the whole batch shares one ring sized per level from the SUM
+    of the members' expected occupancies (``pooled.pooled_capacities``):
+
+        cap_l = ceil(safety * sum_f E_l(P_f)),  clamped at F (g r^l)^2
+
+    On a heterogeneous batch the sum is far below F x the hottest
+    frame's capacity -- the pooled plan's ``ring_rows`` (2 x max caps,
+    TOTAL) undercuts the per-frame plan's ``sum_b |b| x 2 x max(caps_b)``
+    whenever the occupancy spread is real. Execute with ``solve_pooled``
+    (or ``solve_batch(..., options=EngineOptions(engine="ask_pooled",
+    plan=True))``).
+    """
+    from repro.core.pooled import pooled_capacities
+
+    base = plan_frames(problem, bounds_batch, observed=observed,
+                       num_buckets=1, safety_factor=safety_factor,
+                       quantize=quantize, p_deep=p_deep, slope=slope,
+                       p_min=p_min, ref_width=ref_width)
+    frame_ps = tuple(e.p_subdiv for e in base.estimates)
+    caps = pooled_capacities(problem, frame_ps, safety_factor=safety_factor)
+    bucket = BucketPlan(frames=tuple(range(len(frame_ps))),
+                        p_subdiv=max(frame_ps), capacities=caps, pooled=True)
+    return dataclasses.replace(base, buckets=(bucket,), pooled=True)
+
+
 # ---------------------------------------------------------------------------
 # execution: one compiled program per bucket + overflow-adaptive retry
 # ---------------------------------------------------------------------------
@@ -685,6 +735,144 @@ def solve_planned(problem, extras, *, plan: Union[CapacityPlan, None] = None,
                     break
             else:
                 work.append((tgt_caps, list(failed), tgt_pos, tgt_p))
+
+    report.wall_s = time.perf_counter() - t0
+    report.retried_frames = tuple(sorted(retried))
+    report.leaf_count = sum(int(c) for c in leaf_counts)
+    report.region_counts = tuple(region_counts)
+    report.frame_leaf_counts = tuple(int(c) for c in leaf_counts)
+    report.frame_p_subdiv = tuple(frame_p)
+    report.frame_p_source = (tuple(fp.source for fp in plan.frame_plans)
+                             if plan.frame_plans else ("prior",) * F)
+    report.overflow_dropped = 0  # the loop only exits once every frame fits
+    report.bucket_stats = tuple(bucket_stats)
+    states_out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return states_out, report
+
+
+def solve_pooled(problem, extras, *, plan: Union[CapacityPlan, None] = None,
+                 mesh=None, safety_factor: float = 1.25,
+                 max_dispatches: int = 64,
+                 **plan_kw) -> Tuple[Any, PlanReport]:
+    """Execute a pooled plan: ONE cross-frame dispatch + overflow retry.
+
+    The pooled counterpart of ``solve_planned``: the whole batch runs
+    through ``core.pooled`` as one worklist whose shared ring the plan
+    sized from the summed per-frame occupancies (``plan_pooled``; pass
+    ``observed=`` / ``quantize=`` / band knobs through ``plan_kw``).
+    ``extras`` must be the [F, 4] bounds array -- the pooled kernels
+    evaluate each row in its own frame's window.
+
+    Overflow stays per frame: any frame with a nonzero
+    ``ASKStats.frame_overflow`` entry is re-pooled at capacities doubled
+    per level, clamped at the pooled worst case for the retry pool's own
+    size (``pooled.escalate_pooled_capacities`` -- which cannot
+    overflow), so the loop terminates with ``overflow_dropped == 0``.
+    Under a mesh the initial dispatch sizes each shard's ring from its
+    OWN members' P (``frame_ps``), and ``ring_rows`` counts
+    ``n_dev x 2 x max(caps)`` per dispatch -- the actual pooled
+    allocation, against which the per-frame plan's ``ring_rows``
+    benchmark comparison is made.
+    """
+    from repro.core import pooled as pooled_lib
+
+    leaves = jax.tree_util.tree_leaves(extras)
+    if not leaves:
+        raise ValueError("extras must contain at least one array leaf")
+    F = int(np.asarray(leaves[0]).shape[0])
+    if plan is None:
+        plan = plan_pooled(problem, extras, safety_factor=safety_factor,
+                           **plan_kw)
+    elif plan_kw:
+        raise ValueError(
+            f"plan was given, so estimation kwargs {sorted(plan_kw)} would "
+            "be silently ignored -- drop them or drop the prebuilt plan")
+    if not plan.pooled:
+        raise ValueError(
+            "solve_pooled needs a pooled plan (plan_pooled / "
+            "CapacityPlan(pooled=True)); per-frame plans run under "
+            "solve_planned")
+    if plan.frames != F:
+        raise ValueError(f"plan covers {plan.frames} frames, batch has {F}")
+
+    worst = worst_case_capacities(problem)
+    n_dev = 1 if mesh is None else int(mesh.devices.size)
+    p_used = plan.buckets[0].p_subdiv
+    ps_all = (tuple(e.p_subdiv for e in plan.estimates)
+              or (p_used,) * F)  # hand-built plans may omit estimates
+    report = PlanReport(plan=plan, frames=F)
+    t0 = time.perf_counter()
+
+    out_leaves = None
+    treedef = None
+    leaf_counts = [0] * F
+    region_counts: list = [()] * F
+    frame_p: list = [float("nan")] * F
+    retried: set = set()
+    bucket_stats = []
+
+    # (capacities-or-None, frame indices): None sizes the initial pool
+    # from the plan (unsharded) / the members' own frame_ps (sharded)
+    work: list = [(None, list(range(F)))]
+    while work:
+        caps_exp, idx = work.pop(0)
+        if report.dispatches >= max_dispatches:
+            raise RuntimeError(
+                f"pooled planner exceeded max_dispatches={max_dispatches} "
+                f"without converging; frames still pending: {sorted(idx)}")
+        sel = _take_frames(extras, idx)
+        if mesh is None:
+            caps = (caps_exp if caps_exp is not None
+                    else plan.buckets[0].capacities)
+            states, st = pooled_lib.run_ask_pooled_batch(
+                problem, sel, capacities=caps)
+        elif caps_exp is not None:
+            states, st = pooled_lib.run_ask_pooled_sharded(
+                problem, sel, mesh=mesh, capacities=caps_exp)
+        else:
+            states, st = pooled_lib.run_ask_pooled_sharded(
+                problem, sel, mesh=mesh,
+                frame_ps=[ps_all[i] for i in idx],
+                safety_factor=plan.safety_factor)
+        caps_used = st.olt_caps
+        report.dispatches += 1
+        report.ring_rows += n_dev * 2 * max(caps_used)
+        bucket_stats.append(st)
+
+        host = jax.tree_util.tree_map(np.asarray, states)
+        flat, td = jax.tree_util.tree_flatten(host)
+        if out_leaves is None:
+            treedef = td
+            out_leaves = [np.zeros((F,) + leaf.shape[1:], leaf.dtype)
+                          for leaf in flat]
+        ok = [j for j in range(len(idx)) if st.frame_overflow[j] == 0]
+        if ok:
+            sel_idx = np.asarray([idx[j] for j in ok])
+            for out_leaf, leaf in zip(out_leaves, flat):
+                out_leaf[sel_idx] = leaf[np.asarray(ok)]
+            for j in ok:
+                leaf_counts[idx[j]] = st.frame_leaf_counts[j]
+                region_counts[idx[j]] = st.region_counts[j]
+                frame_p[idx[j]] = p_used
+
+        failed = [idx[j] for j in range(len(idx))
+                  if st.frame_overflow[j] != 0]
+        if failed:
+            retried.update(failed)
+            report.retries += len(failed)
+            shard_frames = (len(failed) if mesh is None
+                            else -(-len(failed) // n_dev))
+            ran_frames = (len(idx) if mesh is None
+                          else -(-len(idx) // n_dev))
+            tgt = pooled_lib.escalate_pooled_capacities(
+                caps_used, worst, shard_frames, failed,
+                dispatched_per_shard=ran_frames)
+            for item in work:
+                if item[0] == tgt:
+                    item[1].extend(failed)
+                    break
+            else:
+                work.append((tgt, list(failed)))
 
     report.wall_s = time.perf_counter() - t0
     report.retried_frames = tuple(sorted(retried))

@@ -50,6 +50,8 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import policy as policy_lib
+
 __all__ = [
     "CACHE_VERSION",
     "Choice",
@@ -324,8 +326,12 @@ def _candidates(kernel: str, *, workload=None, tiny: bool = False,
 
 
 def _build_runner(kernel: str, impl: str, params: Dict[str, Any], *,
-                  workload=None, interpret: bool = True, **sig: Any):
-    """Return a zero-arg callable that runs one candidate to completion."""
+                  workload=None, interpret: bool | None = None, **sig: Any):
+    """Return a zero-arg callable that runs one candidate to completion.
+    ``interpret=None`` resolves from the kernel policy (not-on-TPU) so a
+    TPU tune sweep measures compiled kernels, not the interpreter."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     from repro.kernels import ref
     import numpy as np
 
@@ -424,7 +430,7 @@ def _build_runner(kernel: str, impl: str, params: Dict[str, Any], *,
 
 
 def tune(kernel: str, *, workload=None, cache: Optional[TuningCache] = None,
-         reps: int = 3, tiny: bool = False, interpret: bool = True,
+         reps: int = 3, tiny: bool = False, interpret: bool | None = None,
          **sig: Any) -> Choice:
     """Time every candidate for one (kernel, signature) and return the
     winner as a ``Choice(source="measured")``; records it in ``cache``."""
@@ -447,7 +453,7 @@ def tune(kernel: str, *, workload=None, cache: Optional[TuningCache] = None,
 
 def tune_problem(problem, *, cache: Optional[TuningCache] = None,
                  reps: int = 3, tiny: bool = False,
-                 interpret: bool = True) -> TuningCache:
+                 interpret: bool | None = None) -> TuningCache:
     """Tune every kernel the ask pipeline dispatches for ``problem``.
 
     Walks the subdivision chain (sides n/g, n/(g*r), ... down to B) and the

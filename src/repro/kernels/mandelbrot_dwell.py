@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import policy as policy_lib
 from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
@@ -45,7 +46,7 @@ def mandelbrot_dwell(
     bounds=DEFAULT_BOUNDS,
     max_dwell: int = 512,
     block: tuple[int, int] = (256, 256),
-    interpret: bool = True,
+    interpret: bool | None = None,
     workload=None,
     unroll: int = 1,
 ) -> jax.Array:
@@ -53,6 +54,8 @@ def mandelbrot_dwell(
     function inside the SAME kernel body; None keeps classic Mandelbrot.
     ``unroll`` is the escape loop's bit-identity-preserving grouping
     factor (an autotune candidate axis alongside ``block``)."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     by = min(block[0], n)
     bx = min(block[1], n)
     if n % by or n % bx:

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import policy as policy_lib
+
 
 def _kernel(flags_ref, ranks_ref, counts_ref):
     f = flags_ref[...].astype(jnp.int32)  # [N, E]
@@ -30,8 +32,10 @@ def _kernel(flags_ref, ranks_ref, counts_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def batched_ranks_kernel(flags: jax.Array, *, interpret: bool = True):
+def batched_ranks_kernel(flags: jax.Array, *, interpret: bool | None = None):
     """flags: [N, E] int32/bool. Returns (ranks [N, E], counts [1, E])."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N, E = flags.shape
     ranks, counts = pl.pallas_call(
         _kernel,

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import policy as policy_lib
+
 
 def _kernel(flags_ref, ranks_ref, count_ref):
     f = flags_ref[...].astype(jnp.int32)
@@ -58,9 +60,16 @@ def _kernel_blocked(flags_ref, ranks_ref, count_ref, carry_ref):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def compact_ranks_blocked(flags: jax.Array, *, block: int = 4096,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
     """Blockwise exclusive scan: flags [N] with N % block == 0.
-    Returns (ranks [N] int32, count [1] int32)."""
+    Returns (ranks [N] int32, count [1] int32).
+
+    ``interpret=None`` resolves from the kernel policy (interpret
+    everywhere but TPU) -- the old ``True`` default silently ran the
+    interpreter even when lowering on a real TPU backend unless every
+    caller overrode it."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N = flags.shape[0]
     if N % block:
         raise ValueError(f"N={N} must be divisible by block={block}")
@@ -83,8 +92,11 @@ def compact_ranks_blocked(flags: jax.Array, *, block: int = 4096,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def compact_ranks_kernel(flags: jax.Array, *, interpret: bool = True):
-    """flags: [N] bool/int32. Returns (ranks [N] int32, count [1] int32)."""
+def compact_ranks_kernel(flags: jax.Array, *, interpret: bool | None = None):
+    """flags: [N] bool/int32. Returns (ranks [N] int32, count [1] int32).
+    ``interpret=None`` resolves from the kernel policy (not-on-TPU)."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N = flags.shape[0]
     ranks, count = pl.pallas_call(
         _kernel,

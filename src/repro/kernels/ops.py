@@ -167,6 +167,67 @@ def region_dwell(canvas, coords, nonempty, *, side, n,
         interpret=pol.resolve_interpret(), workload=workload, unroll=unroll)
 
 
+def pooled_bounds(bounds_all, rows):
+    """Per-row plane windows for a pooled frame-tagged worklist.
+
+    ``bounds_all`` [F, 4] per-frame bounds; ``rows`` [N, 3] = (frame, cy,
+    cx). Returns a [4, N, 1, 1] array that unpacks along axis 0 exactly
+    like the scalar/[4] bounds the ref-kernel math destructures -- each
+    component broadcasts against the per-row coordinate planes, so every
+    row is evaluated in its OWN frame's window with the identical
+    elementwise f32 op order as the per-frame traced-bounds path."""
+    return jnp.moveaxis(bounds_all[rows[:, 0]], -1, 0)[:, :, None, None]
+
+
+def _pooled_scatter(canvas, rows, tiles, nonempty, *, side, n):
+    """Scatter per-row [side, side] tiles onto the tall pooled canvas
+    [F*n, n] at row offset frame*n -- frames are disjoint bands, so ONE
+    scatter serves the whole pool. Same drop-out-of-range idiom as the
+    jnp lowering of region_fill/region_dwell (bit-identical writes)."""
+    N = rows.shape[0]
+    iy = jnp.arange(side)
+    ys = (rows[:, 0:1, None] * n + rows[:, 1:2, None] * side
+          + iy[None, :, None])
+    xs = rows[:, 2:3, None] * side + iy[None, None, :]
+    ys = jnp.broadcast_to(ys, (N, side, side))
+    xs = jnp.broadcast_to(xs, (N, side, side))
+    ys = jnp.where(nonempty.reshape(()) > 0, ys, canvas.shape[0])
+    return canvas.at[ys.ravel(), xs.ravel()].set(tiles.ravel(), mode="drop")
+
+
+def region_fill_pooled(canvas, rows, values, nonempty, *, side, n):
+    """Pooled terminal work T: constant-fill frame-tagged regions.
+
+    ``rows`` [N, 3] = (frame, cy, cx), duplicate-padded like the
+    per-frame fill-OLT. The fill value is external (no plane math), so
+    the frame tag simply folds into the scatter row offset. The jnp
+    scatter is the only lowering: the Pallas fill kernel assumes a
+    square canvas, and this matches the traced-bounds batched path's
+    lowering anyway (same writes, same int32 values)."""
+    return _pooled_scatter(canvas, rows, jnp.broadcast_to(
+        values[:, None, None], (rows.shape[0], side, side)),
+        nonempty, side=side, n=n)
+
+
+def region_dwell_pooled(canvas, rows, nonempty, *, side, n, bounds_all,
+                        max_dwell=512, backend=None, policy=None,
+                        workload=None):
+    """Pooled last-level work A: interior values of frame-tagged leaves.
+
+    Each row's interior is evaluated in its own frame's window via
+    ``pooled_bounds`` (the dyn oracle broadcasts the [4, N, 1, 1] bounds
+    against its per-row planes); the tuned tier still contributes its
+    unroll schedule through the normal route."""
+    pol = resolve_policy(backend, policy)
+    _, params = _route(pol, "region_dwell", workload=workload,
+                       side=side, n=n, max_dwell=max_dwell)
+    unroll = int(params.get("unroll", 1))
+    tiles = ref.region_interior_dyn(
+        rows[:, 1:], side=side, n=n, bounds=pooled_bounds(bounds_all, rows),
+        max_dwell=max_dwell, workload=workload, unroll=unroll)
+    return _pooled_scatter(canvas, rows, tiles, nonempty, side=side, n=n)
+
+
 def compact_ranks(flags, *, backend=None, policy=None):
     """Exclusive-scan OLT compaction (atomicAdd replacement).
     Returns (ranks [N] int32, count scalar int32)."""

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import policy as policy_lib
 from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
@@ -58,13 +59,15 @@ def perimeter_query(
     n: int,
     bounds=DEFAULT_BOUNDS,
     max_dwell: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
     workload=None,
     unroll: int = 1,
 ):
     """coords: [N, 2] int32 (cy, cx). Returns (homog [N] bool, common [N]).
     ``workload`` (escape-time spec) swaps the per-point function; ``unroll``
     groups the escape loop (bit-identical, autotune candidate axis)."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N = coords.shape[0]
     kernel = functools.partial(
         _kernel, side=side, n=n, bounds=bounds, max_dwell=max_dwell,

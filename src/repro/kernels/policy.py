@@ -41,8 +41,9 @@ from typing import Mapping, Optional, Tuple, Union
 
 import jax
 
-__all__ = ["Backend", "KernelPolicy", "resolve_policy", "DEFAULT_POLICY",
-           "JNP_POLICY", "PALLAS_POLICY", "TUNED_POLICY", "KERNEL_NAMES"]
+__all__ = ["Backend", "KernelPolicy", "resolve_policy", "default_interpret",
+           "DEFAULT_POLICY", "JNP_POLICY", "PALLAS_POLICY", "TUNED_POLICY",
+           "KERNEL_NAMES"]
 
 # the kernels a policy can carry overrides for (ops.py entry points)
 KERNEL_NAMES = ("dwell", "perimeter_query", "region_fill", "region_dwell",
@@ -163,14 +164,32 @@ PALLAS_POLICY = KernelPolicy(backend=Backend.PALLAS)
 TUNED_POLICY = KernelPolicy(backend=Backend.TUNED)
 
 
+def default_interpret() -> bool:
+    """Interpret-mode resolution for kernel entry points called WITHOUT a
+    policy in scope (``interpret=None`` defaults on the raw kernel
+    modules): the default policy's decision -- interpret everywhere but
+    TPU. Kept as one function so the raw kernels and ``ops.py`` can never
+    drift apart on what "auto" means."""
+    return DEFAULT_POLICY.resolve_interpret()
+
+
 def resolve_policy(backend=None, policy=None, *,
-                   default: KernelPolicy = DEFAULT_POLICY) -> KernelPolicy:
+                   default: KernelPolicy = DEFAULT_POLICY,
+                   stacklevel: int = 3) -> KernelPolicy:
     """The deprecation shim every ``kernels.ops`` entry point routes
     through: ``policy=`` wins, a legacy ``backend=`` string is wrapped
     (with a ``DeprecationWarning``), neither yields ``default``.
 
     Passing both is an error -- silently preferring one would make the
     migration ambiguous at exactly the call sites it matters.
+
+    ``stacklevel`` positions the ``DeprecationWarning`` at the frame
+    that actually wrote ``backend=``: the default (3) is right for the
+    direct ``ops`` entry points (1 = here, 2 = the ops function, 3 = the
+    caller); wrappers that add a frame between the user and the ops call
+    (e.g. ``workloads.exhaustive``) resolve once themselves with a
+    larger value and pass the resolved policy down, so the user sees the
+    warning at THEIR ``backend=`` and it fires exactly once.
     """
     if policy is not None:
         if backend is not None:
@@ -183,5 +202,5 @@ def resolve_policy(backend=None, policy=None, *,
         "backend= strings on kernels.ops entry points are deprecated; "
         "pass policy=KernelPolicy(backend=...) (or a backend name via "
         "KernelPolicy.coerce) instead",
-        DeprecationWarning, stacklevel=3)
+        DeprecationWarning, stacklevel=stacklevel)
     return KernelPolicy(backend=backend)

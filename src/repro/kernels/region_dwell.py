@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import policy as policy_lib
 from repro.kernels.ref import DEFAULT_BOUNDS, dwell_compute, map_coords
 
 
@@ -58,13 +59,15 @@ def region_dwell(
     max_dwell: int = 512,
     scheme: str = "sbr",
     tile: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
     workload=None,
     unroll: int = 1,
 ) -> jax.Array:
     """coords: [N,2] leaf-OLT (duplicate-padded); returns updated canvas.
     ``workload`` (escape-time spec) swaps the per-point function; ``unroll``
     groups the escape loop (bit-identical, autotune candidate axis)."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N = coords.shape[0]
     cy = coords[:, 0].astype(jnp.int32)
     cx = coords[:, 1].astype(jnp.int32)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import policy as policy_lib
+
 
 def _kernel(cy_ref, cx_ref, val_ref, nonempty_ref, canvas_ref, out_ref):
     i = pl.program_id(0)
@@ -47,10 +49,12 @@ def region_fill(
     n: int,
     scheme: str = "sbr",
     tile: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """coords: [N,2] compacted fill-OLT (duplicate-padded); values: [N] int32;
     nonempty: [1] int32 (0 => no live rows). Returns the updated canvas."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
     N = coords.shape[0]
     cy = coords[:, 0].astype(jnp.int32)
     cx = coords[:, 1].astype(jnp.int32)

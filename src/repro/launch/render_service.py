@@ -219,6 +219,18 @@ class RenderService:
     the first chunk plans from the previous process's measurements
     instead of the cold prior), and ``render()`` saves back on
     completion (``save_feedback_state()`` for streaming callers).
+
+    ``engine="ask_pooled"`` serves every chunk through the cross-frame
+    pooled worklists (``core.pooled``): each device shard pools ITS
+    frames into ONE shared ring sized from their summed per-frame
+    occupancies. On the feedback path the chunker then cuts only on
+    workload switches (heterogeneous frames are the point of pooling --
+    a capacity-class jump stays inside the chunk, see
+    ``_pooled_chunks``), the retry loop escalates the shared pool
+    (``pooled.escalate_pooled_capacities``), and ``ChunkStats.
+    ring_rows`` counts ``n_dev x 2 x max(caps)`` per dispatch -- the
+    pooled allocation the feedback benchmark compares against the
+    per-frame path's ``pad x 2 x max(caps)``.
     """
 
     def __init__(self, problem, *, mesh=None, chunk_frames: int | None = None,
@@ -227,7 +239,13 @@ class RenderService:
                  adapt: bool = True,
                  feedback_state: Union[str, Path, None] = None,
                  policy=None,
+                 engine: str = "ask_scan",
                  **engine_kw):
+        if engine not in ("ask_scan", "ask_pooled"):
+            raise ValueError(
+                f"service engine must be 'ask_scan' or 'ask_pooled', got "
+                f"{engine!r} (the tuned tier is a policy= concern)")
+        self.engine = engine
         if "pad_to" in engine_kw:
             raise ValueError(
                 "pad_to is owned by the service (pinned to chunk_frames so "
@@ -341,6 +359,7 @@ class RenderService:
         that share a signature.
         """
         from repro.workloads import dispatch_batch
+        from repro.workloads.options import EngineOptions
 
         kw = dict(self.engine_kw)
         pad = self.chunk_frames
@@ -349,8 +368,18 @@ class RenderService:
             pad = self._pad_width(len(chunk))
             self._used_sigs.add((key, pad, tuple(caps)))
         t0 = time.perf_counter()
-        d = dispatch_batch(self._problems[key], chunk, mesh=self.mesh,
-                           pad_to=pad, **kw)
+        if self.engine == "ask_pooled":
+            # the pooled engine is selected through EngineOptions (the
+            # legacy flat-kwargs path predates engines); capacities are
+            # then PER-SHARD shared pool caps, which is exactly what
+            # _pooled_caps_for / the pooled escalation produce
+            opts = EngineOptions.from_kwargs(
+                {**kw, "mesh": self.mesh, "pad_to": pad},
+                engine="ask_pooled")
+            d = dispatch_batch(self._problems[key], chunk, options=opts)
+        else:
+            d = dispatch_batch(self._problems[key], chunk, mesh=self.mesh,
+                               pad_to=pad, **kw)
         return d, time.perf_counter() - t0
 
     def _pad_width(self, f: int) -> int:
@@ -459,6 +488,77 @@ class RenderService:
         if buf:
             yield flush()
 
+    def _pooled_caps_for(self, key: str, ps):
+        """Shared per-shard ring capacities for one pooled chunk: the
+        members' expected occupancies are summed per shard (frame-major
+        assignment, live frames only; ``core.pooled.pooled_capacities``),
+        maxed across shards so every shard runs the one compiled
+        program, then rounded up to powers of two (clamped at the shard
+        worst case) -- so the capacity-signature set stays bounded even
+        though every chunk carries its own P mix."""
+        from repro.core.olt import next_pow2
+        from repro.core.planner import worst_case_capacities
+        from repro.core.pooled import pooled_capacities
+
+        prob = self._problems[key]
+        n_dev = int(self.mesh.devices.size)
+        S = self._pad_width(len(ps)) // n_dev
+        sf = self.engine_kw.get("safety_factor", 2.0)
+        caps = None
+        for d in range(n_dev):
+            shard = ps[d * S:(d + 1) * S]
+            if not shard:
+                continue
+            c = pooled_capacities(prob, shard, safety_factor=sf)
+            caps = c if caps is None else tuple(
+                max(a, b) for a, b in zip(caps, c))
+        worst = worst_case_capacities(prob)
+        return tuple(min(next_pow2(c), S * w) for c, w in zip(caps, worst))
+
+    def _pooled_chunks(self, it: Iterator):
+        """Pooled chunker: yields the same (key, bounds, depths, p, caps,
+        source) tuples as ``_adaptive_chunks``, but a chunk is cut ONLY
+        on a workload switch or when full. Heterogeneous frames are the
+        POINT of pooling -- one shared ring sized from their summed
+        occupancies -- so a predicted capacity-class jump stays inside
+        the chunk instead of splitting it into per-class dispatches.
+        ``caps`` is the per-shard pooled vector (``_pooled_caps_for``);
+        ``p`` reports the hottest member's prediction."""
+        est = self.estimator
+        buf: list = []
+        depths: list = []
+        ps: list = []
+        sources: list = []
+        key_open: str | None = None
+
+        def flush():
+            src = (sources[0] if len(set(sources)) == 1 else "mixed")
+            return (key_open, list(buf), list(depths), max(ps),
+                    self._pooled_caps_for(key_open, ps), src)
+
+        for item in it:
+            key, b = self._split_item(item)
+            if buf and key != key_open:
+                yield flush()
+                buf, depths, ps, sources = [], [], [], []
+            key_open = key
+            wl = self._problems[key].workload
+            d = self._depth(key, b)
+            # predicted AFTER any flush above resumes, so the pool's
+            # sizing reflects whatever the estimator observed by then
+            ps.append(est.predict_quantized(d, workload=wl))
+            sources.append("measured"
+                           if est.measured(d, workload=wl) is not None
+                           else "prior")
+            buf.append(b)
+            depths.append(d)
+            if len(buf) == self.chunk_frames:
+                yield flush()
+                buf, depths, ps, sources = [], [], [], []
+                key_open = None
+        if buf:
+            yield flush()
+
     def _resolve_overflow(self, key, bounds, caps, canvases, st):
         """Retry overflowing frames at doubled capacities until every
         frame fits, then merge canvases/stats. Returns (canvases np,
@@ -482,15 +582,29 @@ class RenderService:
         cur = tuple(caps)
         pending = [j for j, o in enumerate(st.frame_overflow) if o]
         canv = np.asarray(canvases)
+        n_dev = int(self.mesh.devices.size)
         if pending:
             canv = np.array(canv)  # writable copy for the row merges
             worst = worst_case_capacities(self._problems[key])
+        ran = self._pad_width(f) // n_dev  # pool width of the last dispatch
         while pending:
-            cur = escalate_capacities(cur, worst, pending)
+            if self.engine == "ask_pooled":
+                from repro.core.pooled import escalate_pooled_capacities
+
+                nxt = self._pad_width(len(pending)) // n_dev
+                cur = escalate_pooled_capacities(
+                    cur, worst, nxt, pending, dispatched_per_shard=ran)
+                ran = nxt
+            else:
+                cur = escalate_capacities(cur, worst, pending)
             d, _ = self._dispatch([bounds[j] for j in pending], caps=cur,
                                   key=key)
             rc, rst = d.finalize()
-            retry_rows += self._pad_width(len(pending)) * 2 * max(cur)
+            if self.engine == "ask_pooled":
+                # shared pool: one ring of 2*max(cur) rows PER DEVICE
+                retry_rows += n_dev * 2 * max(cur)
+            else:
+                retry_rows += self._pad_width(len(pending)) * 2 * max(cur)
             retries += len(pending)
             launches += rst.kernel_launches
             wall += rst.wall_s
@@ -531,16 +645,23 @@ class RenderService:
         if self.adapt:
             self.estimator.observe_stats(depths, merged, g=prob.g, r=prob.r,
                                          workload=prob.workload)
+        if self.engine == "ask_pooled":
+            # ONE shared ring per device shard, not one per frame
+            ring = (int(self.mesh.devices.size) * 2 * max(caps)
+                    + retry_rows)
+        else:
+            ring = self._pad_width(len(bounds)) * 2 * max(caps) + retry_rows
         return ChunkResult(canv, merged, ChunkStats(
             index=i, frames=len(bounds), dispatch_s=disp_s,
             fetch_s=fetch_s, in_flight=in_flight, p_subdiv=p,
             p_source=src, retries=retries,
-            ring_rows=self._pad_width(len(bounds)) * 2 * max(caps)
-            + retry_rows, workload=key))
+            ring_rows=ring, workload=key))
 
     def _stream_feedback(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
         """The closed loop: re-plan, dispatch, retry, observe, refill."""
-        chunks = self._adaptive_chunks(iter(bounds_iter))
+        chunker = (self._pooled_chunks if self.engine == "ask_pooled"
+                   else self._adaptive_chunks)
+        chunks = chunker(iter(bounds_iter))
         pending: collections.deque = collections.deque()
         index = 0
 
@@ -654,6 +775,33 @@ class RenderService:
         """
         from repro.core import ask as ask_lib
 
+        if self.engine == "ask_pooled":
+            from repro.core import pooled as pooled_lib
+
+            n_dev = int(self.mesh.devices.size)
+            if self.estimator is not None:
+                # the frames-per-program S is baked into the pooled
+                # pipeline build, so signatures are keyed on (key, pad,
+                # caps) -- no dedup across pad widths here
+                total = 0
+                for key, pad, caps in self._used_sigs:
+                    fn = pooled_lib._jitted_pooled(
+                        self._problems[key], caps, pad // n_dev,
+                        mesh=self.mesh)
+                    size = getattr(fn, "_cache_size", None)
+                    if not callable(size):
+                        return None
+                    total += int(size())
+                return total
+            S = self.chunk_frames // n_dev
+            caps = pooled_lib._resolve_pooled_capacities(
+                self.problem, S, self.engine_kw.get("capacities"), None,
+                self.engine_kw.get("p_subdiv", 0.7),
+                self.engine_kw.get("safety_factor", 2.0))
+            fn = pooled_lib._jitted_pooled(self.problem, caps, S,
+                                           mesh=self.mesh)
+            size = getattr(fn, "_cache_size", None)
+            return int(size()) if callable(size) else None
         if self.estimator is not None:
             total = 0
             for key, caps in {(sig[0], sig[2]) for sig in self._used_sigs}:
@@ -759,6 +907,10 @@ def main(argv=None):
     ap.add_argument("--feedback", action="store_true",
                     help="closed-loop occupancy feedback: re-plan each "
                          "chunk's ring from measured region_counts")
+    ap.add_argument("--engine", choices=("ask_scan", "ask_pooled"),
+                    default="ask_scan",
+                    help="ask_pooled: ONE shared cross-frame ring per "
+                         "device shard (core.pooled)")
     args = ap.parse_args(argv)
 
     from repro.mandelbrot import MandelbrotProblem
@@ -768,7 +920,7 @@ def main(argv=None):
     mesh = make_frames_mesh(args.devices)
     svc = RenderService(prob, mesh=mesh, chunk_frames=args.chunk,
                         pipeline_depth=args.pipeline_depth,
-                        feedback=args.feedback,
+                        feedback=args.feedback, engine=args.engine,
                         safety_factor=args.safety_factor)
     bounds = zoom_bounds(args.frames, zoom_per_frame=args.zoom)
 

@@ -171,6 +171,51 @@ class FrameProblem:
         return self.leaf_step(state, coords, valid, level=level,
                               bounds=extra)
 
+    # -- pooled protocol (cross-frame worklists, core.pooled) ---------------
+    # ``rows`` is a frame-tagged [N, 3] = (frame, cy, cx) worklist pooled
+    # across the whole batch; ``state`` is the tall [F*n, n] canvas and
+    # ``bounds_all`` the [F, 4] per-frame windows. The math per row is the
+    # traced-bounds path of level_step evaluated in the row's OWN frame
+    # window (ops.pooled_bounds), so each frame's subsequence stays
+    # bit-identical to its private per-frame scan.
+
+    def pooled_level_step(self, state: jax.Array, rows: jax.Array,
+                          valid: jax.Array, *, level: int,
+                          bounds_all) -> Tuple[jax.Array, jax.Array]:
+        side = self.region_side(level)
+        homog, common = ops.perimeter_query(
+            rows[:, 1:], side=side, n=self.n,
+            bounds=ops.pooled_bounds(bounds_all, rows),
+            max_dwell=self.max_dwell, policy=self.policy,
+            workload=self.workload)
+        homog = jnp.logical_and(homog, valid)
+
+        # compact fill-OLT; pad with duplicates of the first live row
+        cap = rows.shape[0]
+        (idx,) = jnp.nonzero(homog, size=cap, fill_value=0)
+        count = jnp.sum(homog.astype(jnp.int32))
+        live = jnp.arange(cap) < count
+        idx = jnp.where(live, idx, idx[0])
+        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
+        state = ops.region_fill_pooled(
+            state, rows[idx], common[idx], nonempty, side=side, n=self.n)
+
+        subdivide = jnp.logical_and(valid, jnp.logical_not(homog))
+        return state, subdivide
+
+    def pooled_leaf_step(self, state: jax.Array, rows: jax.Array,
+                         valid: jax.Array, *, level: int,
+                         bounds_all) -> jax.Array:
+        side = self.region_side(level)
+        cap = rows.shape[0]
+        count = jnp.sum(valid.astype(jnp.int32))
+        idx = jnp.where(jnp.arange(cap) < count, jnp.arange(cap), 0)
+        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
+        return ops.region_dwell_pooled(
+            state, rows[idx], nonempty, side=side, n=self.n,
+            bounds_all=bounds_all, max_dwell=self.max_dwell,
+            policy=self.policy, workload=self.workload)
+
 
 # back-compat: the paper's case study is the default-workload FrameProblem
 MandelbrotProblem = FrameProblem
@@ -188,14 +233,20 @@ def exhaustive(n: int, *, max_dwell: int = 512, bounds=None,
     ``backend=`` string kwarg still works via the deprecation shim.
     """
     from repro.core.ask import ASKStats
+    from repro.kernels.policy import resolve_policy
 
     spec = None if workload is None else get_workload(workload)
     if bounds is None:
         bounds = ref.DEFAULT_BOUNDS if spec is None else spec.default_bounds
+    # resolve the legacy backend= here, ONCE, so the DeprecationWarning
+    # points at the caller's backend= usage (stacklevel: resolve_policy ->
+    # exhaustive -> caller) instead of at ops.mandelbrot's internals --
+    # and so the shim never warns twice for one user call
+    pol = resolve_policy(backend, policy, stacklevel=3)
     t0 = time.perf_counter()
     canvas = ops.mandelbrot(
         n, bounds=tuple(bounds), max_dwell=max_dwell, block=block,
-        backend=backend, policy=policy, workload=spec)
+        policy=pol, workload=spec)
     canvas = jax.block_until_ready(canvas)
     stats = ASKStats(levels=0, kernel_launches=1,
                      wall_s=time.perf_counter() - t0)
@@ -204,7 +255,7 @@ def exhaustive(n: int, *, max_dwell: int = 512, bounds=None,
 
 def solve(problem: FrameProblem, method: str = "ask", **kw):
     """Convenience dispatcher:
-    method in {ex, ask, ask_fused, ask_scan, ask_tuned, dp}.
+    method in {ex, ask, ask_fused, ask_scan, ask_tuned, ask_pooled, dp}.
 
     ``ask_tuned`` is the autotuned rung of the engine ladder: the same
     scan pipeline as ``ask_scan``, with every kernel dispatch routed
@@ -231,6 +282,9 @@ def solve(problem: FrameProblem, method: str = "ask", **kw):
         tuned = dataclasses.replace(
             problem, policy=problem.policy.with_backend("tuned"))
         return run_ask_scan(tuned, **kw)
+    if method == "ask_pooled":
+        from repro.core.pooled import run_ask_pooled
+        return run_ask_pooled(problem, **kw)
     if method == "dp":
         from repro.core.dp_emul import run_dp
         return run_dp(problem, **kw)
@@ -251,7 +305,11 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, options=None,
     ``options`` (an ``EngineOptions`` -- re-exported from
     ``repro.workloads`` -- or an engine name) is the canonical way to
     configure this call: engine selection (``engine="ask_tuned"`` routes
-    every kernel through the autotuned tier), batching (``mesh`` /
+    every kernel through the autotuned tier; ``engine="ask_pooled"``
+    pools all frames' regions into ONE cross-frame worklist per level
+    whose shared ring is sized from the summed per-frame occupancies --
+    see ``core.pooled`` -- with ``plan=True`` routing through
+    ``planner.solve_pooled``), batching (``mesh`` /
     ``pad_to``), planning (``plan`` / ``observed`` / ``num_buckets``),
     capacity sizing, kernel routing (``policy``), and planner expert
     knobs (``extra``) in one frozen object. The flat keyword arguments
@@ -309,7 +367,35 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, options=None,
         opts = EngineOptions.coerce(options)
         problem = opts.apply_to(problem)
         mesh, plan, kw = opts.mesh, opts.plan, opts.engine_kwargs()
+        engine = opts.engine
+    else:
+        engine = "ask_scan"  # the legacy flat-kwarg path predates engines
     bounds_arr = _bounds_array(bounds_batch)
+    if engine == "ask_pooled":
+        if plan is not None and plan is not False:
+            from repro.core import planner as planner_lib
+            engine_only = ({"capacities", "p_subdiv", "pad_to",
+                            "num_buckets"} & kw.keys())
+            if engine_only:
+                raise ValueError(
+                    f"{sorted(engine_only)} do not apply to the pooled "
+                    "planner -- it sizes ONE shared ring from the summed "
+                    "per-frame occupancies (tune safety_factor / observed "
+                    "/ quantize / band knobs instead)")
+            plan_obj = (plan if isinstance(plan, planner_lib.CapacityPlan)
+                        else None)
+            if plan_obj is None and not isinstance(plan, bool):
+                raise ValueError(
+                    "plan=<bucket count> does not apply to ask_pooled -- "
+                    "the pooled worklist IS one shared bucket; pass "
+                    "plan=True or a pooled CapacityPlan")
+            return planner_lib.solve_pooled(problem, bounds_arr,
+                                            plan=plan_obj, mesh=mesh, **kw)
+        from repro.core.pooled import (run_ask_pooled_batch,
+                                       run_ask_pooled_sharded)
+        if mesh is None:
+            return run_ask_pooled_batch(problem, bounds_arr, **kw)
+        return run_ask_pooled_sharded(problem, bounds_arr, mesh=mesh, **kw)
     if plan is not None and plan is not False:
         from repro.core import planner as planner_lib
         engine_only = {"capacities", "p_subdiv", "pad_to"} & kw.keys()
@@ -351,8 +437,15 @@ def dispatch_batch(problem: FrameProblem, bounds_batch, *, mesh=None,
         opts = EngineOptions.coerce(options)
         problem = opts.apply_to(problem)
         mesh, kw = opts.mesh, opts.engine_kwargs()
+        engine = opts.engine
+    else:
+        engine = "ask_scan"
     if mesh is None:
         raise ValueError(
             "dispatch_batch needs a mesh (mesh= or options.mesh)")
+    if engine == "ask_pooled":
+        from repro.core.pooled import dispatch_ask_pooled_sharded
+        return dispatch_ask_pooled_sharded(
+            problem, _bounds_array(bounds_batch), mesh=mesh, **kw)
     return dispatch_ask_scan_sharded(problem, _bounds_array(bounds_batch),
                                      mesh=mesh, **kw)

@@ -5,9 +5,11 @@ Batched serving grew one keyword at a time -- ``plan=``, ``observed=``,
 call site needed a paragraph to read. ``EngineOptions`` consolidates the
 whole surface into a single frozen dataclass:
 
-* engine selection (``engine="ask_scan" | "ask_tuned"``) -- the tuned
-  engine is applied by swapping the problem's ``KernelPolicy`` backend,
-  so it composes with every other option;
+* engine selection (``engine="ask_scan" | "ask_tuned" | "ask_pooled"``)
+  -- the tuned engine is applied by swapping the problem's
+  ``KernelPolicy`` backend, so it composes with every other option; the
+  pooled engine (``core.pooled``) keeps the policy untouched and instead
+  reroutes ``solve_batch`` through the cross-frame pooled worklists;
 * batching (``mesh``, ``pad_to``), capacity sizing (``capacities``,
   ``p_subdiv``, ``safety_factor``), planning (``plan``, ``observed``,
   ``num_buckets``, ``quantize``), and kernel routing (``policy``);
@@ -31,7 +33,7 @@ from repro.kernels.policy import KernelPolicy
 
 __all__ = ["EngineOptions"]
 
-_ENGINES = ("ask_scan", "ask_tuned")
+_ENGINES = ("ask_scan", "ask_tuned", "ask_pooled")
 
 # the flat solve_batch kwargs that map onto first-class fields
 _FIELD_KWARGS = ("plan", "observed", "mesh", "pad_to", "capacities",
@@ -48,7 +50,7 @@ class EngineOptions:
     ``solve_batch(problem, bounds)`` call exactly.
     """
 
-    engine: str = "ask_scan"  # "ask_scan" | "ask_tuned"
+    engine: str = "ask_scan"  # "ask_scan" | "ask_tuned" | "ask_pooled"
     plan: Any = None          # planner switch: True | int K | CapacityPlan
     observed: Any = None      # core.feedback.OccupancyEstimator
     mesh: Any = None          # jax.sharding.Mesh (frame-axis sharding)

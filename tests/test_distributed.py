@@ -276,3 +276,95 @@ def test_split_model_mesh_2d_tp():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_sharded_pooled_bit_identical():
+    """The pooled engine on 8 host devices: pooling happens WITHIN each
+    device's shard (frame-major assignment, dead padding masked), so
+    every ragged F must stay bit-identical to the unsharded pool AND to
+    the per-frame scan engine, with one launch and zero drops. The
+    pad_to contract (multiple of the device count) fails loudly."""
+    out = _run("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core.ask import run_ask_scan_batch
+        from repro.core.pooled import (run_ask_pooled_batch,
+                                       run_ask_pooled_sharded)
+        from repro.launch.mesh import make_frames_mesh
+        from repro.mandelbrot import MandelbrotProblem, solve_batch
+        from repro.workloads import EngineOptions
+
+        prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                                 backend="jnp")
+        mesh = make_frames_mesh()
+        assert int(mesh.devices.size) == 8
+
+        def window(cx, cy, w):
+            return (cx - w / 2, cy - w / 2, cx + w / 2, cy + w / 2)
+
+        for F in (1, 7, 8, 16):
+            # heterogeneous: sparse overviews + a deep seahorse tail
+            b = np.stack(
+                [window(-0.5, 0.0, 16.0 - i) for i in range(max(1, F - 2))]
+                + [window(-0.7436447860, 0.1318252536, 3.0 / 2 ** (4 + k))
+                   for k in range(min(2, F - 1))]).astype(np.float32)[:F]
+            ref, st_ref = run_ask_scan_batch(prob, jnp.asarray(b),
+                                             safety_factor=1e9)
+            pool, st_pool = run_ask_pooled_batch(prob, b, safety_factor=1e9)
+            shd, st = run_ask_pooled_sharded(prob, b, mesh=mesh,
+                                             safety_factor=1e9)
+            assert shd.shape == (F, 128, 128)
+            np.testing.assert_array_equal(np.asarray(shd), np.asarray(ref))
+            np.testing.assert_array_equal(np.asarray(pool), np.asarray(ref))
+            assert st.kernel_launches == 1
+            assert st.overflow_dropped == 0
+            assert st.frame_leaf_counts == st_ref.frame_leaf_counts
+            assert st.region_counts == st_ref.region_counts
+            # the options= route lands on the same sharded pool
+            via, st_via = solve_batch(
+                prob, b, options=EngineOptions(engine="ask_pooled",
+                                               mesh=mesh,
+                                               safety_factor=1e9))
+            np.testing.assert_array_equal(np.asarray(via), np.asarray(ref))
+            assert st_via.kernel_launches == 1
+        try:
+            run_ask_pooled_sharded(prob, b, mesh=mesh, pad_to=9,
+                                   safety_factor=1e9)
+        except ValueError as e:
+            assert "multiple" in str(e), e
+        else:
+            raise AssertionError("pad_to=9 on 8 devices must fail")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_render_service_pooled_sharded():
+    """Pooled serving on 8 devices: a heterogeneous feedback stream
+    (chunked at workload switches only) stays bit-identical to the
+    worst-case per-frame service, with the pooled ring accounted per
+    device and zero drops after retries."""
+    out = _run("""
+        import numpy as np
+        from repro.launch.mesh import make_frames_mesh
+        from repro.launch.render_service import RenderService, zoom_bounds
+        from repro.mandelbrot import MandelbrotProblem
+
+        prob = MandelbrotProblem(n=128, g=4, r=2, B=16, max_dwell=32,
+                                 backend="jnp")
+        mesh = make_frames_mesh()
+        bounds = list(zoom_bounds(19))
+        ref, _ = RenderService(prob, mesh=mesh, chunk_frames=8,
+                               safety_factor=1e9).render(bounds)
+        svc = RenderService(prob, engine="ask_pooled", mesh=mesh,
+                            chunk_frames=8, feedback=True,
+                            safety_factor=1.2)
+        canv, rs = svc.render(bounds)
+        np.testing.assert_array_equal(canv, ref)
+        assert rs.frames == 19 and rs.chunks == 3
+        assert rs.overflow_dropped == 0
+        # ONE shared ring per device shard: 8 * 2 * max(caps) + retries
+        assert all(c.ring_rows >= 8 * 2 for c in rs.chunk_stats)
+        print("OK")
+    """)
+    assert "OK" in out

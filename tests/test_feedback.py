@@ -3,6 +3,8 @@ estimator (core/feedback.py): band containment, EWMA contraction,
 known-P recovery, cold-start prior fallback, and the stats plumbing from
 a real engine run."""
 
+import math
+
 import numpy as np
 import pytest
 
@@ -326,3 +328,68 @@ def test_snapshot_restore_empty_and_versioning():
     assert back.predict(0.0) == cold.predict(0.0)
     with pytest.raises(ValueError, match="version"):
         feedback.OccupancyEstimator.restore({"version": 99})
+
+
+def test_restore_drops_poisoned_ewma_entries():
+    """Snapshot files live outside the process: restore must sanitize,
+    not ingest -- a NaN EWMA would flow through _clamp's min/max into
+    every capacity vector planned from it (the satellite bugfix)."""
+    est = feedback.OccupancyEstimator()
+    snap = est.snapshot()
+    dq = est.depth_quantum
+    snap["ewma"] = [
+        ["", 0, float("nan")],      # non-finite: dropped
+        ["", 1, float("inf")],      # non-finite: dropped
+        ["", 2, -0.5],              # out of (0, 1]: dropped
+        ["", 3, 1.5],               # out of (0, 1]: dropped
+        ["", 4, 0.0],               # P == 0 never measured: dropped
+        ["", "x", 0.5],             # unparseable bucket: dropped
+        ["", 5],                    # wrong arity: dropped
+        "junk",                     # not even a triple: dropped
+        ["", 6, 0.5],               # good: kept
+        ["ghost_workload", 0, 0.7],  # unknown namespace: kept (harmless)
+    ]
+    back = feedback.OccupancyEstimator.restore(snap)
+    assert back.measured(6 * dq) == 0.5
+    assert back.measured(0.0, workload="ghost_workload") == 0.7
+    # every poisoned bucket fell back to never-observed
+    for b in (0, 1, 2, 3, 4, 5):
+        assert back.measured(b * dq) in (None, 0.5)  # 5*dq may borrow 6
+    assert set(back.buckets().values()) == {0.5}
+    # predictions stay finite and in range everywhere
+    for d in (-3.0, 0.0, 2.0, 6 * dq):
+        p = back.predict(d)
+        assert math.isfinite(p) and 0.0 < p <= 1.0
+
+
+def test_restore_drops_malformed_bands_keeps_good_ones():
+    est = feedback.OccupancyEstimator()
+    snap = est.snapshot()
+    snap["bands"] = {
+        "short": [0.9, 0.1],                  # wrong arity
+        "nan": [float("nan"), 0.1, 0.2],      # non-finite
+        "neg_slope": [0.9, -0.1, 0.2],        # slope < 0
+        "inverted": [0.3, 0.1, 0.5],          # p_min > deep
+        "zero_floor": [0.9, 0.1, 0.0],        # p_min must be > 0
+        "words": ["a", "b", "c"],             # unparseable
+        "good": [0.9, 0.12, 0.25],            # kept
+    }
+    back = feedback.OccupancyEstimator.restore(snap)
+    assert back._bands == {"good": (0.9, 0.12, 0.25)}
+    # the dropped namespaces predict from the default prior again
+    assert back.predict(0.0, workload="nan") == est.predict(0.0)
+    # the kept band really drives its namespace's prior
+    assert back.predict(20.0, workload="good") == pytest.approx(0.9)
+
+
+def test_restore_clamps_counters_and_rejects_bad_versions():
+    est = feedback.OccupancyEstimator()
+    snap = est.snapshot()
+    snap["frames_observed"] = -3
+    snap["chunks_observed"] = None
+    back = feedback.OccupancyEstimator.restore(snap)
+    assert back.frames_observed == 0 and back.chunks_observed == 0
+    for bad in (None, 0, 2, "1"):
+        poisoned = dict(est.snapshot(), version=bad)
+        with pytest.raises(ValueError, match="version"):
+            feedback.OccupancyEstimator.restore(poisoned)

@@ -183,6 +183,18 @@ def test_ask_tuned_matches_golden(golden, workload):
 
 
 @pytest.mark.parametrize("workload", WORKLOADS)
+def test_ask_pooled_matches_golden(golden, workload):
+    """The cross-frame pooled rung (``core.pooled``): even a pool of ONE
+    frame goes through the tagged-row worklist, the frame-offset scatter
+    and the summed-occupancy ring -- and may never change pixels."""
+    from repro.workloads import solve
+
+    canvas, st = solve(_problem(workload), "ask_pooled", safety_factor=1e9)
+    _assert_matches(canvas, golden(workload), f"ask_pooled[{workload}]")
+    assert st.overflow_dropped == 0 and st.kernel_launches == 1
+
+
+@pytest.mark.parametrize("workload", WORKLOADS)
 def test_planned_matches_golden(golden, workload):
     """The capacity-planned batch path: planning may resize rings and
     retry -- from each workload's OWN prior band -- never change pixels."""

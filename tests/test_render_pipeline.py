@@ -334,3 +334,43 @@ def test_save_feedback_state_requires_estimator(tmp_path):
     svc = _svc(_prob())
     with pytest.raises(ValueError, match="estimator"):
         svc.save_feedback_state(tmp_path / "x.json")
+
+
+def test_feedback_observation_uses_own_chunks_workload_when_pipelined():
+    """Workload-switch boundaries with chunks in flight (the satellite
+    bugfix this pins): when the stream is already PLANNING workload B's
+    chunk while workload A's dispatch is still finalizing, A's measured
+    counts must be filed under A's namespace -- the estimator observes
+    each finalized chunk BEFORE the loop refills the queue, so an
+    interleaved two-workload stream may never cross-pollinate bands."""
+    from repro.workloads import FrameProblem
+
+    probs = {
+        "m": FrameProblem(n=128, g=4, r=2, B=16, max_dwell=62,
+                          backend="jnp", workload="mandelbrot"),
+        "j": FrameProblem(n=128, g=4, r=2, B=16, max_dwell=62,
+                          backend="jnp", workload="julia"),
+    }
+    est = OccupancyEstimator()
+    observed = []  # workload names, in observation order
+    orig = est.observe_stats
+
+    def spy(depths, stats, **kw):
+        wl = kw.get("workload")
+        observed.append(getattr(wl, "name", wl))
+        return orig(depths, stats, **kw)
+
+    est.observe_stats = spy
+    svc = RenderService(dict(probs), mesh=make_frames_mesh(1),
+                        chunk_frames=4, pipeline_depth=2, feedback=est,
+                        safety_factor=2.0)
+    # alternate every frame: EVERY chunk boundary is a workload switch,
+    # and depth 2 keeps the previous workload's dispatch in flight while
+    # the next one's chunk is being planned
+    items = [("m", probs["m"].bounds), ("j", probs["j"].bounds)] * 3
+    chunks = list(svc.stream_chunks(items))
+    assert max(c.chunk.in_flight for c in chunks) == 2  # really pipelined
+    expected = [probs[c.chunk.workload].workload.name for c in chunks]
+    assert observed == expected == ["mandelbrot", "julia"] * 3
+    # and the measurements landed in their own namespaces
+    assert {"mandelbrot", "julia"} <= set(est.workloads_observed())
