@@ -165,6 +165,19 @@ class OccupancyEstimator:
     bounds how many distinct capacity vectors (hence compiled chunk
     programs) a feedback-driven stream can ever request.
 
+    Every method additionally takes an optional ``tenant`` (a string id
+    from the multi-tenant front door, ``launch.frontdoor``): a tenant
+    refines the workload namespace to ``"<tenant>@<workload>"`` so one
+    tenant's deep-zoom measurements never inflate another tenant's
+    plans for the SAME workload. Prediction with a tenant falls back in
+    two steps: the tenant's own buckets first, then the shared workload
+    namespace (what every tenant's frames contributed when observed
+    without a tenant), then the workload prior -- so a brand-new tenant
+    plans from the fleet-wide measurement, not the cold prior. The
+    band (clamp range, prior fallback) always comes from the workload
+    part alone; workload names therefore must not contain ``"@"``
+    (registry names never do).
+
     ``snapshot()`` / ``OccupancyEstimator.restore()`` round-trip the
     whole state (config, per-workload bands, EWMA buckets, counters)
     through a JSON-able dict, so a restarted service resumes from the
@@ -198,14 +211,17 @@ class OccupancyEstimator:
 
     # -- workload namespaces ------------------------------------------------
 
-    def _key(self, workload) -> str:
+    def _key(self, workload, tenant=None) -> str:
         """Resolve a workload argument to its namespace key, learning
         its prior band on the way (a spec argument registers its band;
         a bare registry name resolves it lazily so restored snapshots
-        and name-only callers agree with spec callers)."""
+        and name-only callers agree with spec callers). A ``tenant``
+        prefixes the key as ``"<tenant>@<workload>"`` -- the tenant
+        dimension of the namespace; bands stay keyed by the workload
+        part alone (``_band`` strips the prefix)."""
         if workload is None:
-            return ""
-        if isinstance(workload, str):
+            name = ""
+        elif isinstance(workload, str):
             name = workload
             if name and name not in self._bands:
                 try:
@@ -213,13 +229,21 @@ class OccupancyEstimator:
                     self._bands[name] = tuple(get_workload(name).prior_band)
                 except KeyError:
                     pass  # unregistered name: fall back to the default band
+        else:
+            name = workload.name
+            if name not in self._bands:
+                self._bands[name] = tuple(float(b) for b in workload.prior_band)
+        if "@" in name:
+            raise ValueError(
+                f"workload name {name!r} contains '@', which is reserved "
+                "for the tenant namespace separator")
+        if tenant is None or tenant == "":
             return name
-        name = workload.name
-        if name not in self._bands:
-            self._bands[name] = tuple(float(b) for b in workload.prior_band)
-        return name
+        return f"{tenant}@{name}"
 
     def _band(self, key: str) -> Tuple[float, float, float]:
+        if "@" in key:  # tenant-scoped namespace: the band is the workload's
+            key = key.rsplit("@", 1)[1]
         return self._bands.get(key, (self.p_deep, self.slope, self.p_min))
 
     # -- observation --------------------------------------------------------
@@ -232,14 +256,14 @@ class OccupancyEstimator:
         return min(max(float(p), p_min), deep)
 
     def observe_value(self, depth: float, p: float, *,
-                      workload=None) -> float:
+                      workload=None, tenant=None) -> float:
         """Fold one measured P at one depth into the EWMA state.
 
         Returns the bucket's new EWMA. The raw measurement is clamped
         into the workload's [p_min, p_deep] band first, so the state
         space of the estimator is the band the prior lives in.
         """
-        key = self._key(workload)
+        key = self._key(workload, tenant)
         b = (key, self._bucket(depth))
         self._ewma[b] = ewma(self._ewma.get(b), self._clamp(p, key),
                              self.alpha)
@@ -248,7 +272,8 @@ class OccupancyEstimator:
 
     def observe_frames(self, depths: Sequence[float],
                        chains: Sequence[Tuple[Sequence[int], int]],
-                       *, g: int, r: int, workload=None) -> None:
+                       *, g: int, r: int, workload=None,
+                       tenant=None) -> None:
         """Observe one finished chunk: per-frame (region_counts,
         leaf_count) chains at the given zoom depths.
 
@@ -264,7 +289,7 @@ class OccupancyEstimator:
         if len(depths) != len(chains):
             raise ValueError(
                 f"got {len(depths)} depths for {len(chains)} chains")
-        key = self._key(workload)
+        key = self._key(workload, tenant)
         per_bucket: Dict[int, float] = {}
         for depth, (counts, leaf) in zip(depths, chains):
             p = measured_p_subdiv(counts, leaf, g=g, r=r)
@@ -280,11 +305,11 @@ class OccupancyEstimator:
         self.chunks_observed += 1
 
     def observe_stats(self, depths: Sequence[float], stats, *,
-                      g: int, r: int, workload=None) -> None:
+                      g: int, r: int, workload=None, tenant=None) -> None:
         """Observe a finished batched/sharded dispatch from its
         ``ASKStats`` (uses ``stats.frame_chains()``)."""
         self.observe_frames(depths, stats.frame_chains(), g=g, r=r,
-                            workload=workload)
+                            workload=workload, tenant=tenant)
 
     def observe_report(self, report, *, g: int, r: int) -> None:
         """Observe a finished planned run (``planner.PlanReport``).
@@ -314,9 +339,12 @@ class OccupancyEstimator:
 
     # -- prediction ---------------------------------------------------------
 
-    def prior(self, depth: float, *, workload=None) -> float:
+    def prior(self, depth: float, *, workload=None, tenant=None) -> float:
         """The zoom-depth prior this estimator falls back to (the
-        workload's own band when one is given)."""
+        workload's own band when one is given; the band never depends
+        on the tenant, so ``tenant`` is accepted only for signature
+        symmetry with the other prediction methods)."""
+        del tenant  # the prior band is a workload property
         deep, slope, p_min = self._band(self._key(workload))
         return effective_p_subdiv(depth, p_deep=deep, slope=slope,
                                   p_min=p_min)
@@ -331,15 +359,27 @@ class OccupancyEstimator:
             return None
         return nearest
 
-    def measured(self, depth: float, *, workload=None) -> Optional[float]:
-        """Nearest observed bucket's EWMA within ``max_extrapolate``
-        levels of ``depth`` (same workload namespace); None when every
-        observation is too far."""
-        key = self._key(workload)
+    def _lookup(self, depth: float, workload, tenant):
+        """Namespace-resolved nearest bucket: the tenant's own buckets
+        first, the shared workload namespace second. Returns (key,
+        bucket) with bucket None when neither holds anything in range."""
+        key = self._key(workload, tenant)
         b = self._nearest_bucket(depth, key)
+        if b is None and tenant:
+            key = self._key(workload)
+            b = self._nearest_bucket(depth, key)
+        return key, b
+
+    def measured(self, depth: float, *, workload=None,
+                 tenant=None) -> Optional[float]:
+        """Nearest observed bucket's EWMA within ``max_extrapolate``
+        levels of ``depth`` (the tenant's namespace when given, falling
+        back to the shared workload namespace); None when every
+        observation is too far."""
+        key, b = self._lookup(depth, workload, tenant)
         return None if b is None else self._ewma[(key, b)]
 
-    def predict(self, depth: float, *, workload=None) -> float:
+    def predict(self, depth: float, *, workload=None, tenant=None) -> float:
         """Blended planning P at ``depth``. Always inside the band.
 
         When a measurement is near enough, the prediction is that
@@ -349,22 +389,24 @@ class OccupancyEstimator:
         frames land slightly deeper than every observation so far is
         not systematically under-predicted. With no measurement in
         range the prediction IS the prior (the cold-start contract).
+        With a ``tenant``, the tenant's own buckets are consulted
+        before the shared workload namespace.
         """
-        key = self._key(workload)
-        b = self._nearest_bucket(depth, key)
+        key, b = self._lookup(depth, workload, tenant)
         if b is None:
             return self._clamp(self.prior(depth, workload=workload), key)
         shift = (self.prior(depth, workload=workload)
                  - self.prior(b * self.depth_quantum, workload=workload))
         return self._clamp(self._ewma[(key, b)] + shift, key)
 
-    def predict_quantized(self, depth: float, *, workload=None) -> float:
+    def predict_quantized(self, depth: float, *, workload=None,
+                          tenant=None) -> float:
         """``predict`` rounded UP onto the ``p_quantum`` grid (then
         clamped to the band's p_deep). Monotone in the raw prediction
         and never below it up to the p_deep cap -- rounding up keeps
         capacity sizing safe while bounding the set of distinct plan
         signatures a stream can request."""
-        p = self.predict(depth, workload=workload)
+        p = self.predict(depth, workload=workload, tenant=tenant)
         q = math.ceil(p / self.p_quantum - 1e-12) * self.p_quantum
         deep, _, _ = self._band(self._key(workload))
         return min(q, deep)
@@ -377,10 +419,10 @@ class OccupancyEstimator:
         the prior, the cold-start contract of the serving loop."""
         return not self._ewma
 
-    def buckets(self, workload=None) -> Dict[float, float]:
+    def buckets(self, workload=None, tenant=None) -> Dict[float, float]:
         """One namespace's observed state as {bucket centre depth:
         EWMA P} (a copy; the pre-workload ``snapshot()`` view)."""
-        key = self._key(workload)
+        key = self._key(workload, tenant)
         return {b * self.depth_quantum: v
                 for (k, b), v in sorted(self._ewma.items()) if k == key}
 

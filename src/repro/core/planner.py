@@ -181,6 +181,9 @@ class FramePlan:
     p_prior: float
     p_measured: Union[float, None]  # None: cold start / out of range
     p_subdiv: float  # the P the plan used (p_measured or p_prior, maybe quantized)
+    # multi-tenant serving (launch.frontdoor): the tenant namespace the
+    # estimator was consulted under, None for single-tenant plans
+    tenant: Union[str, None] = None
 
     @property
     def source(self) -> str:
@@ -466,6 +469,7 @@ def plan_frames(problem, bounds_batch, *, observed=None,
                 slope: Union[float, None] = None,
                 p_min: Union[float, None] = None,
                 ref_width: Union[float, None] = None,
+                tenant: Union[str, None] = None,
                 ) -> CapacityPlan:
     """Plan a zoom batch, blending MEASURED occupancy when available.
 
@@ -487,6 +491,12 @@ def plan_frames(problem, bounds_batch, *, observed=None,
     ``frame_p_source``. When ``observed`` is given, the estimator's own
     band (p_deep / slope / p_min) governs its prior fallback, so passing
     those knobs alongside it raises instead of being silently ignored.
+
+    ``tenant`` (multi-tenant serving, ``launch.frontdoor``) consults the
+    estimator under that tenant's namespace -- the tenant's own
+    measurements first, the shared workload namespace as fallback -- and
+    is stamped on each ``FramePlan``. It requires ``observed=`` (the
+    tenant dimension lives on the estimator).
     """
     if observed is None:
         if quantize:
@@ -494,6 +504,11 @@ def plan_frames(problem, bounds_batch, *, observed=None,
                 "quantize=True needs observed=: the p_quantum grid lives "
                 "on the OccupancyEstimator, so without one the flag would "
                 "be silently ignored")
+        if tenant is not None:
+            raise ValueError(
+                "tenant= needs observed=: tenant namespaces live on the "
+                "OccupancyEstimator, so without one the flag would be "
+                "silently ignored")
         return plan_capacities(
             problem, bounds_batch, num_buckets=num_buckets,
             safety_factor=safety_factor, p_deep=p_deep, slope=slope,
@@ -515,15 +530,16 @@ def plan_frames(problem, bounds_batch, *, observed=None,
     ests, fps = [], []
     for i, w in enumerate(widths):
         d = zoom_depth(float(w), ref_width=ref_w, r=r)
-        measured = observed.measured(d, workload=wl)
-        p = (observed.predict_quantized(d, workload=wl) if quantize
-             else observed.predict(d, workload=wl))
+        measured = observed.measured(d, workload=wl, tenant=tenant)
+        p = (observed.predict_quantized(d, workload=wl, tenant=tenant)
+             if quantize else observed.predict(d, workload=wl, tenant=tenant))
         ests.append(FrameEstimate(
             index=i, width=float(w), depth=d, p_subdiv=p,
             expected=tuple(expected_level_counts(n, g, r, B, P=p))))
         fps.append(FramePlan(index=i, width=float(w), depth=d,
                              p_prior=observed.prior(d, workload=wl),
-                             p_measured=measured, p_subdiv=p))
+                             p_measured=measured, p_subdiv=p,
+                             tenant=tenant))
     return plan_from_p(problem, [e.p_subdiv for e in ests],
                        num_buckets=num_buckets, safety_factor=safety_factor,
                        estimates=tuple(ests), frame_plans=tuple(fps))
@@ -536,6 +552,7 @@ def plan_pooled(problem, bounds_batch, *, observed=None,
                 slope: Union[float, None] = None,
                 p_min: Union[float, None] = None,
                 ref_width: Union[float, None] = None,
+                tenant: Union[str, None] = None,
                 ) -> CapacityPlan:
     """Plan ONE pooled cross-frame bucket from summed occupancies.
 
@@ -559,7 +576,7 @@ def plan_pooled(problem, bounds_batch, *, observed=None,
     base = plan_frames(problem, bounds_batch, observed=observed,
                        num_buckets=1, safety_factor=safety_factor,
                        quantize=quantize, p_deep=p_deep, slope=slope,
-                       p_min=p_min, ref_width=ref_width)
+                       p_min=p_min, ref_width=ref_width, tenant=tenant)
     frame_ps = tuple(e.p_subdiv for e in base.estimates)
     caps = pooled_capacities(problem, frame_ps, safety_factor=safety_factor)
     bucket = BucketPlan(frames=tuple(range(len(frame_ps))),

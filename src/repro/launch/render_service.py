@@ -76,8 +76,22 @@ DEFAULT_FRAMES_PER_DEVICE = 4
 DEFAULT_PIPELINE_DEPTH = 2
 
 __all__ = ["RenderService", "RenderStats", "ChunkStats", "ChunkResult",
-           "zoom_bounds", "DEFAULT_FRAMES_PER_DEVICE",
+           "PlannedDispatch", "zoom_bounds", "DEFAULT_FRAMES_PER_DEVICE",
            "DEFAULT_PIPELINE_DEPTH"]
+
+
+class _WallClock:
+    """Default timing source: monotonic wall time. The service reads
+    time ONLY through its clock, so the deterministic test harness
+    (``tests/fakes.py``) can substitute a virtual clock and assert on
+    exact schedules instead of sleeping."""
+
+    @staticmethod
+    def now() -> float:
+        return time.perf_counter()
+
+
+_WALL = _WallClock()
 
 
 @dataclasses.dataclass
@@ -106,10 +120,22 @@ class ChunkStats:
     retries: int = 0  # frame re-dispatches after overflow
     ring_rows: int = 0  # OLT-ring rows allocated, retry dispatches included
     workload: str = ""  # mixed-workload serving: problem key of this chunk
+    # multi-tenant front-door batches (launch.frontdoor): the tenant id
+    # of each frame of this chunk, in frame order; () for single-tenant
+    # streams. ``tenant_frames()`` aggregates the attribution.
+    tenants: tuple = ()
 
     @property
     def busy_s(self) -> float:
         return self.dispatch_s + self.fetch_s
+
+    def tenant_frames(self) -> dict:
+        """Per-tenant frame attribution of this chunk ({tenant: frame
+        count}; empty for single-tenant streams)."""
+        out: dict = {}
+        for t in self.tenants:
+            out[t] = out.get(t, 0) + 1
+        return out
 
 
 @dataclasses.dataclass
@@ -119,6 +145,57 @@ class ChunkResult:
     canvases: Any
     stats: Any  # core.ask.ASKStats for this chunk's dispatch
     chunk: ChunkStats
+
+
+class PlannedDispatch:
+    """Handle of one in-flight ``RenderService.dispatch_planned`` batch.
+
+    The batch-ingestion seam of the multi-tenant front door
+    (``launch.frontdoor``): the batch is already enqueued on the
+    devices when this handle exists; ``finalize()`` blocks, runs the
+    service's overflow-retry loop to zero drops (feedback path), feeds
+    the estimator, and returns the same ``ChunkResult`` the streaming
+    path yields -- with ``ChunkStats.tenants`` carrying the per-frame
+    tenant attribution. ``finalize()`` is one-shot.
+    """
+
+    def __init__(self, service, item, tenants, tenant_feedback):
+        self._service = service
+        self._item = item  # (i, key, bounds, depths, p, caps, src, d, disp_s)
+        self._tenants = tuple(tenants)
+        self._tenant_feedback = bool(tenant_feedback)
+        self._done = False
+
+    @property
+    def frames(self) -> int:
+        return len(self._item[2])
+
+    @property
+    def workload(self) -> str:
+        return self._item[1]
+
+    @property
+    def tenants(self) -> tuple:
+        return self._tenants
+
+    def finalize(self) -> ChunkResult:
+        """Block until the batch is materialised (overflow retried to
+        zero drops on the feedback path) and demuxable."""
+        if self._done:
+            raise RuntimeError("PlannedDispatch.finalize() is one-shot")
+        self._done = True
+        svc = self._service
+        if svc.estimator is not None:
+            return svc._finalize_feedback(
+                self._item, in_flight=1, tenants=self._tenants,
+                tenant_feedback=self._tenant_feedback)
+        i, key, bounds, depths, p, caps, src, d, disp_s = self._item
+        t0 = svc._clock.now()
+        canvases, st = d.finalize()
+        fetch_s = svc._clock.now() - t0
+        return ChunkResult(canvases, st, ChunkStats(
+            index=i, frames=len(bounds), dispatch_s=disp_s, fetch_s=fetch_s,
+            in_flight=1, workload=key, tenants=self._tenants))
 
 
 @dataclasses.dataclass
@@ -240,6 +317,7 @@ class RenderService:
                  feedback_state: Union[str, Path, None] = None,
                  policy=None,
                  engine: str = "ask_scan",
+                 clock=None,
                  **engine_kw):
         if engine not in ("ask_scan", "ask_pooled"):
             raise ValueError(
@@ -342,8 +420,12 @@ class RenderService:
             self._ref_widths = None
         self.adapt = bool(adapt)
         self.engine_kw = engine_kw
+        # all service timing goes through the clock so the deterministic
+        # harness (tests/fakes.py VirtualClock) can replace wall time
+        self._clock = _WALL if clock is None else clock
         self._caps_cache: dict = {}  # (problem key, quantized P) -> capacities
         self._used_sigs: set = set()  # (problem key, pad width, caps) dispatched
+        self._planned_index = 0  # ChunkStats.index of dispatch_planned batches
 
     # -- dispatch plumbing --------------------------------------------------
 
@@ -367,7 +449,7 @@ class RenderService:
             kw["capacities"] = caps
             pad = self._pad_width(len(chunk))
             self._used_sigs.add((key, pad, tuple(caps)))
-        t0 = time.perf_counter()
+        t0 = self._clock.now()
         if self.engine == "ask_pooled":
             # the pooled engine is selected through EngineOptions (the
             # legacy flat-kwargs path predates engines); capacities are
@@ -380,7 +462,7 @@ class RenderService:
         else:
             d = dispatch_batch(self._problems[key], chunk, mesh=self.mesh,
                                pad_to=pad, **kw)
-        return d, time.perf_counter() - t0
+        return d, self._clock.now() - t0
 
     def _pad_width(self, f: int) -> int:
         """Padding width of a feedback-path dispatch: the next power-of-
@@ -631,20 +713,34 @@ class RenderService:
         )
         return canv, merged, retries, retry_rows
 
-    def _finalize_feedback(self, item, in_flight: int) -> ChunkResult:
+    def _finalize_feedback(self, item, in_flight: int, tenants=(),
+                           tenant_feedback: bool = False) -> ChunkResult:
         """Block on one in-flight feedback chunk: finalize, retry any
         overflow, fold the measured counts into the estimator (under
-        the chunk's workload namespace)."""
+        the chunk's workload namespace -- and, for multi-tenant batches
+        with ``tenant_feedback``, additionally under each frame's
+        tenant namespace so per-tenant plans refine independently)."""
         i, key, bounds, depths, p, caps, src, d, disp_s = item
-        t0 = time.perf_counter()
+        t0 = self._clock.now()
         canvases, st = d.finalize()
         canv, merged, retries, retry_rows = self._resolve_overflow(
             key, bounds, caps, canvases, st)
-        fetch_s = time.perf_counter() - t0  # retry dispatches included
+        fetch_s = self._clock.now() - t0  # retry dispatches included
         prob = self._problems[key]
         if self.adapt:
             self.estimator.observe_stats(depths, merged, g=prob.g, r=prob.r,
                                          workload=prob.workload)
+            if tenant_feedback and tenants:
+                chains = merged.frame_chains()
+                by_tenant: dict = {}
+                for j, t in enumerate(tenants):
+                    by_tenant.setdefault(t, []).append(j)
+                for t, idxs in by_tenant.items():
+                    self.estimator.observe_frames(
+                        [depths[j] for j in idxs],
+                        [chains[j] for j in idxs],
+                        g=prob.g, r=prob.r, workload=prob.workload,
+                        tenant=t)
         if self.engine == "ask_pooled":
             # ONE shared ring per device shard, not one per frame
             ring = (int(self.mesh.devices.size) * 2 * max(caps)
@@ -655,7 +751,92 @@ class RenderService:
             index=i, frames=len(bounds), dispatch_s=disp_s,
             fetch_s=fetch_s, in_flight=in_flight, p_subdiv=p,
             p_source=src, retries=retries,
-            ring_rows=ring, workload=key))
+            ring_rows=ring, workload=key, tenants=tuple(tenants)))
+
+    # -- multi-tenant front-door seam ---------------------------------------
+
+    def workload_keys(self) -> Tuple[str, ...]:
+        """The problem keys this service can dispatch ("" for a single-
+        problem service). The front door validates request workloads
+        against this set at admission time."""
+        return tuple(sorted(self._problems))
+
+    @property
+    def n(self) -> int:
+        """Shared canvas size of every problem this service serves."""
+        return self._n
+
+    def dispatch_planned(self, bounds, *, key: str = "", tenants=(),
+                         tenant_feedback: bool = False) -> PlannedDispatch:
+        """Batch-ingestion seam: enqueue ONE explicitly coalesced batch.
+
+        This is how the multi-tenant front door (``launch.frontdoor``)
+        feeds shared batches through the service's planning, dispatch,
+        retry, and feedback machinery without going through the
+        streaming chunker: ``bounds`` is a list of frame bounds (all in
+        problem ``key``, at most ``chunk_frames`` of them -- the front
+        door owns coalescing, the service owns planning and padding),
+        ``tenants`` optionally attributes each frame to a tenant id
+        (same length as ``bounds``; lands in ``ChunkStats.tenants``).
+
+        On the feedback path the batch's ring capacities come from the
+        estimator exactly as the streaming chunker's would -- sized for
+        the HOTTEST member, since a coalesced batch deliberately mixes
+        tenants' capacity classes -- and ``finalize()`` retries overflow
+        to zero drops and folds the measured counts back in (per-tenant
+        namespaces too when ``tenant_feedback`` is set). Without
+        feedback the batch runs the uniform path (engine kwargs sizing,
+        no retry), mirroring the uniform stream. Returns immediately
+        with a ``PlannedDispatch`` (JAX async dispatch): the caller
+        overlaps its own admission/demux work with device compute and
+        calls ``finalize()`` when it needs the frames.
+        """
+        key = str(key)
+        if key not in self._problems:
+            raise KeyError(
+                f"dispatch_planned names unknown problem {key!r}; serving "
+                f"{sorted(self._problems)}")
+        bounds = [tuple(float(x) for x in b) for b in bounds]
+        if not bounds:
+            raise ValueError("dispatch_planned needs at least one frame")
+        if len(bounds) > self.chunk_frames:
+            raise ValueError(
+                f"batch of {len(bounds)} frames exceeds chunk_frames="
+                f"{self.chunk_frames}; the front door must cut batches at "
+                "the service's chunk width")
+        tenants = tuple(str(t) for t in tenants)
+        if tenants and len(tenants) != len(bounds):
+            raise ValueError(
+                f"got {len(tenants)} tenants for {len(bounds)} frames")
+        index = self._planned_index
+        self._planned_index += 1
+        if self.estimator is None:
+            if self._mixed:
+                raise ValueError(
+                    "mixed-workload dispatch_planned needs feedback= "
+                    "(same contract as the streaming chunker)")
+            d, secs = self._dispatch(bounds, key=key)
+            item = (index, key, bounds, None, None, None, "", d, secs)
+            return PlannedDispatch(self, item, tenants, tenant_feedback)
+        est = self.estimator
+        wl = self._problems[key].workload
+        depths = [self._depth(key, b) for b in bounds]
+        t_of = (lambda j: tenants[j]) if (tenant_feedback and tenants) \
+            else (lambda j: None)
+        ps = [est.predict_quantized(d, workload=wl, tenant=t_of(j))
+              for j, d in enumerate(depths)]
+        sources = {"measured"
+                   if est.measured(d, workload=wl, tenant=t_of(j)) is not None
+                   else "prior"
+                   for j, d in enumerate(depths)}
+        src = sources.pop() if len(sources) == 1 else "mixed"
+        if self.engine == "ask_pooled":
+            caps = self._pooled_caps_for(key, ps)
+        else:
+            caps = self._caps_for(key, max(ps))
+        d, secs = self._dispatch(bounds, caps=caps, key=key)
+        item = (index, key, bounds, depths, max(ps), caps, src, d, secs)
+        return PlannedDispatch(self, item, tenants, tenant_feedback)
 
     def _stream_feedback(self, bounds_iter: Iterable) -> Iterator[ChunkResult]:
         """The closed loop: re-plan, dispatch, retry, observe, refill."""
@@ -733,9 +914,9 @@ class RenderService:
         if self.pipeline_depth == 1:  # synchronous: at most one in flight
             while enqueue():
                 i, f, d, disp_s = pending.popleft()
-                t0 = time.perf_counter()
+                t0 = self._clock.now()
                 canvases, st = d.finalize()
-                fetch_s = time.perf_counter() - t0
+                fetch_s = self._clock.now() - t0
                 yield ChunkResult(canvases, st, ChunkStats(
                     index=i, frames=f, dispatch_s=disp_s, fetch_s=fetch_s,
                     in_flight=1))
@@ -746,9 +927,9 @@ class RenderService:
         while pending:
             in_flight = len(pending)
             i, f, d, disp_s = pending.popleft()
-            t0 = time.perf_counter()
+            t0 = self._clock.now()
             canvases, st = d.finalize()  # younger chunks compute behind this
-            fetch_s = time.perf_counter() - t0
+            fetch_s = self._clock.now() - t0
             enqueue()  # refill BEFORE yielding: devices stay busy while the
             #            consumer processes this chunk
             yield ChunkResult(canvases, st, ChunkStats(
@@ -840,14 +1021,14 @@ class RenderService:
         out = []
         rs = RenderStats(pipeline_depth=self.pipeline_depth)
         chunk_stats = []
-        t0 = time.perf_counter()
+        t0 = self._clock.now()
         for r in self.stream_chunks(bounds_seq):
-            tc = time.perf_counter()
+            tc = self._clock.now()
             host = np.asarray(r.canvases)
             out.append(host)
             if sink is not None:
                 sink(host, r.stats)
-            rs.host_copy_s += time.perf_counter() - tc
+            rs.host_copy_s += self._clock.now() - tc
             rs.frames += int(r.canvases.shape[0])
             rs.chunks += 1
             rs.dispatches += r.stats.kernel_launches
@@ -858,7 +1039,7 @@ class RenderService:
             rs.retries += r.chunk.retries
             rs.ring_rows += r.chunk.ring_rows
             chunk_stats.append(r.chunk)
-        rs.wall_s = time.perf_counter() - t0
+        rs.wall_s = self._clock.now() - t0
         rs.chunk_stats = tuple(chunk_stats)
         rs.program_traces = self.program_traces()
         if self.estimator is not None:

@@ -393,3 +393,72 @@ def test_restore_clamps_counters_and_rejects_bad_versions():
         poisoned = dict(est.snapshot(), version=bad)
         with pytest.raises(ValueError, match="version"):
             feedback.OccupancyEstimator.restore(poisoned)
+
+
+# ---------------------------------------------------------------------------
+# tenant namespaces (the front door's per-tenant estimator dimension)
+# ---------------------------------------------------------------------------
+
+def test_tenant_observation_files_under_tenant_namespace():
+    """An observation with tenant= lands under "tenant@workload" and
+    leaves the shared workload namespace untouched."""
+    est = feedback.OccupancyEstimator()
+    est.observe_value(0.0, 0.9, workload="mandelbrot", tenant="alice")
+    assert est.workloads_observed() == ("alice@mandelbrot",)
+    assert est.measured(0.0, workload="mandelbrot") is None
+    assert est.measured(0.0, workload="mandelbrot",
+                        tenant="alice") == pytest.approx(
+        est.predict(0.0, workload="mandelbrot", tenant="alice"))
+
+
+def test_tenant_prediction_falls_back_to_shared_namespace():
+    """A tenant with no observations of its own plans from the shared
+    workload namespace -- fleet-wide measurements, not the cold prior."""
+    est = feedback.OccupancyEstimator()
+    shared = est.observe_value(0.0, 0.45, workload="mandelbrot")
+    # unknown tenant: falls back to the shared observation...
+    assert est.predict(0.0, workload="mandelbrot",
+                       tenant="newcomer") == pytest.approx(shared)
+    assert est.measured(0.0, workload="mandelbrot",
+                        tenant="newcomer") == pytest.approx(shared)
+    # ...until it has its own, which then takes precedence
+    own = est.observe_value(0.0, 0.9, workload="mandelbrot",
+                            tenant="newcomer")
+    assert est.predict(0.0, workload="mandelbrot",
+                       tenant="newcomer") == pytest.approx(own)
+    # a tenant with NO shared fallback still gets the prior
+    assert est.predict(0.0, workload="julia",
+                       tenant="newcomer") == est.prior(0.0, workload="julia")
+
+
+def test_tenant_band_comes_from_workload_part():
+    """The clamp band of a tenant namespace is the WORKLOAD's band: a
+    parametric workload's band applies to every tenant serving it."""
+    est = feedback.OccupancyEstimator()
+    est._bands["hotwl"] = (0.95, 0.0, 0.5)  # (deep, slope, p_min)
+    v = est.observe_value(0.0, 0.01, workload="hotwl", tenant="t")
+    assert v == pytest.approx(0.5)  # clamped into hotwl's band floor
+
+
+def test_tenant_namespace_snapshot_roundtrip():
+    est = feedback.OccupancyEstimator()
+    est.observe_value(0.0, 0.8, workload="mandelbrot", tenant="alice")
+    est.observe_value(4.0, 0.6, workload="mandelbrot")
+    back = feedback.OccupancyEstimator.restore(est.snapshot())
+    assert back.workloads_observed() == est.workloads_observed()
+    assert back.predict(0.0, workload="mandelbrot",
+                        tenant="alice") == est.predict(
+        0.0, workload="mandelbrot", tenant="alice")
+
+
+def test_workload_name_may_not_contain_at_sign():
+    """"@" is the tenant separator, so it is reserved in workload names
+    (tenant ids may contain it -- rsplit keeps the split unambiguous)."""
+    est = feedback.OccupancyEstimator()
+    with pytest.raises(ValueError, match="@"):
+        est.observe_value(0.0, 0.5, workload="bad@name")
+    # tenant ids with "@" are fine and round-trip through the key
+    est.observe_value(0.0, 0.5, workload="mandelbrot", tenant="a@corp")
+    assert est.workloads_observed() == ("a@corp@mandelbrot",)
+    assert est.measured(0.0, workload="mandelbrot",
+                        tenant="a@corp") is not None

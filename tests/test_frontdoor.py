@@ -1,0 +1,520 @@
+"""Tests for the multi-tenant front door (``launch.frontdoor``):
+admission, deficit-round-robin coalescing, deadline-aware batching,
+backpressure, demux isolation, and the end-to-end acceptance scenario
+through the real render service.
+
+Everything except the acceptance tier runs on the deterministic
+concurrency harness (``tests.fakes``): a virtual clock plus a scripted
+service, so fairness/deadline/backpressure assertions are exact
+schedule equalities with no wall-clock sleeps anywhere.
+"""
+
+import numpy as np
+import pytest
+
+from fakes import FakeService, VirtualClock
+from repro.launch.frontdoor import (AdmissionRejected, DeadlineExceeded,
+                                    DispatchFailed, FrontDoor, InvalidRequest,
+                                    SessionClosed)
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+from repro.workloads import FrontDoorOptions
+
+# dwell unique to this module: jit/program caches are keyed per problem
+# config, and shuffled test order must not collide with other modules
+DWELL = 76
+
+
+def _bounds(i: int):
+    """Identity-carrying bounds: frame i's canvas reads back i."""
+    return (float(i), 0.0, float(i) + 1.0, 1.0)
+
+
+def _door(service=None, **opt):
+    if service is None:
+        service = FakeService(chunk_frames=8)
+    return FrontDoor(service, options=FrontDoorOptions(**opt)), service
+
+
+def _served_sequence(service):
+    """Tenant of every served frame, global dispatch order."""
+    return [t for rec in service.batches for t in rec.tenants]
+
+
+# ---------------------------------------------------------------------------
+# admission + validation
+# ---------------------------------------------------------------------------
+
+def test_poisoned_requests_rejected_before_admission():
+    """Unknown workloads and malformed bounds raise a typed
+    InvalidRequest at submit -- they never reach the queue, so they can
+    never poison a shared batch."""
+    door, svc = _door(FakeService(keys=("julia",), chunk_frames=4))
+    with pytest.raises(InvalidRequest):
+        door.submit("a", "mandelbrot", _bounds(0))  # unknown workload
+    with pytest.raises(InvalidRequest):
+        door.submit("a", "julia", (0.0, 0.0, 1.0))  # 3 numbers
+    with pytest.raises(InvalidRequest):
+        door.submit("a", "julia", (0.0, 0.0, float("nan"), 1.0))
+    with pytest.raises(InvalidRequest):
+        door.submit("a", "julia", (1.0, 0.0, 1.0, 1.0))  # zero extent
+    with pytest.raises(InvalidRequest):
+        door.submit("a", "julia", "not-bounds")
+    assert door.stats.rejected_invalid == 5
+    assert door.stats.admitted == 0 and door.queued == 0
+    # the shared path is untouched: a good batch-mate still gets served
+    frame = door.submit("b", "julia", _bounds(7)).result()
+    assert frame.canvas[0, 0] == 7.0
+    assert door.stats.served == 1 and len(svc.batches) == 1
+
+
+def test_backpressure_shed():
+    """on_full="shed": admission past max_queue raises a typed
+    AdmissionRejected and the request is never enqueued."""
+    door, svc = _door(max_queue=2, on_full="shed")
+    t0 = door.submit("a", "", _bounds(0))
+    t1 = door.submit("a", "", _bounds(1))
+    with pytest.raises(AdmissionRejected):
+        door.submit("a", "", _bounds(2))
+    assert door.stats.shed_queue_full == 1
+    assert door.stats.admitted == 2 and door.queued == 2
+    door.drain()
+    assert t0.result().canvas[0, 0] == 0.0
+    assert t1.result().canvas[0, 0] == 1.0
+
+
+def test_backpressure_block_makes_progress():
+    """on_full="block": a submit into a full queue serves queued work
+    until space frees, then admits -- nothing is lost, nothing raises."""
+    door, svc = _door(max_queue=2, on_full="block")
+    tickets = [door.submit("a", "", _bounds(i)) for i in range(6)]
+    assert door.stats.admitted == 6 and door.stats.shed_queue_full == 0
+    # blocking admission already served the early tickets
+    assert sum(t.done for t in tickets) >= 2
+    door.drain()
+    assert [t.result().canvas[0, 0] for t in tickets] == [
+        float(i) for i in range(6)]
+
+
+# ---------------------------------------------------------------------------
+# fair coalescing (deficit round robin)
+# ---------------------------------------------------------------------------
+
+def test_drr_interleaves_tenants():
+    """3 tenants x 6 frames, quantum 2, width 6: every batch grants each
+    backlogged tenant exactly its quantum -- the exact DRR schedule."""
+    door, svc = _door(FakeService(chunk_frames=6), quantum=2)
+    for t in ("a", "b", "c"):
+        for i in range(6):
+            door.submit(t, "", _bounds(i))
+    door.drain()
+    assert [rec.tenants for rec in svc.batches] == [
+        ("a", "a", "b", "b", "c", "c")] * 3
+    assert door.stats.served == 18 and door.stats.batches == 3
+
+
+def test_drr_rotation_resumes_across_batch_truncation():
+    """A batch boundary mid-rotation does NOT reset fairness: the fill
+    resumes at the tenant (and remaining grant) where it was cut, so the
+    served sequence equals one continuous quantum-RR schedule."""
+    door, svc = _door(FakeService(chunk_frames=4), quantum=2)
+    for t in ("a", "b", "c"):
+        for i in range(4):
+            door.submit(t, "", _bounds(i))
+    door.drain()
+    # width 4 cuts the 2-2-2 rotation mid-"c": c's grant carries over
+    assert _served_sequence(svc) == [
+        "a", "a", "b", "b", "c", "c", "a", "a", "b", "b", "c", "c"]
+    assert [rec.frames for rec in svc.batches] == [4, 4, 4]
+
+
+def test_drr_skips_tenant_with_mismatched_workload_head():
+    """Batches are single-workload (the switch-cut rule): a tenant whose
+    head-of-queue is another workload is skipped without losing its
+    turn, and is served by the next batch of its workload."""
+    door, svc = _door(FakeService(keys=("m", "j"), chunk_frames=8),
+                      quantum=2)
+    for i in range(2):
+        door.submit("a", "m", _bounds(i))
+        door.submit("b", "j", _bounds(10 + i))
+    door.drain()
+    assert [(rec.key, rec.tenants) for rec in svc.batches] == [
+        ("m", ("a", "a")), ("j", ("b", "b"))]
+
+
+def test_within_tenant_order_never_reordered():
+    door, svc = _door(FakeService(keys=("m", "j"), chunk_frames=4),
+                      quantum=1)
+    sess = door.session("a")
+    keys = ["m", "m", "j", "m", "j", "j", "m"]
+    for i, k in enumerate(keys):
+        sess.submit(k, _bounds(i))
+    door.drain()
+    got = [f.canvas[0, 0] for f in sess.results()]
+    assert got == [float(i) for i in range(7)]
+    # the workload-switch rule cut batches exactly at the key changes
+    assert [rec.key for rec in svc.batches] == ["m", "j", "m", "j", "m"]
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware batching
+# ---------------------------------------------------------------------------
+
+def test_deadline_shrinks_batch_width():
+    """With an affine latency model, an urgent deadline shrinks the
+    dispatch width to what still fits inside the slack: slack 2.5 at 1
+    s/frame -> a 2-frame batch, not the full 8."""
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=8, clock=clock, per_frame_s=1.0)
+    door = FrontDoor(svc, options=FrontDoorOptions(
+        per_frame_s=1.0, overhead_s=0.0, quantum=8))
+    sess = door.session("a")
+    urgent = [sess.submit("", _bounds(i), deadline=clock.now() + 2.5)
+              for i in range(2)]
+    relaxed = [sess.submit("", _bounds(2 + i)) for i in range(6)]
+    door.drain()
+    # the urgent pair rode a 2-frame batch (int(2.5 // 1.0)), finalised
+    # at t=2.0 -- inside the deadline; the relaxed tail went full width
+    assert [rec.frames for rec in svc.batches] == [2, 6]
+    assert all(t.result().met_deadline for t in urgent)
+    assert [t.result().canvas[0, 0] for t in relaxed] == [
+        float(2 + i) for i in range(6)]
+    assert door.stats.served == 8 and door.stats.shed_deadline == 0
+    assert door.stats.deadline_misses == 0
+
+
+def test_no_deadlines_means_full_width():
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=8, clock=clock, per_frame_s=1.0)
+    door = FrontDoor(svc, options=FrontDoorOptions(
+        per_frame_s=1.0, quantum=8))
+    for i in range(8):
+        door.submit("a", "", _bounds(i))
+    door.drain()
+    assert [rec.frames for rec in svc.batches] == [8]
+
+
+def test_expired_requests_shed_with_typed_error():
+    """A request whose deadline passed before dispatch is shed with
+    DeadlineExceeded; its batch-mates are served normally."""
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=8, clock=clock)
+    door = FrontDoor(svc, options=FrontDoorOptions())
+    late = door.submit("a", "", _bounds(0), deadline=clock.now() + 1.0)
+    ok = door.submit("b", "", _bounds(1))
+    clock.advance(5.0)  # deadline passes while queued
+    door.drain()
+    with pytest.raises(DeadlineExceeded):
+        late.result()
+    assert ok.result().canvas[0, 0] == 1.0
+    assert door.stats.shed_deadline == 1 and door.stats.served == 1
+    assert svc.batches[0].tenants == ("b",)
+
+
+def test_latency_model_learns_from_measured_batches():
+    """The EWMA refines per_frame_s from measured batch latency, so
+    deadline width adapts even when the seeds were wrong."""
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=4, clock=clock, per_frame_s=2.0)
+    door = FrontDoor(svc, options=FrontDoorOptions(latency_alpha=1.0))
+    for i in range(4):
+        door.submit("a", "", _bounds(i))
+    door.drain()
+    # one 4-frame batch at 2 s/frame measured exactly
+    assert door._per_frame_s == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# pipelining / in-flight window
+# ---------------------------------------------------------------------------
+
+def test_in_flight_window_overlaps_batches():
+    """max_in_flight=2: the second batch is enqueued on the device
+    BEFORE the first is finalised (the front door's double buffering),
+    and the window never exceeds the bound."""
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=4, clock=clock, per_frame_s=1.0)
+    door = FrontDoor(svc, options=FrontDoorOptions(max_in_flight=2,
+                                                   quantum=4))
+    for i in range(12):
+        door.submit("a", "", _bounds(i))
+    assert door.in_flight <= 2
+    door.drain()
+    recs = svc.batches
+    assert len(recs) == 3
+    # batch 1 was enqueued at the same virtual instant as batch 0 --
+    # before batch 0's device work completed
+    assert recs[1].enqueued_at < recs[0].ready_at
+    # serial device: back-to-back execution, no idle gap
+    assert recs[1].ready_at == recs[0].ready_at + 4.0
+    assert recs[2].ready_at == recs[1].ready_at + 4.0
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_dispatch_failure_fails_only_that_batch():
+    """An injected dispatch failure fails exactly the tickets riding the
+    failed batch (typed DispatchFailed, cause attached); earlier and
+    later batches keep serving."""
+    svc = FakeService(chunk_frames=2, fail={1})
+    door = FrontDoor(svc, options=FrontDoorOptions(quantum=2,
+                                                   max_in_flight=1))
+    a = [door.submit("a", "", _bounds(i)) for i in range(2)]
+    b = [door.submit("b", "", _bounds(10 + i)) for i in range(2)]
+    c = [door.submit("c", "", _bounds(20 + i)) for i in range(2)]
+    door.drain()
+    assert [t.result().canvas[0, 0] for t in a] == [0.0, 1.0]
+    for t in b:
+        with pytest.raises(DispatchFailed) as e:
+            t.result()
+        assert isinstance(e.value.__cause__, RuntimeError)
+    assert [t.result().canvas[0, 0] for t in c] == [20.0, 21.0]
+    assert door.stats.failed == 2 and door.stats.served == 4
+
+
+def test_disconnect_cancels_queued_and_in_flight_requests():
+    """A tenant disconnect mid-stream cancels its unserved tickets with
+    SessionClosed -- including frames already riding an in-flight batch,
+    whose canvases are dropped at demux -- without touching batch-mates."""
+    clock = VirtualClock()
+    svc = FakeService(chunk_frames=4, clock=clock)
+    door = FrontDoor(svc, options=FrontDoorOptions(max_in_flight=2,
+                                                   quantum=2))
+    sa = door.session("a")
+    sb = door.session("b")
+    a = [sa.submit("", _bounds(i)) for i in range(4)]
+    b = [sb.submit("", _bounds(10 + i)) for i in range(4)]
+    # dispatch the first window (a0 a1 b0 b1), leave the rest queued
+    assert door.in_flight == 0
+    while door.in_flight < 2 and door._dispatch_next():
+        pass
+    assert door.in_flight == 2
+    sa.close()
+    door.drain()
+    for t in a:
+        with pytest.raises(SessionClosed):
+            t.result()
+    assert [t.result().canvas[0, 0] for t in b] == [10.0, 11.0, 12.0, 13.0]
+    assert door.stats.cancelled == 4 and door.stats.served == 4
+    # submitting on the closed session is itself a typed error
+    with pytest.raises(SessionClosed):
+        sa.submit("", _bounds(99))
+
+
+def test_results_iterator_raises_typed_errors_in_stream_order():
+    svc = FakeService(chunk_frames=2, fail={0})
+    door = FrontDoor(svc, options=FrontDoorOptions(max_in_flight=1))
+    sess = door.session("a")
+    sess.submit("", _bounds(0))
+    sess.submit("", _bounds(1))
+    sess.submit("", _bounds(2))
+    door.drain()
+    it = sess.results()
+    with pytest.raises(DispatchFailed):
+        next(it)
+    with pytest.raises(DispatchFailed):
+        next(it)
+    assert next(it).canvas[0, 0] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis when installed; seeded fallback otherwise)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_no_reordering_within_tenant(data):
+    """Under arbitrary submission interleavings, batch widths, and
+    quanta, every tenant's served stream preserves its submission
+    order."""
+    n_tenants = data.draw(st.integers(2, 5))
+    width = data.draw(st.integers(1, 6))
+    quantum = data.draw(st.integers(1, 4))
+    keys = ("m", "j")
+    svc = FakeService(keys=keys, chunk_frames=width)
+    door = FrontDoor(svc, options=FrontDoorOptions(quantum=quantum))
+    sessions = [door.session(f"t{i}") for i in range(n_tenants)]
+    plan = data.draw(st.lists(
+        st.tuples(st.integers(0, n_tenants - 1), st.integers(0, 1)),
+        min_size=1, max_size=24))
+    want = {s.tenant: [] for s in sessions}
+    for seq, (ti, ki) in enumerate(plan):
+        sessions[ti].submit(keys[ki], _bounds(seq))
+        want[sessions[ti].tenant].append(float(seq))
+    door.drain()
+    for s in sessions:
+        got = [f.canvas[0, 0] for f in s.results()]
+        assert got == want[s.tenant]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_every_admitted_request_served_exactly_once(data):
+    """Exactly-once accounting: admitted == served + shed + failed +
+    cancelled, every ticket settles, and no frame is dispatched twice."""
+    width = data.draw(st.integers(1, 5))
+    quantum = data.draw(st.integers(1, 3))
+    fail_every = data.draw(st.integers(0, 3))
+    svc = FakeService(
+        keys=("m", "j"), chunk_frames=width,
+        fail=(lambda i, *a: RuntimeError("boom")
+              if fail_every and i % (fail_every + 1) == fail_every
+              else None))
+    door = FrontDoor(svc, options=FrontDoorOptions(quantum=quantum))
+    plan = data.draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 1)),
+        min_size=1, max_size=20))
+    tickets = []
+    for seq, (ti, ki) in enumerate(plan):
+        tickets.append(door.submit(f"t{ti}", ("m", "j")[ki], _bounds(seq)))
+    door.drain()
+    assert all(t.done for t in tickets)
+    served = sum(t.exception() is None for t in tickets)
+    failed = sum(isinstance(t.exception(), DispatchFailed) for t in tickets)
+    assert served + failed == len(tickets)
+    s = door.stats
+    assert s.admitted == len(tickets)
+    assert s.admitted == s.served + s.failed + s.shed_deadline + s.cancelled
+    # exactly-once at the dispatch layer: every admitted frame appears
+    # in exactly one batch
+    dispatched = [b[0] for rec in svc.batches for b in rec.bounds]
+    assert sorted(dispatched) == [float(i) for i in range(len(tickets))]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_drr_service_gap_bound(data):
+    """DRR fairness bound: while a tenant stays backlogged, at most
+    quantum x tenants frames of other tenants are served between two of
+    its consecutive frames (single workload -- the pure DRR regime)."""
+    n_tenants = data.draw(st.integers(2, 5))
+    quantum = data.draw(st.integers(1, 3))
+    width = data.draw(st.integers(1, 8))
+    per_tenant = [data.draw(st.integers(1, 8)) for _ in range(n_tenants)]
+    svc = FakeService(chunk_frames=width)
+    door = FrontDoor(svc, options=FrontDoorOptions(quantum=quantum))
+    for ti, count in enumerate(per_tenant):
+        for i in range(count):
+            door.submit(f"t{ti}", "", _bounds(ti * 100 + i))
+    door.drain()
+    seq = _served_sequence(svc)
+    assert len(seq) == sum(per_tenant)
+    bound = quantum * n_tenants
+    for ti in range(n_tenants):
+        t = f"t{ti}"
+        pos = [p for p, who in enumerate(seq) if who == t]
+        assert len(pos) == per_tenant[ti]
+        # gap to the first serve, and between consecutive serves while
+        # the tenant still has queued frames
+        assert pos[0] <= bound
+        for p1, p2 in zip(pos, pos[1:]):
+            assert p2 - p1 - 1 <= bound, (seq, t)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the real service end to end
+# ---------------------------------------------------------------------------
+
+def _real_service(n=64, **kw):
+    from repro.launch.mesh import make_frames_mesh
+    from repro.launch.render_service import RenderService
+    from repro.workloads import FrameProblem
+
+    pm = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=DWELL, backend="jnp",
+                      workload="mandelbrot")
+    pj = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=DWELL, backend="jnp",
+                      workload="julia")
+    kw.setdefault("feedback", True)
+    kw.setdefault("chunk_frames", 8)
+    return RenderService({"mandelbrot": pm, "julia": pj},
+                         mesh=make_frames_mesh(1), safety_factor=1.1,
+                         **kw), pm, pj
+
+
+def _tenant_plan():
+    """8 tenants x 3 frames, mixed workloads, distinct trajectories."""
+    from repro.launch.render_service import zoom_bounds
+
+    plan = {}
+    for i in range(8):
+        wl = ("mandelbrot", "julia")[i % 2]
+        center = ((-0.74364 + 0.01 * i, 0.13182) if wl == "mandelbrot"
+                  else (0.02 * i - 0.05, 0.01 * i))
+        plan[f"tenant{i}"] = (wl, list(zoom_bounds(
+            3, center=center, width0=3.0 - 0.1 * i)))
+    return plan
+
+
+def test_acceptance_eight_tenants_shared_batches_bit_identical():
+    """The ISSUE acceptance scenario: 8 concurrent tenants with mixed
+    workloads and staggered deadlines served through shared planned
+    batches -- zero drops, every per-tenant stream bit-identical to that
+    tenant running ALONE through a RenderService, and strictly fewer
+    total dispatches than 8 independent services."""
+    svc, pm, pj = _real_service()
+    door = FrontDoor(svc, options=FrontDoorOptions(
+        quantum=2, max_in_flight=2, tenant_feedback=True))
+    plan = _tenant_plan()
+    now = svc._clock.now()
+    sessions = {}
+    for i, (tenant, (wl, bounds)) in enumerate(plan.items()):
+        sessions[tenant] = door.session(tenant)
+        for j, b in enumerate(bounds):
+            # staggered, generous deadlines: ordering pressure without
+            # shedding risk on slow CI hosts
+            sessions[tenant].submit(wl, b, deadline=now + 300.0 + 10.0 * i + j)
+    door.drain()
+
+    st = door.stats
+    assert st.admitted == st.served == 24
+    assert st.shed_queue_full == st.shed_deadline == st.failed == 0
+    assert st.overflow_dropped == 0  # zero drops, retried to completion
+    # shared batches actually coalesced across tenants
+    assert st.batches < 24
+    assert any(len(set(c.tenants)) > 1 for c in st.batch_stats)
+    # per-tenant attribution covers every frame
+    attributed = {}
+    for c in st.batch_stats:
+        for t, f in c.tenant_frames().items():
+            attributed[t] = attributed.get(t, 0) + f
+    assert attributed == {t: 3 for t in plan}
+
+    solo_dispatches = 0
+    for tenant, (wl, bounds) in plan.items():
+        frames = sorted(sessions[tenant].results(), key=lambda f: f.tseq)
+        assert [f.tseq for f in frames] == [0, 1, 2]
+        assert all(f.workload == wl for f in frames)
+        solo_svc, _, _ = _real_service()
+        solo_canv, solo_rs = solo_svc.render([(wl, b) for b in bounds])
+        assert solo_rs.overflow_dropped == 0
+        solo_dispatches += solo_rs.dispatches
+        np.testing.assert_array_equal(
+            np.stack([f.canvas for f in frames]), solo_canv)
+    # consolidation: the shared front door dispatched strictly fewer
+    # times than 8 independent services serving the same frames
+    assert st.dispatches < solo_dispatches, (st.dispatches, solo_dispatches)
+
+
+def test_acceptance_tenant_feedback_namespaces_real_service():
+    """tenant_feedback=True files per-tenant observations: a deep-zoom
+    tenant's namespace appears in the estimator alongside the shared
+    workload namespace."""
+    from repro.launch.render_service import zoom_bounds
+
+    # n=128: at n=64 the g=4/B=16 geometry bottoms out with zero
+    # subdivision levels, so chains would carry no occupancy signal
+    svc, pm, pj = _real_service(n=128)
+    door = FrontDoor(svc, options=FrontDoorOptions(tenant_feedback=True))
+    sess = door.session("zoomer")
+    # a boundary-skimming zoom subdivides, so chains carry information
+    for b in zoom_bounds(8, center=(-0.7436447860, 0.1318252536),
+                         width0=6.0, zoom_per_frame=1.4):
+        sess.submit("mandelbrot", b)
+    door.drain()
+    observed = set(svc.estimator.workloads_observed())
+    assert "mandelbrot" in observed
+    assert "zoomer@mandelbrot" in observed
+    # the tenant namespace predicts from its own EWMA state
+    own = svc.estimator.buckets(workload=pm.workload, tenant="zoomer")
+    assert own  # non-empty: the tenant really was observed separately
