@@ -22,8 +22,10 @@ The ``tuned_tier`` suite additionally emits a machine-readable
 ``BENCH_6.json`` (dispatches / ring rows / wall times / tuned-vs-jnp
 speedup per registry workload) and the ``pooled_tier`` suite a
 ``BENCH_7.json`` (pooled vs per-frame-planned ring rows on a
-heterogeneous batch); CI's ``compare_bench`` gate diffs both against
-the checked-in baselines.
+heterogeneous batch), and the ``tile_service`` suite a ``BENCH_9.json``
+(content-addressed dwell-cache hit rate and dispatch savings on an
+overlapping pan/zoom stream); CI's ``compare_bench`` gate diffs all
+three against the checked-in baselines.
 
 Rows (``name,case,value``):
   ask_scan_launches_<m>      kernel dispatch count
@@ -610,7 +612,121 @@ def pooled_tier(writer, n=512, dwell=128, n_sparse=12, n_dense=4,
     return payload
 
 
-def run(writer, full=False, bench_json=None, bench_json_pooled=None):
+def tile_service(writer, n=256, dwell=64, chunk=8, bench_json=None):
+    """Content-addressed tile cache over the planned front door.
+
+    Replays an overlapping pan/zoom viewport stream twice through
+    ``launch.tiles.TileService`` on a feedback ``RenderService``: a
+    half-viewport pan across the cardioid, a half-overlap zoom sequence
+    one depth down, then a full replay (the interactive steady state --
+    most of what a viewer looks at was rendered before). Records the
+    cache hit rate, the ``dispatch_planned`` batches actually issued vs
+    the uncached baseline (every requested tile re-rendered, coalesced
+    the same way), wall times for both, and bit-identity of every
+    served tile against a fresh exact ``solve_batch`` render. With
+    ``bench_json`` the numbers are written as the machine-readable
+    ``BENCH_9.json`` CI's ``compare_bench`` gate diffs (``identical``
+    and ``fewer_dispatches`` hard, ``hit_rate`` a hard floor,
+    ``dispatches`` a monotone budget, wall times soft; the config is
+    the SAME in smoke and full mode so the checked-in baseline's exact
+    hit-rate / dispatch budgets stay comparable).
+    """
+    from repro.launch.frontdoor import FrontDoorStats
+    from repro.launch.render_service import RenderService
+    from repro.launch.tiles import TileOptions, TileService
+    from repro.workloads import FrameProblem
+
+    prob = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                        backend="jnp", workload="mandelbrot")
+    svc = RenderService(prob, chunk_frames=chunk, feedback=True)
+
+    # half-overlap pan at one depth + half-overlap zoom one depth down,
+    # then the full replay: a deterministic overlapping stream
+    pan = [(-1.0 + 0.25 * i, -0.25, -0.5 + 0.25 * i, 0.25)
+           for i in range(6)]
+    zoom = [(-0.85 + 0.125 * i, -0.125, -0.6 + 0.125 * i, 0.125)
+            for i in range(3)]
+    views = (pan + zoom) * 2
+    case = f"n={n} views={len(views)}"
+
+    def stream(tiles):
+        hits = misses = dispatches = retries = 0
+        served = {}
+        for v in views:
+            r = tiles.serve(v)
+            hits += r.hits
+            misses += r.misses
+            dispatches += r.dispatches
+            retries += sum(c.retries for c in r.chunks)
+            served.update(r.tiles)
+        return hits, misses, dispatches, retries, served
+
+    fd = FrontDoorStats()
+    cached_tiles = TileService(svc, stats_sink=fd)
+    hits, misses, dispatches, retries, served = stream(cached_tiles)
+    hit_rate = hits / (hits + misses) if hits + misses else 0.0
+
+    # uncached baseline: a zero-byte cache misses every lookup, so the
+    # same stream re-renders every requested tile (same coalescing)
+    def uncached():
+        return TileService(svc, options=TileOptions(max_bytes=0))
+
+    base_dispatches = stream(uncached())[2]
+    t_uncached = _best_time(lambda: stream(uncached()), reps=2)
+    t_cached = _best_time(lambda: stream(TileService(svc)), reps=2)
+    speedup = t_uncached / t_cached if t_cached > 0 else 0.0
+
+    # bit-identity: every unique tile served (cached or fresh) equals an
+    # exact one-shot render of its reconstructed window
+    ref = tuple(float(x) for x in prob.bounds)
+    addrs = list(served)
+    exact, _ = solve_batch(prob, [a.bounds(ref) for a in addrs],
+                           p_subdiv=1.0)
+    exact = np.asarray(exact)
+    identical = int(all(np.array_equal(served[a], exact[j])
+                        for j, a in enumerate(addrs)))
+    fewer = int(dispatches < base_dispatches)
+
+    writer("ask_tiles_frames_requested", case, hits + misses)
+    writer("ask_tiles_tiles_unique", case, len(addrs))
+    writer("ask_tiles_hit_rate", case, round(hit_rate, 4))
+    writer("ask_tiles_dispatches", case, dispatches)
+    writer("ask_tiles_baseline_dispatches", case, base_dispatches)
+    writer("ask_tiles_fewer_dispatches", case, fewer)
+    writer("ask_tiles_retries", case, retries)
+    writer("ask_tiles_cache_bytes", case, cached_tiles.cache.resident_bytes)
+    writer("ask_tiles_wall_ms_cached", case, t_cached * 1e3)
+    writer("ask_tiles_wall_ms_uncached", case, t_uncached * 1e3)
+    writer("ask_tiles_speedup", case, speedup)
+    writer("ask_tiles_identical", case, identical)
+
+    assert fd.tile_hits == hits and fd.tile_misses == misses
+
+    payload = {"version": 1,
+               "config": {"n": n, "max_dwell": dwell, "g": 4, "r": 2,
+                          "B": 16, "chunk": chunk, "views": len(views)},
+               "workloads": {"pan_zoom_mandelbrot": {
+                   "identical": identical,
+                   "hit_rate": round(hit_rate, 4),
+                   "dispatches": int(dispatches),
+                   "baseline_dispatches": int(base_dispatches),
+                   "fewer_dispatches": fewer,
+                   "frames_requested": int(hits + misses),
+                   "tiles_unique": len(addrs),
+                   "cache_bytes": int(cached_tiles.cache.resident_bytes),
+                   "wall_ms_cached": round(t_cached * 1e3, 3),
+                   "wall_ms_uncached": round(t_uncached * 1e3, 3),
+                   "speedup": round(speedup, 4),
+               }}}
+    if bench_json:
+        with open(bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return payload
+
+
+def run(writer, full=False, bench_json=None, bench_json_pooled=None,
+        bench_json_tiles=None):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
@@ -621,6 +737,7 @@ def run(writer, full=False, bench_json=None, bench_json_pooled=None):
         workload_serving(writer, n=512, dwell=128, frames=48, chunk=8)
         tuned_tier(writer, n=256, dwell=128, bench_json=bench_json)
         pooled_tier(writer, bench_json=bench_json_pooled)
+        tile_service(writer, bench_json=bench_json_tiles)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
@@ -631,3 +748,5 @@ def run(writer, full=False, bench_json=None, bench_json_pooled=None):
         workload_serving(writer, n=256, dwell=64, frames=24, chunk=4)
         tuned_tier(writer, n=256, dwell=64, bench_json=bench_json)
         pooled_tier(writer, bench_json=bench_json_pooled)
+        # the tile config is kept identical to full mode (see pooled_tier)
+        tile_service(writer, bench_json=bench_json_tiles)

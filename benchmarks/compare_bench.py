@@ -9,7 +9,9 @@ regresses the baseline. Failures are split into two classes:
   workloads missing from the fresh run (silent coverage loss), engines
   no longer bit-identical (``identical != 1``), rows dropped
   (``overflow != 0``), a pooled ring no longer beating the per-frame
-  plan (``below_planned != 1``), dispatch counts growing, ring rows
+  plan (``below_planned != 1``), a tile cache no longer saving
+  dispatches (``fewer_dispatches != 1``) or its hit rate falling below
+  the baseline's, dispatch counts growing, ring rows
   growing. Each is checked only when the baseline row carries the field,
   so one gate serves every BENCH schema (the tuned-tier BENCH_6, the
   pooled BENCH_7, future suites).
@@ -37,6 +39,8 @@ _INVARIANTS = (
     ("identical", 1, "engines no longer bit-identical"),
     ("overflow", 0, "rows dropped (overflow != 0)"),
     ("below_planned", 1, "pooled ring no longer below the per-frame plan"),
+    ("fewer_dispatches", 1, "tile cache no longer beats the uncached "
+                            "dispatch count"),
 )
 
 # monotone budget fields: the fresh value must not exceed the baseline's
@@ -69,6 +73,12 @@ def compare(baseline: dict, fresh: dict, *, wall_tol: float = 5.0,
             if field in b and f.get(field, 0) > b[field]:
                 hard.append(f"{name}: {field} grew {b[field]} -> "
                             f"{f.get(field)}")
+        # hit_rate is a hard FLOOR: the stream is deterministic, so the
+        # cache answering fewer lookups is a real serving regression,
+        # not noise (epsilon absorbs json round-tripping only)
+        if "hit_rate" in b and f.get("hit_rate", 0.0) < b["hit_rate"] - 1e-9:
+            hard.append(f"{name}: hit_rate fell {b['hit_rate']:.4f} -> "
+                        f"{f.get('hit_rate', 0.0):.4f}")
         if "speedup" in b:
             floor = max(b["speedup"] * speedup_floor_frac, min_speedup)
             if f.get("speedup", 0.0) < floor:
@@ -112,9 +122,11 @@ def _print_table(fresh: dict) -> None:
         row = fresh["workloads"][name]
         cells = []
         for field in ("identical", "overflow", "below_planned",
-                      "dispatches", "ring_rows"):
+                      "fewer_dispatches", "dispatches", "ring_rows"):
             if field in row:
                 cells.append(f"{field}={row[field]}")
+        if "hit_rate" in row:
+            cells.append(f"hit_rate={row['hit_rate']:.4f}")
         for field in sorted(row):
             if field.startswith("wall_ms_"):
                 cells.append(f"{field[8:]}={row[field]:.1f}ms")

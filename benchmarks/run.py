@@ -12,13 +12,14 @@ summary per suite. Suites:
   roofline    -> deliverable (g): printed from experiments/dryrun if present
 
 ``python -m benchmarks.run [--suite X] [--full] [--json PATH]
-[--json-pooled PATH]``
+[--json-pooled PATH] [--json-tiles PATH]``
 
 ``--json PATH`` (ask_scan suite) additionally writes the machine-readable
-tuned-tier comparison (``BENCH_6.json`` schema) and ``--json-pooled PATH``
-the pooled-vs-planned comparison (``BENCH_7.json`` schema); CI's
-``benchmarks.compare_bench`` gate diffs both against the checked-in
-baselines.
+tuned-tier comparison (``BENCH_6.json`` schema), ``--json-pooled PATH``
+the pooled-vs-planned comparison (``BENCH_7.json`` schema), and
+``--json-tiles PATH`` the tile-cache serving comparison (``BENCH_9.json``
+schema); CI's ``benchmarks.compare_bench`` gate diffs each against the
+checked-in baselines.
 """
 
 from __future__ import annotations
@@ -37,6 +38,8 @@ def main(argv=None) -> None:
                     help="write the tuned-tier BENCH json (ask_scan suite)")
     ap.add_argument("--json-pooled", default=None, metavar="PATH",
                     help="write the pooled-tier BENCH json (ask_scan suite)")
+    ap.add_argument("--json-tiles", default=None, metavar="PATH",
+                    help="write the tile-cache BENCH json (ask_scan suite)")
     args = ap.parse_args(argv)
 
     def writer(name, case, value):
@@ -56,7 +59,8 @@ def main(argv=None) -> None:
         suites.append(("ask_scan",
                        lambda: bench_ask_scan.run(
                            writer, full=args.full, bench_json=args.json,
-                           bench_json_pooled=args.json_pooled)))
+                           bench_json_pooled=args.json_pooled,
+                           bench_json_tiles=args.json_tiles)))
     if args.suite in ("all", "landscape"):
         from benchmarks import bench_landscape
         suites.append(("landscape",

@@ -461,6 +461,36 @@ def _frame_widths(problem, bounds_batch, ref_width):
     return widths, _resolve_ref_width(problem, widths, ref_width)
 
 
+def observed_frame_ps(problem, bounds_batch, observed, *,
+                      quantize: bool = False,
+                      ref_width: Union[float, None] = None,
+                      tenant: Union[str, None] = None,
+                      ) -> Tuple[float, ...]:
+    """Per-frame planning P from an ``OccupancyEstimator``, no buckets.
+
+    The estimator-threading rule of the UNPLANNED batch path: exactly
+    the per-frame P ``plan_frames`` would assign (the measured EWMA
+    where the estimator holds an observation near the frame's zoom
+    depth, the workload's prior fallback otherwise), without building a
+    ``CapacityPlan``. ``solve_batch(..., observed=...)`` without
+    ``plan=`` feeds these straight into the engines -- ``frame_ps`` for
+    the pooled shared ring, ``max(...)`` as the uniform scan P -- the
+    same signals ``RenderService``'s feedback chunker derives, so the
+    batch path and the service path size from one rule.
+    """
+    wl = getattr(problem, "workload", None)
+    widths, ref_w = _frame_widths(problem, bounds_batch, ref_width)
+    r = problem.r
+    out = []
+    for w in widths:
+        d = zoom_depth(float(w), ref_width=ref_w, r=r)
+        p = (observed.predict_quantized(d, workload=wl, tenant=tenant)
+             if quantize
+             else observed.predict(d, workload=wl, tenant=tenant))
+        out.append(float(p))
+    return tuple(out)
+
+
 def plan_frames(problem, bounds_batch, *, observed=None,
                 num_buckets: int = 4,
                 safety_factor: float = 1.25,
@@ -881,9 +911,25 @@ def solve_pooled(problem, extras, *, plan: Union[CapacityPlan, None] = None,
                             else -(-len(failed) // n_dev))
             ran_frames = (len(idx) if mesh is None
                           else -(-len(idx) // n_dev))
-            tgt = pooled_lib.escalate_pooled_capacities(
-                caps_used, worst, shard_frames, failed,
-                dispatched_per_shard=ran_frames)
+            if caps_exp is None:
+                # First failure of the initial pool: size the retry ring
+                # from ONLY the overflowing frames' measured contribution
+                # instead of doubling the whole-batch pool.
+                bad = [j for j in range(len(idx))
+                       if st.frame_overflow[j] != 0]
+                tgt = pooled_lib.failed_pool_capacities(
+                    problem,
+                    [tuple(st.region_counts[j]) for j in bad],
+                    leaf_counts=[int(st.frame_leaf_counts[j]) for j in bad],
+                    frames_per_shard=shard_frames,
+                    frame_ps=[ps_all[i] for i in failed],
+                    caps_prev=caps_used,
+                    dispatched_per_shard=ran_frames,
+                    safety_factor=plan.safety_factor)
+            else:
+                tgt = pooled_lib.escalate_pooled_capacities(
+                    caps_used, worst, shard_frames, failed,
+                    dispatched_per_shard=ran_frames)
             for item in work:
                 if item[0] == tgt:
                     item[1].extend(failed)

@@ -63,9 +63,9 @@ from repro.core.ask import ASKStats, _frames_axis, _per_frame_counts
 from repro.core.cost_model import expected_level_counts, num_levels
 
 __all__ = ["PooledDispatch", "pooled_capacities",
-           "escalate_pooled_capacities", "run_ask_pooled",
-           "run_ask_pooled_batch", "run_ask_pooled_sharded",
-           "dispatch_ask_pooled_sharded"]
+           "escalate_pooled_capacities", "failed_pool_capacities",
+           "run_ask_pooled", "run_ask_pooled_batch",
+           "run_ask_pooled_sharded", "dispatch_ask_pooled_sharded"]
 
 
 def pooled_capacities(problem, frame_ps: Sequence[float], *,
@@ -124,6 +124,59 @@ def escalate_pooled_capacities(caps, worst, frames_per_shard: int,
             "capacities")
     hi = tuple(max(1, int(frames_per_shard)) * w for w in worst)
     return tuple(min(2 * c, h) for c, h in zip(caps, hi))
+
+
+def failed_pool_capacities(problem, entered, *, frames_per_shard: int,
+                           leaf_counts=None, frame_ps=None, caps_prev=None,
+                           dispatched_per_shard: int = None,
+                           safety_factor: float = 2.0) -> Tuple[int, ...]:
+    """First-retry ring sizing from ONLY the overflowing frames.
+
+    When a shared pool undersizes for one capacity class, re-pooling the
+    failed frames at the WHOLE previous pool's doubled capacities (the
+    blunt ``escalate_pooled_capacities`` step) allocates a retry ring
+    sized for frames that already fit. The per-frame attribution the
+    pooled pipeline keeps -- ``entered``: each failed frame's measured
+    per-level live counts (region_counts), ``leaf_counts``: each failed
+    frame's leaf rows (the ``levels`` index of the ladder), and optionally
+    ``frame_ps``: the failed frames' own planning Ps -- sizes the retry
+    ring from their contribution alone: per level, double the larger of
+    the failed frames' measured live rows (doubling covers the children
+    the drops truncated) and their own pooled estimate, clamped at the
+    retry pool's worst case ``frames_per_shard * (g r^l)^2``.
+
+    ``caps_prev`` keeps the blunt step's impossibility check: a pool
+    that already covered the worst case of the ``dispatched_per_shard``
+    frames it ran cannot legitimately overflow (a drop there is a bug,
+    not capacity pressure). Repeated failures fall back to doubling via
+    ``escalate_pooled_capacities``, so the retry loop still terminates.
+    """
+    n, g, r, B = problem.n, problem.g, problem.r, problem.B
+    levels = num_levels(n, g, r, B)
+    S = max(1, int(frames_per_shard))
+    worst = tuple((g * r ** lv) ** 2 for lv in range(levels + 1))
+    if caps_prev is not None:
+        ran = (S if dispatched_per_shard is None
+               else max(1, int(dispatched_per_shard)))
+        hi_ran = tuple(ran * w for w in worst)
+        if tuple(min(c, h) for c, h in zip(caps_prev, hi_ran)) == hi_ran:
+            raise RuntimeError(
+                "frames overflow at pooled worst-case capacities")
+    est = (pooled_capacities(problem, frame_ps,
+                             safety_factor=safety_factor)
+           if frame_ps else None)
+    caps = []
+    for lv in range(levels + 1):
+        if lv == levels:
+            meas = (sum(int(c) for c in leaf_counts)
+                    if leaf_counts is not None else 0)
+        else:
+            meas = sum(int(c[lv]) for c in entered if lv < len(c))
+        need = 2 * meas
+        if est is not None:
+            need = max(need, est[lv])
+        caps.append(max(1, min(need, S * worst[lv])))
+    return tuple(caps)
 
 
 def _resolve_pooled_capacities(problem, frames: int, capacities, frame_ps,

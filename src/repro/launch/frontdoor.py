@@ -212,10 +212,29 @@ class FrontDoorStats:
     retries: int = 0
     deadline_misses: int = 0  # served, but after the deadline
     batch_stats: List[Any] = dataclasses.field(default_factory=list)
+    # tile serving (launch.tiles): a TileService sitting in front of the
+    # door folds its cache accounting here via ``observe_tiles`` so one
+    # stats object describes the whole admission surface. Hits are
+    # requests that never became front-door traffic.
+    tile_hits: int = 0
+    tile_misses: int = 0
+    tile_bytes: int = 0  # bytes resident in the tile cache (gauge)
 
     @property
     def frames_per_batch(self) -> float:
         return self.frames_dispatched / self.batches if self.batches else 0.0
+
+    @property
+    def tile_hit_rate(self) -> float:
+        lookups = self.tile_hits + self.tile_misses
+        return self.tile_hits / lookups if lookups else 0.0
+
+    def observe_tiles(self, hits: int, misses: int, resident_bytes: int):
+        """Fold one tile-service response's cache accounting in
+        (``launch.tiles.TileService(stats_sink=...)`` calls this)."""
+        self.tile_hits += int(hits)
+        self.tile_misses += int(misses)
+        self.tile_bytes = int(resident_bytes)
 
 
 @dataclasses.dataclass

@@ -124,6 +124,12 @@ class ChunkStats:
     # of each frame of this chunk, in frame order; () for single-tenant
     # streams. ``tenant_frames()`` aggregates the attribution.
     tenants: tuple = ()
+    # tile serving (launch.tiles): how the viewport that produced this
+    # chunk split between the dwell cache and fresh rendering. The
+    # chunk's frames are the MISSES; hits never reach a dispatch.
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_bytes: int = 0  # bytes resident in the tile cache afterwards
 
     @property
     def busy_s(self) -> float:
@@ -669,16 +675,34 @@ class RenderService:
             canv = np.array(canv)  # writable copy for the row merges
             worst = worst_case_capacities(self._problems[key])
         ran = self._pad_width(f) // n_dev  # pool width of the last dispatch
+        first = True
         while pending:
             if self.engine == "ask_pooled":
-                from repro.core.pooled import escalate_pooled_capacities
+                from repro.core.pooled import (escalate_pooled_capacities,
+                                               failed_pool_capacities)
 
                 nxt = self._pad_width(len(pending)) // n_dev
-                cur = escalate_pooled_capacities(
-                    cur, worst, nxt, pending, dispatched_per_shard=ran)
+                if first and self.estimator is not None:
+                    # First retry: size the ring from ONLY the pending
+                    # frames' measured chains + their own estimated P,
+                    # not a doubling of the whole chunk's shared pool.
+                    prob = self._problems[key]
+                    ps = [float(self.estimator.predict_quantized(
+                              self._depth(key, bounds[j]),
+                              workload=prob.workload))
+                          for j in pending]
+                    cur = failed_pool_capacities(
+                        prob, [chains[j][0] for j in pending],
+                        leaf_counts=[chains[j][1] for j in pending],
+                        frames_per_shard=nxt, frame_ps=ps,
+                        caps_prev=cur, dispatched_per_shard=ran)
+                else:
+                    cur = escalate_pooled_capacities(
+                        cur, worst, nxt, pending, dispatched_per_shard=ran)
                 ran = nxt
             else:
                 cur = escalate_capacities(cur, worst, pending)
+            first = False
             d, _ = self._dispatch([bounds[j] for j in pending], caps=cur,
                                   key=key)
             rc, rst = d.finalize()
@@ -765,6 +789,17 @@ class RenderService:
     def n(self) -> int:
         """Shared canvas size of every problem this service serves."""
         return self._n
+
+    def problem_for(self, key: str = ""):
+        """The ``FrameProblem`` serving ``key`` ("" for a single-problem
+        service). The tile service's progressive path (``launch.tiles``)
+        dispatches split scans (``core.progressive``) against it
+        directly, bypassing the uniform chunker."""
+        key = str(key)
+        if key not in self._problems:
+            raise KeyError(
+                f"unknown problem {key!r}; serving {sorted(self._problems)}")
+        return self._problems[key]
 
     def dispatch_planned(self, bounds, *, key: str = "", tenants=(),
                          tenant_feedback: bool = False) -> PlannedDispatch:

@@ -20,7 +20,8 @@ from repro.kernels.policy import KernelPolicy
 from repro.workloads.frame_problem import (FrameProblem, MandelbrotProblem,
                                            dispatch_batch, exhaustive, solve,
                                            solve_batch)
-from repro.workloads.options import EngineOptions, FrontDoorOptions
+from repro.workloads.options import (EngineOptions, FrontDoorOptions,
+                                     TileOptions)
 from repro.workloads.registry import (available, escape_time_workloads,
                                       get_workload, julia, multibrot,
                                       register, ssd_synth)
@@ -29,6 +30,7 @@ from repro.workloads.spec import WorkloadSpec
 __all__ = [
     "EngineOptions",
     "FrontDoorOptions",
+    "TileOptions",
     "KernelPolicy",
     "WorkloadSpec",
     "register",

@@ -158,6 +158,33 @@ class FrameProblem:
             max_dwell=self.max_dwell, scheme=self.scheme, tile=self.tile,
             policy=self.policy, workload=self.workload)
 
+    def preview_step(self, state: jax.Array, coords: jax.Array,
+                     valid: jax.Array, *, level: int,
+                     bounds=None) -> jax.Array:
+        """Cheap coarse paint of the still-live set (``core.progressive``).
+
+        Every live region -- homogeneous or not -- is constant-filled
+        with its perimeter's common value: one border query per region,
+        NO per-pixel interior dwell (that is ``leaf_step``'s full-cost
+        job). The result is a full-coverage preview canvas; the scan
+        state itself is never painted with it, so the refinement half
+        stays bit-identical to the unsplit program.
+        """
+        bounds = self.bounds if bounds is None else bounds
+        side = self.region_side(level)
+        _, common = ops.perimeter_query(
+            coords, side=side, n=self.n, bounds=bounds,
+            max_dwell=self.max_dwell, policy=self.policy,
+            workload=self.workload)
+        # live rows are the ring's contiguous prefix; duplicate-pad the tail
+        cap = coords.shape[0]
+        count = jnp.sum(valid.astype(jnp.int32))
+        idx = jnp.where(jnp.arange(cap) < count, jnp.arange(cap), 0)
+        nonempty = (count > 0).astype(jnp.int32).reshape((1,))
+        return ops.region_fill(
+            state, coords[idx], common[idx], nonempty, side=side, n=self.n,
+            scheme=self.scheme, tile=self.tile, policy=self.policy)
+
     # -- dynamic-parameter protocol (batched frame serving) -----------------
     # ``extra`` is a traced [4] bounds array: one plane window per frame
     # in the vmapped ask_scan pipeline. The kernels route to the
@@ -170,6 +197,10 @@ class FrameProblem:
     def leaf_step_dyn(self, state, coords, valid, *, level: int, extra):
         return self.leaf_step(state, coords, valid, level=level,
                               bounds=extra)
+
+    def preview_step_dyn(self, state, coords, valid, *, level: int, extra):
+        return self.preview_step(state, coords, valid, level=level,
+                                 bounds=extra)
 
     # -- pooled protocol (cross-frame worklists, core.pooled) ---------------
     # ``rows`` is a frame-tagged [N, 3] = (frame, cy, cx) worklist pooled
@@ -371,8 +402,43 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, options=None,
     else:
         engine = "ask_scan"  # the legacy flat-kwarg path predates engines
     bounds_arr = _bounds_array(bounds_batch)
+    planned = plan is not None and plan is not False
+    # ``block_until_ready`` is an ENGINE kwarg: the planned paths block
+    # by construction (they read stats back to drive the retry loop), so
+    # it must not leak into plan_frames / plan_pooled through **kw
+    block = kw.pop("block_until_ready", None)
+    if not planned:
+        # observed= without plan=: thread the estimator into the engine
+        # sizing exactly as RenderService's feedback chunker does --
+        # per-frame P into the pooled shared ring, the hottest member's
+        # P into the uniform scan -- instead of crashing in the engine
+        # entry point (which takes no estimator)
+        observed = kw.pop("observed", None)
+        quantize = kw.pop("quantize", None)
+        if quantize and observed is None:
+            raise ValueError(
+                "quantize=True needs observed=: the p_quantum grid lives "
+                "on the OccupancyEstimator")
+        if observed is not None:
+            clash = {"capacities", "p_subdiv", "frame_ps"} & kw.keys()
+            if clash:
+                raise ValueError(
+                    f"{sorted(clash)} conflict with observed=: the "
+                    "estimator sizes the ring -- drop them or drop "
+                    "observed=")
+            from repro.core import planner as planner_lib
+            ps = planner_lib.observed_frame_ps(
+                problem, bounds_arr, observed, quantize=bool(quantize),
+                ref_width=kw.pop("ref_width", None),
+                tenant=kw.pop("tenant", None))
+            if engine == "ask_pooled":
+                kw["frame_ps"] = list(ps)
+            else:
+                kw["p_subdiv"] = max(ps)
+        if block is not None:
+            kw["block_until_ready"] = block
     if engine == "ask_pooled":
-        if plan is not None and plan is not False:
+        if planned:
             from repro.core import planner as planner_lib
             engine_only = ({"capacities", "p_subdiv", "pad_to",
                             "num_buckets"} & kw.keys())
@@ -396,7 +462,7 @@ def solve_batch(problem: FrameProblem, bounds_batch, *, options=None,
         if mesh is None:
             return run_ask_pooled_batch(problem, bounds_arr, **kw)
         return run_ask_pooled_sharded(problem, bounds_arr, mesh=mesh, **kw)
-    if plan is not None and plan is not False:
+    if planned:
         from repro.core import planner as planner_lib
         engine_only = {"capacities", "p_subdiv", "pad_to"} & kw.keys()
         if engine_only:

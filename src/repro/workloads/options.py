@@ -31,7 +31,7 @@ from typing import Any, Optional, Tuple, Union
 
 from repro.kernels.policy import KernelPolicy
 
-__all__ = ["EngineOptions", "FrontDoorOptions"]
+__all__ = ["EngineOptions", "FrontDoorOptions", "TileOptions"]
 
 _ENGINES = ("ask_scan", "ask_tuned", "ask_pooled")
 
@@ -196,3 +196,39 @@ class FrontDoorOptions:
         if not 0.0 < self.latency_alpha <= 1.0:
             raise ValueError(
                 f"latency_alpha must be in (0, 1], got {self.latency_alpha}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileOptions:
+    """Everything that shapes the tile service (``launch.tiles``).
+
+    * ``max_bytes`` bounds the dwell cache (LRU by byte accounting --
+      one entry costs its canvas ``nbytes``); 0 disables caching (every
+      tile is a miss, the service degenerates to batched rendering).
+    * ``depth_bias`` shifts the viewport -> tile-depth mapping: 0 picks
+      the deepest grid whose tiles are at least as wide as the viewport
+      (<= 4 tiles per square viewport), +1 halves tile width (finer
+      tiles, more sharing across overlapping pans, more frames per
+      request), -1 doubles it.
+    * ``schema`` is the address schema version: it is part of every
+      ``TileAddress``, so bumping it (``TileCache.invalidate`` does)
+      orphans every cached entry at once -- the invalidation hook for
+      "the renderer changed, addresses no longer mean the same bytes".
+    * ``progressive`` turns on split-scan serving (``core.progressive``):
+      misses yield a coarse preview canvas early, then refine to the
+      exact final canvas, with refinement of batch k overlapping the
+      coarse pass of batch k+1. ``checkpoint_level`` is the scan level
+      the preview is painted at (None: ``min(1, levels)``).
+    """
+
+    max_bytes: int = 64 << 20
+    depth_bias: int = 0
+    schema: int = 1
+    progressive: bool = False
+    checkpoint_level: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {self.max_bytes}")
+        if self.schema < 0:
+            raise ValueError(f"schema must be >= 0, got {self.schema}")

@@ -421,3 +421,96 @@ def test_frame_overflow_stats_plumbing():
     assert sum(st.frame_leaf_counts) == st.leaf_count
     _, st_ok = run_ask_scan_batch(prob, bounds, safety_factor=1e9)
     assert st_ok.frame_overflow == (0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# estimator threading through solve_batch (the batch-vs-service seam fix)
+# ---------------------------------------------------------------------------
+
+class TestBatchObservedThreading:
+    """``solve_batch(..., engine="ask_pooled", observed=...)`` must size
+    the pooled ring from the estimator exactly as ``RenderService``'s
+    feedback chunker does -- with and without ``plan=`` -- instead of
+    silently falling back to the prior (or crashing on kwargs the
+    engines do not take)."""
+
+    @staticmethod
+    def _scenario():
+        from repro.launch.render_service import zoom_bounds
+
+        prob = MandelbrotProblem(n=256, g=4, r=2, B=16, max_dwell=64)
+        bounds = np.asarray(
+            list(zoom_bounds(4, center=(-0.2, 0.0), width0=3.0 / 2 ** 6,
+                             zoom_per_frame=1.3)), np.float64)
+        return prob, bounds
+
+    @classmethod
+    def _warm_estimator(cls, prob, bounds):
+        from repro.core.feedback import OccupancyEstimator
+
+        _, st = run_ask_scan_batch(prob, bounds, p_subdiv=1.0)
+        widths, ref_w = planner._frame_widths(prob, bounds, None)
+        depths = [planner.zoom_depth(w, ref_width=ref_w, r=prob.r)
+                  for w in widths]
+        est = OccupancyEstimator()
+        est.observe_stats(depths, st, g=prob.g, r=prob.r,
+                          workload=prob.workload)
+        return est, np.asarray(st.frame_leaf_counts)
+
+    def test_planned_pooled_ring_shrinks_when_observed_is_warm(self):
+        from repro.workloads import EngineOptions, solve_batch
+
+        prob, bounds = self._scenario()
+        est, _ = self._warm_estimator(prob, bounds)
+        cold_states, cold = solve_batch(
+            prob, bounds, options=EngineOptions(
+                engine="ask_pooled", plan=True))
+        warm_states, warm = solve_batch(
+            prob, bounds, options=EngineOptions(
+                engine="ask_pooled", plan=True, observed=est))
+        assert warm.ring_rows < cold.ring_rows
+        assert warm.overflow_dropped == 0
+        assert warm.dispatches == 1  # the measured sizing FITS: no retry
+        assert np.array_equal(np.asarray(warm_states),
+                              np.asarray(cold_states))
+
+    def test_unplanned_observed_threads_into_both_engines(self):
+        from repro.workloads import EngineOptions, solve_batch
+
+        prob, bounds = self._scenario()
+        est, _ = self._warm_estimator(prob, bounds)
+        ref, _ = run_ask_scan_batch(prob, bounds, p_subdiv=1.0)
+        pooled_states, pst = solve_batch(
+            prob, bounds, options=EngineOptions(
+                engine="ask_pooled", observed=est))
+        assert np.array_equal(np.asarray(pooled_states), np.asarray(ref))
+        assert pst.overflow_dropped == 0
+        uniform = solve_batch(prob, bounds, options=EngineOptions(
+            engine="ask_pooled"))
+        assert max(pst.olt_caps) < max(uniform[1].olt_caps)
+        scan_states, sst = solve_batch(
+            prob, bounds, options=EngineOptions(observed=est))
+        assert np.array_equal(np.asarray(scan_states), np.asarray(ref))
+        assert sst.overflow_dropped == 0
+
+    def test_engine_kwargs_do_not_leak_into_planners(self):
+        from repro.workloads import EngineOptions, solve_batch
+
+        prob, bounds = self._scenario()
+        for engine in ("ask_scan", "ask_pooled"):
+            states, rep = solve_batch(
+                prob, bounds, options=EngineOptions(
+                    engine=engine, plan=True, block_until_ready=True))
+            assert rep.overflow_dropped == 0
+
+    def test_observed_conflicts_are_typed_errors(self):
+        from repro.workloads import EngineOptions, solve_batch
+        from repro.core.feedback import OccupancyEstimator
+
+        prob, bounds = self._scenario()
+        with pytest.raises(ValueError, match="observed"):
+            solve_batch(prob, bounds, options=EngineOptions(
+                engine="ask_pooled", observed=OccupancyEstimator(),
+                p_subdiv=0.5))
+        with pytest.raises(ValueError, match="quantize"):
+            solve_batch(prob, bounds, options=EngineOptions(quantize=True))

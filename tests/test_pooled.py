@@ -515,3 +515,75 @@ def test_pooled_cache_evicts_fifo():
     finally:
         pooled._POOLED_CACHE.clear()
         pooled._POOLED_CACHE.update(saved)
+
+
+# ---------------------------------------------------------------------------
+# failed-frame retry sizing (the re-pool-the-whole-chunk bugfix)
+# ---------------------------------------------------------------------------
+
+class TestFailedPoolRetry:
+    """A shared ring that undersizes for SOME frames must not be
+    escalated by doubling the whole chunk's pool: the retry ring is
+    sized from the overflowing frames' own measured contribution."""
+
+    @staticmethod
+    def _mixed_batch():
+        prob = MandelbrotProblem(n=256, g=4, r=2, B=16, max_dwell=64)
+
+        def win(cx, cy, w):
+            return (cx - w / 2, cy - w / 2, cx + w / 2, cy + w / 2)
+
+        dense = [win(-0.745, 0.11, 0.05), win(-0.16, 1.035, 0.04)]
+        sparse = [win(-0.2, 0.0, 0.02), win(-0.25, 0.0, 0.015)]
+        return prob, np.asarray(dense + sparse, dtype=np.float32)
+
+    def test_mixed_dense_sparse_retry_counts_dispatches(self):
+        """Level 0 sized for everyone, deeper levels for the sparse
+        frames only: exactly the dense frames retry, in ONE extra
+        dispatch, and the result is bit-identical with zero drops."""
+        import dataclasses as dc
+
+        from repro.core.planner import (plan_pooled, solve_pooled,
+                                        worst_case_capacities)
+
+        prob, bounds = self._mixed_batch()
+        base = plan_pooled(prob, bounds, safety_factor=1.0)
+        caps = (64, 40, 160)  # 64 = F * g**2: level 0 always fits
+        plan = dc.replace(base, buckets=(
+            dc.replace(base.buckets[0], capacities=caps),))
+        states, rep = solve_pooled(prob, bounds, plan=plan)
+        assert rep.retried_frames == (0, 1)  # the dense frames, ONLY
+        assert rep.dispatches == 2  # initial + one measured-size retry
+        assert rep.overflow_dropped == 0
+        ref, ref_st = run_ask_scan_batch(prob, bounds, p_subdiv=1.0)
+        assert np.array_equal(np.asarray(states), np.asarray(ref))
+        # the blunt whole-pool doubling would have undersized the leaf
+        # level for the dense frames' TRUE need and burned a THIRD
+        # dispatch; the measured sizing covered it in one
+        worst = worst_case_capacities(prob)
+        blunt = pooled.escalate_pooled_capacities(
+            caps, worst, 2, [0, 1], dispatched_per_shard=4)
+        true_leaf = ref_st.frame_leaf_counts[0] + ref_st.frame_leaf_counts[1]
+        assert blunt[-1] < true_leaf
+        retry_caps = rep.bucket_stats[1].olt_caps
+        assert retry_caps[-1] >= true_leaf
+
+    def test_failed_pool_capacities_sizes_from_failed_frames_only(self):
+        prob = MandelbrotProblem(n=256, g=4, r=2, B=16, max_dwell=64)
+        caps = pooled.failed_pool_capacities(
+            prob, [(16, 44), (16, 64)], leaf_counts=[148, 252],
+            frames_per_shard=2)
+        # 2x the measured contribution, clamped at the retry pool's own
+        # worst case -- independent of how big the failed pool was
+        worst = [(4 * 2 ** lv) ** 2 for lv in range(3)]
+        assert caps == tuple(min(2 * m, 2 * w) for m, w in
+                             zip((32, 108, 400), worst))
+
+    def test_failed_pool_capacities_impossibility_guard(self):
+        prob = MandelbrotProblem(n=64, g=4, r=2, B=8, max_dwell=16)
+        worst = [(4 * 2 ** lv) ** 2 for lv in range(2)]
+        full = tuple(2 * w for w in worst)  # covered 2 frames' worst case
+        with pytest.raises(RuntimeError, match="worst-case"):
+            pooled.failed_pool_capacities(
+                prob, [(16,), (16,)], leaf_counts=[1, 1],
+                frames_per_shard=2, caps_prev=full, dispatched_per_shard=2)

