@@ -612,6 +612,76 @@ def pooled_tier(writer, n=512, dwell=128, n_sparse=12, n_dense=4,
     return payload
 
 
+def pooled_tuned_tier(writer, n=256, dwell=64, frames=6, bench_json=None):
+    """The banded pooled Pallas tier (ISSUE 10): ask_pooled jnp vs tuned.
+
+    Renders a zoom ladder of ``frames`` windows per escape-time workload
+    through the pooled engine twice: once with the all-jnp policy and
+    once with ``EngineOptions(engine="ask_pooled", policy="tuned")`` --
+    the rung that now routes the banded ``region_fill_pooled`` /
+    ``region_dwell_pooled`` kernels and the blocked cross-frame
+    compaction through the autotune ladder instead of the pre-ISSUE-10
+    jnp pin. Bit-identity and zero overflow are hard gate invariants;
+    wall times and the tuned-vs-jnp speedup are soft (the tuned tier
+    must never lose more than the gate's collapse floor). With
+    ``bench_json`` the numbers are written as the machine-readable
+    ``BENCH_10.json`` that CI's ``compare_bench`` gate diffs (config
+    identical in smoke and full mode, like ``pooled_tier``).
+    """
+    from repro.workloads import EngineOptions, FrameProblem
+
+    payload = {"version": 1,
+               "config": {"n": n, "max_dwell": dwell, "g": 4, "r": 2,
+                          "B": 16, "frames": frames},
+               "workloads": {}}
+    opts_jnp = EngineOptions(engine="ask_pooled", plan=True)
+    opts_tuned = EngineOptions(engine="ask_pooled", plan=True,
+                               policy="tuned")
+    for wl in ("mandelbrot", "julia"):
+        prob = FrameProblem(n=n, g=4, r=2, B=16, max_dwell=dwell,
+                            backend="jnp", workload=wl)
+        case = f"wl={wl} n={n} f={frames}"
+        b = np.asarray(prob.bounds, np.float64)
+        c = (b[:2] + b[2:]) / 2.0
+        w0 = b[2] - b[0]
+        bounds = []
+        for k in range(frames):
+            w = w0 / (1.35 ** k)
+            bounds.append((c[0] - w / 2, c[1] - w / 2,
+                           c[0] + w / 2, c[1] + w / 2))
+
+        base_canv, base_rep = solve_batch(prob, bounds, options=opts_jnp)
+        tuned_canv, rep = solve_batch(prob, bounds, options=opts_tuned)
+        t_jnp = _best_time(
+            lambda: solve_batch(prob, bounds, options=opts_jnp), reps=2)
+        t_tuned = _best_time(
+            lambda: solve_batch(prob, bounds, options=opts_tuned), reps=2)
+        identical = int(np.array_equal(np.asarray(base_canv),
+                                       np.asarray(tuned_canv)))
+        speedup = t_jnp / t_tuned if t_tuned > 0 else 0.0
+        writer("ask_pooled_tuned_dispatches", case, rep.dispatches)
+        writer("ask_pooled_tuned_overflow", case, rep.overflow_dropped)
+        writer("ask_pooled_tuned_ring_rows", case, rep.ring_rows)
+        writer("ask_pooled_tuned_wall_ms_jnp", case, t_jnp * 1e3)
+        writer("ask_pooled_tuned_wall_ms_tuned", case, t_tuned * 1e3)
+        writer("ask_pooled_tuned_speedup", case, speedup)
+        writer("ask_pooled_tuned_identical", case, identical)
+        payload["workloads"][wl] = {
+            "identical": identical,
+            "overflow": int(rep.overflow_dropped),
+            "dispatches": int(rep.dispatches),
+            "ring_rows": int(rep.ring_rows),
+            "wall_ms_jnp": round(t_jnp * 1e3, 3),
+            "wall_ms_tuned": round(t_tuned * 1e3, 3),
+            "speedup": round(speedup, 4),
+        }
+    if bench_json:
+        with open(bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return payload
+
+
 def tile_service(writer, n=256, dwell=64, chunk=8, bench_json=None):
     """Content-addressed tile cache over the planned front door.
 
@@ -726,7 +796,7 @@ def tile_service(writer, n=256, dwell=64, chunk=8, bench_json=None):
 
 
 def run(writer, full=False, bench_json=None, bench_json_pooled=None,
-        bench_json_tiles=None):
+        bench_json_tiles=None, bench_json_pooled_tuned=None):
     if full:
         engines(writer, n=1024, g=4, r=2, B=32)
         batch_serving(writer, n=512, frames=16)
@@ -738,6 +808,7 @@ def run(writer, full=False, bench_json=None, bench_json_pooled=None,
         tuned_tier(writer, n=256, dwell=128, bench_json=bench_json)
         pooled_tier(writer, bench_json=bench_json_pooled)
         tile_service(writer, bench_json=bench_json_tiles)
+        pooled_tuned_tier(writer, bench_json=bench_json_pooled_tuned)
     else:  # CI smoke: small n, dp recursion stays cheap
         engines(writer, n=256, g=4, r=2, B=16)
         batch_serving(writer, n=128, frames=4)
@@ -750,3 +821,4 @@ def run(writer, full=False, bench_json=None, bench_json_pooled=None,
         pooled_tier(writer, bench_json=bench_json_pooled)
         # the tile config is kept identical to full mode (see pooled_tier)
         tile_service(writer, bench_json=bench_json_tiles)
+        pooled_tuned_tier(writer, bench_json=bench_json_pooled_tuned)

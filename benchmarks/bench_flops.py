@@ -1,0 +1,88 @@
+"""Machine-readable baseline for the analytic flops/bytes model.
+
+The seed shipped ``flops_model.py`` / ``roofline.py`` as stdout-only
+suites: numbers scrolled past in CI logs and silent model drift was
+invisible. This module folds them into the same ``compare_bench``
+discipline as the BENCH_N jsons: every (arch x shape) cell of the
+closed-form model is emitted as a workload row whose fields all carry
+the ``exact_`` prefix -- ``compare_bench`` treats those as HARD
+bit-equality invariants, because the model is a pure function of the
+checked-in configs. Any drift therefore fails the gate until the
+baseline is regenerated deliberately alongside the model change.
+
+Usage::
+
+  python -m benchmarks.bench_flops --json BENCH_FLOPS.json   # regenerate
+  python -m benchmarks.compare_bench BENCH_FLOPS.json fresh.json
+
+Flops/bytes are integral-valued analytic counts; they are stored as
+exact floats (json round-trips Python floats losslessly), and the
+derived ``useful_ratio`` is stored with full precision for the same
+reason.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k")
+
+
+def build_payload() -> dict:
+    from repro.configs.base import get_config, registry
+    from repro.configs.shapes import SHAPES
+    from benchmarks.flops_model import (forward_flops, hbm_bytes, hlo_flops,
+                                        model_flops)
+
+    payload = {"version": 1,
+               "config": {"shapes": list(SHAPE_NAMES), "microbatch": 1,
+                          "dtype_bytes": 2},
+               "workloads": {}}
+    for arch in sorted(registry()):
+        cfg = get_config(arch)
+        for shape in SHAPE_NAMES:
+            case = SHAPES[shape]
+            fwd = forward_flops(cfg, case)
+            hlo = hlo_flops(cfg, case)
+            mdl = model_flops(cfg, case)
+            payload["workloads"][f"{arch}/{shape}"] = {
+                "exact_forward_flops": fwd,
+                "exact_hlo_flops": hlo,
+                "exact_model_flops": mdl,
+                "exact_hbm_bytes": hbm_bytes(cfg, case),
+                "exact_useful_ratio": mdl / hlo if hlo else 0.0,
+            }
+    return payload
+
+
+def run(writer, bench_json=None) -> dict:
+    payload = build_payload()
+    for name, row in payload["workloads"].items():
+        writer("flops_model_hlo_flops", name, row["exact_hlo_flops"])
+        writer("flops_model_useful_ratio", name,
+               round(row["exact_useful_ratio"], 4))
+    if bench_json:
+        with open(bench_json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Emit the analytic flops-model baseline json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_FLOPS json baseline")
+    args = ap.parse_args(argv)
+
+    def writer(name, case, value):
+        print(f"{name},{case},{value}", flush=True)
+
+    print("name,case,value")
+    run(writer, bench_json=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

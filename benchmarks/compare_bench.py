@@ -11,10 +11,14 @@ regresses the baseline. Failures are split into two classes:
   (``overflow != 0``), a pooled ring no longer beating the per-frame
   plan (``below_planned != 1``), a tile cache no longer saving
   dispatches (``fewer_dispatches != 1``) or its hit rate falling below
-  the baseline's, dispatch counts growing, ring rows
-  growing. Each is checked only when the baseline row carries the field,
+  the baseline's, dispatch counts growing, ring rows growing, and any
+  baseline field named ``exact_*`` whose fresh value is not EXACTLY the
+  baseline's (the discipline used by the analytic flops/roofline
+  baseline ``BENCH_FLOPS.json``: those numbers are pure functions of
+  checked-in configs, so any drift is a model change, never noise).
+  Each is checked only when the baseline row carries the field,
   so one gate serves every BENCH schema (the tuned-tier BENCH_6, the
-  pooled BENCH_7, future suites).
+  pooled BENCH_7, the pooled-tuned BENCH_10, future suites).
 * SOFT failures -- wall-clock-derived checks that flake on noisy CI
   machines: the speedup may not collapse below ``--speedup-floor-frac``
   of the baseline's (floored at ``--min-speedup``), and no ``wall_ms_*``
@@ -73,6 +77,14 @@ def compare(baseline: dict, fresh: dict, *, wall_tol: float = 5.0,
             if field in b and f.get(field, 0) > b[field]:
                 hard.append(f"{name}: {field} grew {b[field]} -> "
                             f"{f.get(field)}")
+        # exact_* fields are deterministic analytic outputs (e.g. the
+        # flops-model baseline): the fresh run must reproduce them
+        # bit-for-bit -- any drift means the model changed, so the
+        # baseline must be regenerated deliberately, not papered over
+        for field in sorted(b):
+            if field.startswith("exact_") and f.get(field) != b[field]:
+                hard.append(f"{name}: {field} drifted {b[field]!r} -> "
+                            f"{f.get(field)!r}")
         # hit_rate is a hard FLOOR: the stream is deterministic, so the
         # cache answering fewer lookups is a real serving regression,
         # not noise (epsilon absorbs json round-tripping only)
@@ -127,6 +139,9 @@ def _print_table(fresh: dict) -> None:
                 cells.append(f"{field}={row[field]}")
         if "hit_rate" in row:
             cells.append(f"hit_rate={row['hit_rate']:.4f}")
+        n_exact = sum(1 for field in row if field.startswith("exact_"))
+        if n_exact:
+            cells.append(f"exact_fields={n_exact}")
         for field in sorted(row):
             if field.startswith("wall_ms_"):
                 cells.append(f"{field[8:]}={row[field]:.1f}ms")

@@ -15,6 +15,14 @@ compute_term / max(all terms) (1.0 == compute-bound at peak).
 
 Usage: python -m benchmarks.roofline [--dir experiments/dryrun]
                                      [--tag baseline] [--csv out.csv]
+                                     [--json out.json]
+
+``--json`` additionally writes the full analysis rows as a BENCH-schema
+json (workload key ``arch/shape/mesh``), so downstream tooling and the
+``compare_bench`` gate can diff roofline runs instead of scraping the
+printed CSV. The analytic flops-model side -- which needs no dry-run
+artifacts -- is gated separately via ``benchmarks.bench_flops`` and the
+checked-in ``BENCH_FLOPS.json`` (all-``exact_`` fields, hard equality).
 """
 
 from __future__ import annotations
@@ -110,6 +118,8 @@ def main(argv=None):
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--csv", default="experiments/roofline.csv")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the analysis rows as BENCH-schema json")
     args = ap.parse_args(argv)
 
     rows = []
@@ -136,6 +146,16 @@ def main(argv=None):
     out = "\n".join(lines)
     Path(args.csv).parent.mkdir(parents=True, exist_ok=True)
     Path(args.csv).write_text(out + "\n")
+    if args.json:
+        payload = {"version": 1,
+                   "config": {"dir": args.dir, "tag": args.tag},
+                   "workloads": {}}
+        for r in rows:
+            key = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+            payload["workloads"][key] = dict(r)
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(out)
     return 0
 

@@ -138,10 +138,16 @@ def batched_compact_ranks(flags: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return (inc - f).astype(jnp.int32), inc[-1].astype(jnp.int32)
 
 
-def compact_gather(values: jax.Array, flags: jax.Array, capacity: int) -> Tuple[jax.Array, jax.Array]:
+def compact_gather(values: jax.Array, flags: jax.Array, capacity: int,
+                   *, ranks_count=None) -> Tuple[jax.Array, jax.Array]:
     """Compact ``values[flags]`` into the first ``count`` rows of a
-    [capacity, ...] array (write-OLT form). Deterministic/stable order."""
-    ranks, count = compact_ranks(flags)
+    [capacity, ...] array (write-OLT form). Deterministic/stable order.
+    ``ranks_count`` optionally supplies a precomputed ``(ranks, count)``
+    pair (e.g. from the policy-routed ``kernels.ops.compact_ranks``) so
+    the scan is not recomputed -- every lowering of the exclusive scan is
+    exact integer math, so the result is identical either way."""
+    ranks, count = (compact_ranks(flags) if ranks_count is None
+                    else ranks_count)
     out_shape = (capacity,) + values.shape[1:]
     out = jnp.zeros(out_shape, dtype=values.dtype)
     idx = jnp.where(flags, ranks, capacity)  # dropped rows scatter off the end
@@ -174,7 +180,8 @@ def subdivide_olt(
 
 @functools.partial(jax.jit, static_argnames=("r", "capacity"))
 def subdivide_olt_tagged(
-    rows: jax.Array, flags: jax.Array, *, r: int, capacity: int
+    rows: jax.Array, flags: jax.Array, *, r: int, capacity: int,
+    ranks_count=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Frame-tagged OLT step for the POOLED cross-frame worklist.
 
@@ -186,9 +193,12 @@ def subdivide_olt_tagged(
     ``[k*r*r, (k+1)*r*r)``), so because the pooled worklist keeps frames
     in stable frame-major order, each frame's subsequence of children is
     exactly what its private ``subdivide_olt`` would have produced.
-    Returns (child_rows [capacity, 3], child_count).
+    Returns (child_rows [capacity, 3], child_count). ``ranks_count``
+    optionally supplies a precomputed ``(ranks, count)`` pair (see
+    ``compact_gather``).
     """
-    ranks, count = compact_ranks(flags)
+    ranks, count = (compact_ranks(flags) if ranks_count is None
+                    else ranks_count)
     R = r * r
     dy, dx = jnp.meshgrid(jnp.arange(r), jnp.arange(r), indexing="ij")
     offs = jnp.stack([jnp.zeros(R, jnp.int32), dy.ravel(), dx.ravel()],

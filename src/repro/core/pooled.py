@@ -61,6 +61,7 @@ import numpy as np
 from repro.core import olt as olt_lib
 from repro.core.ask import ASKStats, _frames_axis, _per_frame_counts
 from repro.core.cost_model import expected_level_counts, num_levels
+from repro.kernels import ops as ops_lib
 
 __all__ = ["PooledDispatch", "pooled_capacities",
            "escalate_pooled_capacities", "failed_pool_capacities",
@@ -218,6 +219,17 @@ def _build_pooled_pipeline(problem, caps: Sequence[int], frames: int):
     ring_width = max(caps)
     F = frames
     R = r * r
+    pol = getattr(problem, "policy", None)
+
+    def ranks_of(flags):
+        """Policy-routed exclusive-scan compaction. The pooled worklist
+        is F times the per-frame one, so above the single-block cap the
+        tuned tier's blocked schedule applies (ops.compact_ranks pads
+        ragged lengths); problems without a kernel policy keep the plain
+        jnp scan. Every lowering is exact integer math -> identical."""
+        if pol is None:
+            return olt_lib.compact_ranks(flags)
+        return ops_lib.compact_ranks(flags, policy=pol)
 
     def frame_sum(rows, weights):
         """Segment-sum ``weights`` by the rows' frame tags -> [F] int32.
@@ -237,8 +249,9 @@ def _build_pooled_pipeline(problem, caps: Sequence[int], frames: int):
         rows0 = jnp.concatenate(
             [frame_ids[:, None], jnp.tile(roots, (F, 1))], axis=1)
         flags0 = live[rows0[:, 0]]
-        ranks0, count0 = olt_lib.compact_ranks(flags0)
-        rows_c, _ = olt_lib.compact_gather(rows0, flags0, caps[0])
+        ranks0, count0 = ranks_of(flags0)
+        rows_c, _ = olt_lib.compact_gather(rows0, flags0, caps[0],
+                                           ranks_count=(ranks0, count0))
         root_drop = jnp.logical_and(flags0, ranks0 >= caps[0])
         frame_dropped = frame_sum(rows0, root_drop)
         count = jnp.minimum(count0, jnp.int32(caps[0]))
@@ -255,13 +268,14 @@ def _build_pooled_pipeline(problem, caps: Sequence[int], frames: int):
                 state, flags = problem.pooled_level_step(
                     state, rows, valid, level=lv, bounds_all=bounds_all)
                 flags = jnp.logical_and(flags, valid)
+                ranks, kcount = ranks_of(flags)
                 children, child_count = olt_lib.subdivide_olt_tagged(
-                    rows, flags, r=r, capacity=cap_out)
+                    rows, flags, r=r, capacity=cap_out,
+                    ranks_count=(ranks, kcount))
                 # per-frame drop attribution: the flagged parent at rank
                 # k owns slots [k*R, (k+1)*R), so insertion is contiguous
                 # from slot 0 and each parent's dropped-children count is
                 # exactly R - clip(cap_out - k*R, 0, R)
-                ranks, _ = olt_lib.compact_ranks(flags)
                 inserted = jnp.clip(cap_out - ranks * R, 0, R)
                 row_drops = jnp.where(flags, R - inserted, 0)
                 frame_dropped = frame_dropped + frame_sum(rows, row_drops)

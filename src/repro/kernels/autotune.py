@@ -69,7 +69,10 @@ CACHE_VERSION = 1
 # Kernels the harness knows how to time. `batched_ranks` and `region_fill`
 # are pure data movement with no candidate axis beyond impl, so they get
 # heuristic-only routing (still cacheable for forward compatibility).
-_TUNABLE = ("dwell", "perimeter_query", "region_dwell", "olt_compact")
+# The *_pooled pair are the banded cross-frame kernels: their signature
+# carries the frame count F, so one cache entry per (side, n, F) variant.
+_TUNABLE = ("dwell", "perimeter_query", "region_dwell", "olt_compact",
+            "region_fill_pooled", "region_dwell_pooled")
 
 
 # ---------------------------------------------------------------------------
@@ -243,13 +246,21 @@ def heuristic(kernel: str, *, workload=None, **sig: Any) -> Choice:
         if on_tpu:
             return Choice("pallas", (("block", (256, 256)), ("unroll", 4)))
         return Choice("jnp", (("unroll", 2),))
-    if kernel in ("perimeter_query", "region_dwell"):
+    if kernel in ("perimeter_query", "region_dwell", "region_dwell_pooled"):
         if on_tpu:
             return Choice("pallas", (("unroll", 4),))
         return Choice("jnp", (("unroll", 2),))
     if kernel == "olt_compact":
-        return Choice("pallas" if on_tpu else "jnp")
-    if kernel in ("region_fill", "batched_ranks"):
+        if not on_tpu:
+            return Choice("jnp")
+        # pooled cross-frame worklists overflow the single-VMEM-block cap
+        # (1 << 16, see olt_compact.py): give them the blocked schedule --
+        # ops.compact_ranks pads ragged N up to the block multiple
+        n = sig.get("n")
+        if n is not None and int(n) > (1 << 16):
+            return Choice("pallas", (("block", 4096),))
+        return Choice("pallas")
+    if kernel in ("region_fill", "region_fill_pooled", "batched_ranks"):
         return Choice("pallas" if on_tpu else "jnp")
     raise ValueError(f"unknown kernel {kernel!r}")
 
@@ -310,16 +321,24 @@ def _candidates(kernel: str, *, workload=None, tiny: bool = False,
             yield ("jnp", {"unroll": u})
             for blk in blocks:
                 yield ("pallas", {"block": blk, "unroll": u})
-    elif kernel in ("perimeter_query", "region_dwell"):
+    elif kernel in ("perimeter_query", "region_dwell",
+                    "region_dwell_pooled"):
         for u in unrolls:
             yield ("jnp", {"unroll": u})
             yield ("pallas", {"unroll": u})
+    elif kernel == "region_fill_pooled":
+        # pure data movement: impl is the only axis
+        yield ("jnp", {})
+        yield ("pallas", {})
     elif kernel == "olt_compact":
         n = int(sig["n"])
         yield ("jnp", {})
-        yield ("pallas", {})
+        if n <= 1 << 16:  # single-VMEM-block kernel cap (olt_compact.py)
+            yield ("pallas", {})
         for blk in (1024, 4096):
-            if n > blk and n % blk == 0:
+            # ragged n is fine: the runner (like ops.compact_ranks) pads
+            # flags to the block multiple and slices the ranks back
+            if n > blk:
                 yield ("pallas", {"block": blk})
     else:
         yield ("jnp", {})
@@ -413,17 +432,81 @@ def _build_runner(kernel: str, impl: str, params: Dict[str, Any], *,
                 (inc - flags).block_until_ready()
         elif "block" in params:
             from repro.kernels.olt_compact import compact_ranks_blocked
+            blk = int(params["block"])
+            # same padding ops.compact_ranks applies for ragged n, so the
+            # timing covers the schedule the route will actually run
+            pad = -n % blk
+            flags_b = flags if pad == 0 else jnp.concatenate(
+                [flags, jnp.zeros((pad,), flags.dtype)])
 
             def run():
                 r, c = compact_ranks_blocked(
-                    flags, block=int(params["block"]), interpret=interpret)
-                r.block_until_ready()
+                    flags_b, block=blk, interpret=interpret)
+                r[:n].block_until_ready()
         else:
             from repro.kernels.olt_compact import compact_ranks_kernel
 
             def run():
                 r, c = compact_ranks_kernel(flags, interpret=interpret)
                 r.block_until_ready()
+        return run
+
+    if kernel in ("region_fill_pooled", "region_dwell_pooled"):
+        side = int(sig["side"])
+        n = int(sig["n"])
+        F = int(sig["F"])
+        regions = n // side
+        rng = np.random.default_rng(0)
+        N = min(64, F * regions * regions)
+        rows = jnp.asarray(np.stack([
+            rng.integers(0, F, size=N),
+            rng.integers(0, regions, size=N),
+            rng.integers(0, regions, size=N)], axis=1), dtype=jnp.int32)
+        canvas = jnp.zeros((F * n, n), jnp.int32)
+        ne = jnp.ones((1,), jnp.int32)
+        base = tuple(workload.default_bounds) if workload is not None \
+            else ref.DEFAULT_BOUNDS
+        bounds_all = jnp.tile(
+            jnp.asarray(base, jnp.float32)[None, :], (F, 1))
+        from repro.kernels import ops
+        if kernel == "region_fill_pooled":
+            values = jnp.asarray(
+                rng.integers(0, 256, size=N), dtype=jnp.int32)
+            if impl == "jnp":
+                def run():
+                    ops._pooled_scatter(
+                        canvas, rows,
+                        jnp.broadcast_to(values[:, None, None],
+                                         (N, side, side)),
+                        ne, side=side, n=n).block_until_ready()
+            else:
+                from repro.kernels.region_fill_pooled import (
+                    region_fill_pooled)
+
+                def run():
+                    region_fill_pooled(
+                        canvas, rows, values, ne, side=side, n=n, F=F,
+                        interpret=interpret).block_until_ready()
+            return run
+        max_dwell = int(sig["max_dwell"])
+        u = params.get("unroll", 1)
+        if impl == "jnp":
+            def run():
+                tiles = ref.region_interior_dyn(
+                    rows[:, 1:], side=side, n=n,
+                    bounds=ops.pooled_bounds(bounds_all, rows),
+                    max_dwell=max_dwell, workload=workload, unroll=u)
+                ops._pooled_scatter(
+                    canvas, rows, tiles, ne,
+                    side=side, n=n).block_until_ready()
+        else:
+            from repro.kernels.region_dwell_pooled import region_dwell_pooled
+
+            def run():
+                region_dwell_pooled(
+                    canvas, rows, ne, bounds_all, side=side, n=n, F=F,
+                    max_dwell=max_dwell, interpret=interpret,
+                    workload=workload, unroll=u).block_until_ready()
         return run
 
     raise ValueError(f"no runner for kernel {kernel!r}")
@@ -453,14 +536,20 @@ def tune(kernel: str, *, workload=None, cache: Optional[TuningCache] = None,
 
 def tune_problem(problem, *, cache: Optional[TuningCache] = None,
                  reps: int = 3, tiny: bool = False,
-                 interpret: bool | None = None) -> TuningCache:
+                 interpret: bool | None = None,
+                 pooled_frames: int = 0) -> TuningCache:
     """Tune every kernel the ask pipeline dispatches for ``problem``.
 
     Walks the subdivision chain (sides n/g, n/(g*r), ... down to B) and the
     OLT ring capacities, covering: flat dwell at ``n``, perimeter query and
     region dwell at every level side, and OLT compaction at each ring
-    capacity (rounded to pow2). Returns the (possibly pre-seeded) cache
-    with the winners added.
+    capacity (rounded to pow2). When ``pooled_frames`` F > 0, the pooled
+    engine's banded kernels are swept too: ``region_fill_pooled`` at every
+    non-leaf side, ``region_dwell_pooled`` at the leaf side (signature
+    ``(side, n, F)``), and OLT compaction again at the F-scaled pooled
+    capacities (the cross-frame worklist is the per-frame one, F times
+    longer). Returns the (possibly pre-seeded) cache with the winners
+    added.
     """
     from repro.core.ask import scan_capacities
 
@@ -489,6 +578,18 @@ def tune_problem(problem, *, cache: Optional[TuningCache] = None,
     for cap in cap_sizes:
         tune("olt_compact", workload=wl, cache=cache, reps=reps, tiny=tiny,
              interpret=interpret, n=cap)
+    F = int(pooled_frames)
+    if F > 0:
+        for side in sides:
+            tune("region_fill_pooled", workload=wl, cache=cache, reps=reps,
+                 tiny=tiny, interpret=interpret, side=side, n=n, F=F)
+        leaf = sides[-1] if sides else problem.B
+        tune("region_dwell_pooled", workload=wl, cache=cache, reps=reps,
+             tiny=tiny, interpret=interpret, side=leaf, n=n, F=F,
+             max_dwell=max_dwell)
+        for cap in cap_sizes:
+            tune("olt_compact", workload=wl, cache=cache, reps=reps,
+                 tiny=tiny, interpret=interpret, n=F * cap)
     return cache
 
 
@@ -512,6 +613,9 @@ def main(argv=None) -> int:
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--tiny", action="store_true",
                     help="reduced candidate sweep (CI smoke)")
+    ap.add_argument("--pooled-frames", type=int, default=0,
+                    help="also sweep the banded pooled kernels for this "
+                         "many frames (0 = skip the pooled tier)")
     args = ap.parse_args(argv)
 
     from repro.workloads import FrameProblem
@@ -522,7 +626,8 @@ def main(argv=None) -> int:
         problem = FrameProblem(n=args.n, g=args.g, r=args.r, B=args.B,
                                max_dwell=args.max_dwell, backend="jnp",
                                workload=name)
-        tune_problem(problem, cache=cache, reps=args.reps, tiny=args.tiny)
+        tune_problem(problem, cache=cache, reps=args.reps, tiny=args.tiny,
+                     pooled_frames=args.pooled_frames)
         print(f"tuned {name}: {len(cache.entries)} entries total")
     cache.save(args.out)
     print(f"wrote {args.out} ({len(cache.entries)} entries, "

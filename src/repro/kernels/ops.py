@@ -37,7 +37,11 @@ from repro.kernels.perimeter_query import perimeter_query as _perimeter_pallas
 from repro.kernels.policy import (Backend, DEFAULT_POLICY, KernelPolicy,
                                   resolve_policy)
 from repro.kernels.region_dwell import region_dwell as _region_dwell_pallas
+from repro.kernels.region_dwell_pooled import (
+    region_dwell_pooled as _region_dwell_pooled_pallas)
 from repro.kernels.region_fill import region_fill as _region_fill_pallas
+from repro.kernels.region_fill_pooled import (
+    region_fill_pooled as _region_fill_pooled_pallas)
 
 _OLT_KERNEL_CAP = 1 << 16  # single-VMEM-block bound (see olt_compact.py)
 
@@ -122,7 +126,11 @@ def region_fill(canvas, coords, values, nonempty, *, side, n,
                 scheme="sbr", tile=256, backend=None, policy=None):
     """Terminal work T: constant-fill the (duplicate-padded) fill-OLT."""
     pol = resolve_policy(backend, policy)
-    impl, _ = _route(pol, "region_fill", side=side, n=n)
+    impl, params = _route(pol, "region_fill", side=side, n=n)
+    # tuned tile choices / policy.overrides must reach the lowering: the
+    # MBR block edge comes from the schedule params when present
+    tile = int(params.get("tile", tile))
+    scheme = params.get("scheme", scheme)
     if impl == "jnp":
         N = coords.shape[0]
         iy = jnp.arange(side)
@@ -195,18 +203,26 @@ def _pooled_scatter(canvas, rows, tiles, nonempty, *, side, n):
     return canvas.at[ys.ravel(), xs.ravel()].set(tiles.ravel(), mode="drop")
 
 
-def region_fill_pooled(canvas, rows, values, nonempty, *, side, n):
+def region_fill_pooled(canvas, rows, values, nonempty, *, side, n,
+                       backend=None, policy=None):
     """Pooled terminal work T: constant-fill frame-tagged regions.
 
     ``rows`` [N, 3] = (frame, cy, cx), duplicate-padded like the
     per-frame fill-OLT. The fill value is external (no plane math), so
-    the frame tag simply folds into the scatter row offset. The jnp
-    scatter is the only lowering: the Pallas fill kernel assumes a
-    square canvas, and this matches the traced-bounds batched path's
-    lowering anyway (same writes, same int32 values)."""
-    return _pooled_scatter(canvas, rows, jnp.broadcast_to(
-        values[:, None, None], (rows.shape[0], side, side)),
-        nonempty, side=side, n=n)
+    the frame tag simply folds into the scatter row offset (jnp) or the
+    banded BlockSpec row-block index (Pallas,
+    ``kernels.region_fill_pooled``). Both lowerings produce the same
+    int32 writes, so the choice is pure schedule."""
+    pol = resolve_policy(backend, policy)
+    F = canvas.shape[0] // n
+    impl, _ = _route(pol, "region_fill_pooled", side=side, n=n, F=F)
+    if impl == "jnp":
+        return _pooled_scatter(canvas, rows, jnp.broadcast_to(
+            values[:, None, None], (rows.shape[0], side, side)),
+            nonempty, side=side, n=n)
+    return _region_fill_pooled_pallas(
+        canvas, rows, values, nonempty, side=side, n=n, F=F,
+        interpret=pol.resolve_interpret())
 
 
 def region_dwell_pooled(canvas, rows, nonempty, *, side, n, bounds_all,
@@ -214,18 +230,27 @@ def region_dwell_pooled(canvas, rows, nonempty, *, side, n, bounds_all,
                         workload=None):
     """Pooled last-level work A: interior values of frame-tagged leaves.
 
-    Each row's interior is evaluated in its own frame's window via
-    ``pooled_bounds`` (the dyn oracle broadcasts the [4, N, 1, 1] bounds
-    against its per-row planes); the tuned tier still contributes its
-    unroll schedule through the normal route."""
+    Each row's interior is evaluated in its own frame's window: the jnp
+    lowering broadcasts ``pooled_bounds``'s [4, N, 1, 1] components
+    against the per-row planes; the Pallas lowering
+    (``kernels.region_dwell_pooled``) stages the [F, 4] windows through
+    scalar prefetch and lands each tile in its frame band directly --
+    bit-identical per pixel, so the tuned tier picks freely."""
     pol = resolve_policy(backend, policy)
-    _, params = _route(pol, "region_dwell", workload=workload,
-                       side=side, n=n, max_dwell=max_dwell)
+    F = canvas.shape[0] // n
+    impl, params = _route(pol, "region_dwell_pooled", workload=workload,
+                          side=side, n=n, F=F, max_dwell=max_dwell)
     unroll = int(params.get("unroll", 1))
-    tiles = ref.region_interior_dyn(
-        rows[:, 1:], side=side, n=n, bounds=pooled_bounds(bounds_all, rows),
-        max_dwell=max_dwell, workload=workload, unroll=unroll)
-    return _pooled_scatter(canvas, rows, tiles, nonempty, side=side, n=n)
+    if impl == "jnp":
+        tiles = ref.region_interior_dyn(
+            rows[:, 1:], side=side, n=n,
+            bounds=pooled_bounds(bounds_all, rows),
+            max_dwell=max_dwell, workload=workload, unroll=unroll)
+        return _pooled_scatter(canvas, rows, tiles, nonempty, side=side, n=n)
+    return _region_dwell_pooled_pallas(
+        canvas, rows, nonempty, bounds_all, side=side, n=n, F=F,
+        max_dwell=max_dwell, interpret=pol.resolve_interpret(),
+        workload=workload, unroll=unroll)
 
 
 def compact_ranks(flags, *, backend=None, policy=None):
@@ -238,12 +263,19 @@ def compact_ranks(flags, *, backend=None, policy=None):
         ranks, count = ref.compact_ranks_ref(flags)
         return ranks, count
     block = params.get("block")
-    if block is not None and N > int(block) and N % int(block) == 0:
+    if block is not None and N > int(block):
+        # ragged N: zero-pad flags to the block multiple (padding inserts
+        # nothing, so the first N exclusive ranks and the grand total are
+        # unchanged) and slice the ranks back
+        blk = int(block)
+        pad = -N % blk
+        flags_b = flags if pad == 0 else jnp.concatenate(
+            [flags, jnp.zeros((pad,), flags.dtype)])
         ranks, count = compact_ranks_blocked(
-            flags, block=int(block), interpret=pol.resolve_interpret())
-        return ranks, count[0]
+            flags_b, block=blk, interpret=pol.resolve_interpret())
+        return ranks[:N], count[0]
     if N > _OLT_KERNEL_CAP:
-        # too large for one VMEM block and no valid blocked schedule:
+        # too large for one VMEM block and no blocked schedule chosen:
         # XLA's own tiled cumsum is the safe lowering
         ranks, count = ref.compact_ranks_ref(flags)
         return ranks, count

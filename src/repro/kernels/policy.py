@@ -47,6 +47,7 @@ __all__ = ["Backend", "KernelPolicy", "resolve_policy", "default_interpret",
 
 # the kernels a policy can carry overrides for (ops.py entry points)
 KERNEL_NAMES = ("dwell", "perimeter_query", "region_fill", "region_dwell",
+                "region_fill_pooled", "region_dwell_pooled",
                 "olt_compact", "batched_ranks")
 
 

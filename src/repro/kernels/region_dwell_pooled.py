@@ -1,0 +1,112 @@
+"""Pooled last-level work kernel A over the banded cross-frame canvas.
+
+Companion to ``region_fill_pooled``: the leaf rows of the pooled worklist
+carry a frame tag, and each frame renders a DIFFERENT complex-plane window
+(``bounds_all [F, 4]``). The square ``region_dwell`` kernel bakes its
+bounds in as a static tuple, which is exactly why the pooled path was
+pinned to the jnp lowering -- here the per-frame windows are staged
+through scalar prefetch instead: four ``[F]`` f32 component vectors sit in
+SMEM, the kernel body picks row ``i``'s window with one scalar gather per
+component (``re0_ref[f_ref[i]]`` ...), and the dwell tile is computed in
+VMEM with the identical elementwise f32 op order as the
+``pooled_bounds``-broadcast jnp oracle -- so the lowering stays
+bit-identical per pixel.
+
+Block placement folds the frame tag into the row-block index
+(``f * (n // side) + cy``) exactly as in ``region_fill_pooled``; the same
+duplicate-padding / ``nonempty`` contract applies. SBR only -- leaf
+regions are the smallest in the hierarchy (side = B at the stop level).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import policy as policy_lib
+from repro.kernels.ref import dwell_compute, map_coords
+
+
+def _make_kernel(side, n, max_dwell, workload, unroll):
+    """Close the static schedule over the kernel body. The per-frame
+    plane windows arrive as four [F] f32 SMEM vectors (scalar prefetch):
+    one scalar gather per component selects row i's window, then the tile
+    math follows ``region_interior_dyn``'s op order exactly -- the band
+    offset lives only in the BlockSpec placement, the plane math sees
+    frame-local pixel coordinates."""
+    def kernel(f_ref, cy_ref, cx_ref, re0_ref, im0_ref, re1_ref, im1_ref,
+               nonempty_ref, canvas_ref, out_ref):
+        i = pl.program_id(0)
+        f = f_ref[i]
+        bounds = (re0_ref[f], im0_ref[f], re1_ref[f], im1_ref[f])
+        y0 = (cy_ref[i] * side).astype(jnp.float32)
+        x0 = (cx_ref[i] * side).astype(jnp.float32)
+        ys = y0 + jax.lax.broadcasted_iota(jnp.float32, (side, side), 0)
+        xs = x0 + jax.lax.broadcasted_iota(jnp.float32, (side, side), 1)
+        cr, ci = map_coords(xs, ys, n, bounds)
+        dw = dwell_compute(cr, ci, max_dwell, workload=workload,
+                           unroll=unroll)
+        out_ref[...] = jnp.where(nonempty_ref[0] > 0, dw, canvas_ref[...])
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "side", "n", "F", "max_dwell", "interpret", "workload", "unroll"))
+def region_dwell_pooled(
+    canvas: jax.Array,
+    rows: jax.Array,
+    nonempty: jax.Array,
+    bounds_all: jax.Array,
+    *,
+    side: int,
+    n: int,
+    F: int,
+    max_dwell: int = 512,
+    interpret: bool | None = None,
+    workload=None,
+    unroll: int = 1,
+) -> jax.Array:
+    """rows: [N, 3] frame-tagged pooled leaf-OLT (duplicate-padded);
+    bounds_all: [F, 4] per-frame plane windows; canvas: [F*n, n] banded.
+    Returns the updated banded canvas. ``unroll`` groups the escape loop
+    (bit-identical, autotune candidate axis)."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
+    if n % side:
+        raise ValueError(f"n={n} not divisible by side={side}")
+    if canvas.shape != (F * n, n):
+        raise ValueError(
+            f"canvas {canvas.shape} is not the banded [F*n, n] = "
+            f"[{F * n}, {n}] layout")
+    if bounds_all.shape != (F, 4):
+        raise ValueError(f"bounds_all {bounds_all.shape} != [F={F}, 4]")
+    N = rows.shape[0]
+    bpf = n // side
+    f = rows[:, 0].astype(jnp.int32)
+    cy = rows[:, 1].astype(jnp.int32)
+    cx = rows[:, 2].astype(jnp.int32)
+    b = bounds_all.astype(jnp.float32)
+    re0, im0, re1, im1 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]
+    nonempty = nonempty.astype(jnp.int32).reshape((1,))
+
+    spec = pl.BlockSpec(
+        (side, side),
+        lambda i, f, cy, cx, r0, i0, r1, i1, ne: (f[i] * bpf + cy[i], cx[i]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=8,
+        grid=(N,),
+        in_specs=[spec],
+        out_specs=spec,
+    )
+    kernel = _make_kernel(side, n, max_dwell, workload, unroll)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((F * n, n), jnp.int32),
+        input_output_aliases={8: 0},  # canvas (after the 8 scalar operands)
+        interpret=interpret,
+    )(f, cy, cx, re0, im0, re1, im1, nonempty, canvas)

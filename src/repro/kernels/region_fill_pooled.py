@@ -1,0 +1,91 @@
+"""Pooled terminal-work kernel T over the banded cross-frame canvas.
+
+The pooled engine (``core/pooled.py``) concatenates every frame's fill-OLT
+into one frame-tagged worklist ``rows [N, 3] = (frame, cy, cx)`` and renders
+the whole batch onto a tall ``[F*n, n]`` canvas where frame ``f`` owns the
+disjoint row band ``[f*n, (f+1)*n)``. This kernel is the Pallas lowering of
+that scatter: the frame tag folds straight into the BlockSpec row-block
+index (``f * (n // side) + cy``), so one grid step per worklist row lands
+its ``side x side`` block inside its own frame's band -- no gather, no
+per-frame dispatch, exactly the consolidated launch the paper's pooled
+model argues for.
+
+Same padding contract as ``region_fill``: rows beyond the live count MUST
+duplicate a live row (idempotent rewrite -- Pallas re-fetches revisited
+output blocks from HBM, so a masked write-back could otherwise resurrect
+stale data), and ``nonempty = 0`` suppresses all writes when the pooled
+OLT is empty.
+
+SBR only: pooled region sides never exceed ``n // g`` (the level-0 region
+size), which sits far below any MBR-worthy tile, so the multi-block
+scheme of the square kernel is deliberately not replicated here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import policy as policy_lib
+
+
+def _kernel(f_ref, cy_ref, cx_ref, val_ref, nonempty_ref, canvas_ref,
+            out_ref):
+    del f_ref, cy_ref, cx_ref  # consumed by the index_map, not the body
+    i = pl.program_id(0)
+    cur = canvas_ref[...]
+    fill = jnp.full_like(cur, val_ref[i])
+    out_ref[...] = jnp.where(nonempty_ref[0] > 0, fill, cur)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("side", "n", "F", "interpret"))
+def region_fill_pooled(
+    canvas: jax.Array,
+    rows: jax.Array,
+    values: jax.Array,
+    nonempty: jax.Array,
+    *,
+    side: int,
+    n: int,
+    F: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """rows: [N, 3] frame-tagged pooled fill-OLT (duplicate-padded);
+    values: [N] int32; nonempty: [1] int32 (0 => no live rows); canvas:
+    [F*n, n] banded. Returns the updated banded canvas."""
+    if interpret is None:
+        interpret = policy_lib.default_interpret()
+    if n % side:
+        raise ValueError(f"n={n} not divisible by side={side}")
+    if canvas.shape != (F * n, n):
+        raise ValueError(
+            f"canvas {canvas.shape} is not the banded [F*n, n] = "
+            f"[{F * n}, {n}] layout")
+    N = rows.shape[0]
+    bpf = n // side  # row blocks per frame band
+    f = rows[:, 0].astype(jnp.int32)
+    cy = rows[:, 1].astype(jnp.int32)
+    cx = rows[:, 2].astype(jnp.int32)
+    nonempty = nonempty.astype(jnp.int32).reshape((1,))
+
+    spec = pl.BlockSpec(
+        (side, side),
+        lambda i, f, cy, cx, v, ne: (f[i] * bpf + cy[i], cx[i]))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(N,),
+        in_specs=[spec],
+        out_specs=spec,
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((F * n, n), jnp.int32),
+        input_output_aliases={5: 0},  # canvas (after the 5 scalar operands)
+        interpret=interpret,
+    )(f, cy, cx, values.astype(jnp.int32), nonempty, canvas)

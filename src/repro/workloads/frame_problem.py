@@ -229,7 +229,8 @@ class FrameProblem:
         idx = jnp.where(live, idx, idx[0])
         nonempty = (count > 0).astype(jnp.int32).reshape((1,))
         state = ops.region_fill_pooled(
-            state, rows[idx], common[idx], nonempty, side=side, n=self.n)
+            state, rows[idx], common[idx], nonempty, side=side, n=self.n,
+            policy=self.policy)
 
         subdivide = jnp.logical_and(valid, jnp.logical_not(homog))
         return state, subdivide

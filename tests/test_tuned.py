@@ -234,6 +234,52 @@ def test_blocked_olt_compact_matches_oracle():
         compact_ranks_blocked(jnp.zeros(100, jnp.int32), block=48)
 
 
+def test_compact_ranks_blocked_route_pads_ragged_n():
+    """ops.compact_ranks must serve ragged N through the blocked kernel
+    by zero-padding to the block multiple (the raw kernel stays strict):
+    oracle equality at N = block*k and block*k +/- 1."""
+    block = 64
+    pol = KernelPolicy(backend="pallas", interpret=True,
+                       overrides={"olt_compact": {"block": block}})
+    rng = np.random.default_rng(11)
+    for n in (block * 3 - 1, block * 3, block * 3 + 1):
+        flags = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+        ranks, count = ops.compact_ranks(flags, policy=pol)
+        want_r, want_c = ref.compact_ranks_ref(flags)
+        assert ranks.shape == (n,)
+        np.testing.assert_array_equal(np.asarray(ranks), np.asarray(want_r))
+        assert int(count) == int(want_c)
+
+
+def test_region_fill_override_reaches_lowering(monkeypatch):
+    """Regression (ISSUE 10 satellite): region_fill used to DROP _route's
+    schedule params -- a policy override (or tuned tile choice) must
+    change the lowered Pallas call."""
+    seen = {}
+    real = ops._region_fill_pallas
+
+    def spy(*args, **kwargs):
+        seen.update(kwargs)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "_region_fill_pallas", spy)
+    n, side = 64, 32
+    canvas = jnp.zeros((n, n), jnp.int32)
+    coords = jnp.zeros((4, 2), jnp.int32)
+    values = jnp.ones((4,), jnp.int32)
+    ne = jnp.ones((1,), jnp.int32)
+    pol = KernelPolicy(
+        backend="pallas", interpret=True,
+        overrides={"region_fill": {"scheme": "mbr", "tile": 16}})
+    ops.region_fill(canvas, coords, values, ne, side=side, n=n, policy=pol)
+    assert seen["tile"] == 16 and seen["scheme"] == "mbr"
+    # and the tuned rung's cached tile flows the same way
+    seen.clear()
+    ops.region_fill(canvas, coords, values, ne, side=side, n=n,
+                    policy=KernelPolicy(backend="pallas", interpret=True))
+    assert seen["tile"] == 256 and seen["scheme"] == "sbr"  # defaults kept
+
+
 # ---------------------------------------------------------------------------
 # ask_tuned engine: bit-identity across the registry
 
